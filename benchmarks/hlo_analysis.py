@@ -1,0 +1,303 @@
+"""Static analyzer for post-SPMD HLO text: FLOPs, collective bytes, dot
+traffic — *while-loop aware*.
+
+``compiled.cost_analysis()`` counts a while body ONCE, but every layer scan
+(and remat backward) is a while loop, so its numbers undercount by ~L x.
+This parser rebuilds per-computation costs and multiplies while bodies by
+their trip counts (recovered from the canonical induction-variable compare
+constant in the condition computation).
+
+Used by benchmarks/roofline.py; validated in tests/test_hlo_analysis.py
+against programs with known FLOP counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_instr_line(line: str):
+    """Robust instruction parse: handles tuple types containing spaces,
+    '=' inside /*index=N*/ comments, and nested parens."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(line):
+        return None
+    if line[i] == "(":  # tuple type: scan balanced parens
+        depth = 0
+        j = i
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        k = j + 1
+    else:
+        j = line.find(" ", i)
+        if j < 0:
+            return None
+        type_str = line[i:j]
+        k = j
+    mo = _OPCODE_RE.match(line, k)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1), line[mo.end():]
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_bytes: float = 0.0        # every dot operand charged per execution
+    dot_bytes_once: float = 0.0   # while bodies charged once ("read-once"
+    #                               HBM model: streamed stacked weights =
+    #                               whole array once per loop; VMEM-resident
+    #                               flash tiles not re-charged per kv block)
+
+    def add(self, other: "Cost", mult: float = 1.0, bytes_mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.dot_bytes_once += other.dot_bytes_once * bytes_mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def parse_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            name, type_str, opcode, rest = parsed
+            comps[cur].append(Instr(name=name, type_str=type_str,
+                                    opcode=opcode, rest=rest))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: Dict[str, str]) -> Tuple[float, float]:
+    """(flops, hbm_bytes) for a dot. flops = 2 * prod(result) * K."""
+    out_dims = shape_dims(instr.type_str) or []
+    out_elems = math.prod(out_dims) if out_dims else 1
+    # contraction size from lhs shape + lhs_contracting_dims
+    ops = _OPERAND_RE.findall(instr.rest)
+    lhs_type = symtab.get(ops[0], "") if ops else ""
+    lhs_dims = shape_dims(lhs_type) or []
+    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    k = 1
+    if mcd and lhs_dims:
+        for d in mcd.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+    flops = 2.0 * out_elems * k
+    bytes_ = shape_bytes(instr.type_str)
+    for o in ops[:2]:
+        bytes_ += shape_bytes(symtab.get(o, ""))
+    return flops, bytes_
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LEAD_INT_RE = re.compile(r"^(\d+)\)")
+
+
+def _trip_count(while_rest: str, cond_instrs: List[Instr]) -> int:
+    """Prefer XLA's known_trip_count backend_config; fall back to the
+    compare constant in the canonical condition computation."""
+    m = _TRIP_RE.search(while_rest)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            mi = _LEAD_INT_RE.match(ins.rest.strip())
+            if mi:
+                best = max(best, int(mi.group(1)))
+    return best
+
+
+class HloCostModel:
+    """XLA:CPU legalizes bf16 compute to f32, so collectives that are bf16
+    at the jaxpr level (verified: MoE all_to_all, residual psums) appear as
+    f32 in the dry-run HLO. When a collective operand is produced by a
+    fusion that converts from bf16 (or feeds one), we charge bf16 bytes —
+    matching what the TPU backend would move (bf16_correction)."""
+
+    def __init__(self, text: str, bf16_correction: bool = True):
+        self.bf16_correction = bf16_correction
+        self.comps = parse_computations(text)
+        self._memo: Dict[str, Cost] = {}
+        # entry = computation containing ROOT with name matching ENTRY; take
+        # the one named like 'main' or the last parsed with 'ENTRY'
+        self.entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_RE.match(line)
+                if m:
+                    self.entry = m.group(1)
+        if self.entry is None:  # fall back: biggest computation
+            self.entry = max(self.comps, key=lambda c: len(self.comps[c]))
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        total = Cost()
+        instrs = self.comps.get(comp, [])
+        symtab = {i.name: i.type_str for i in instrs}
+        for ins in instrs:
+            if ins.opcode == "dot":
+                f, b = _dot_flops(ins, symtab)
+                total.flops += f
+                total.dot_bytes += b
+                total.dot_bytes_once += b
+            elif ins.opcode.rstrip("-start").rstrip("-done") in COLLECTIVES \
+                    or ins.opcode in COLLECTIVES:
+                base = ins.opcode.replace("-start", "").replace("-done", "")
+                if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                    ops = _OPERAND_RE.findall(ins.rest)
+                    defs = {i.name: i for i in instrs}
+                    b = 0
+                    for o in ops:
+                        if o in symtab:
+                            ob = shape_bytes(symtab[o])
+                            # XLA:CPU legalizes bf16->f32; all large
+                            # collectives in this framework are logically
+                            # bf16 (grads, activations, dispatch, FSDP
+                            # gathers — verified at jaxpr level), so charge
+                            # bf16 for big f32 ops / proven-bf16 producers.
+                            if self.bf16_correction and "f32" in symtab[o] \
+                                    and (ob > 64 * 1024 * 1024 or
+                                         self._is_legalized_bf16(defs.get(o))):
+                                ob //= 2
+                            b += ob
+                    if b == 0:  # operands may be parameters; use result
+                        b = shape_bytes(ins.type_str)
+                    total.coll_bytes[base] = total.coll_bytes.get(base, 0) + b
+            elif ins.opcode == "while":
+                mb = _BODY_RE.search(ins.rest)
+                mc = _COND_RE.search(ins.rest)
+                cond_instrs = self.comps.get(mc.group(1), []) if mc else []
+                trips = _trip_count(ins.rest, cond_instrs)
+                if mb and mb.group(1) in self.comps:
+                    total.add(self.cost_of(mb.group(1)), mult=max(trips, 1),
+                              bytes_mult=1.0)
+            elif ins.opcode in ("fusion", "call", "conditional",
+                                "async-start", "custom-call", "map",
+                                "reduce", "sort", "scatter", "select-and-scatter"):
+                for m in _CALLS_RE.finditer(ins.rest):
+                    if m.group(1) in self.comps:
+                        total.add(self.cost_of(m.group(1)))
+                # fused computations referenced via calls= handled above;
+                # custom-call matmuls (oneDNN) estimated from shapes
+                if ins.opcode == "custom-call" and "matmul" in ins.rest.lower():
+                    out_dims = shape_dims(ins.type_str) or []
+                    ops = _OPERAND_RE.findall(ins.rest)
+                    lhs_dims = shape_dims(symtab.get(ops[0], "")) if ops \
+                        else None
+                    if out_dims and lhs_dims:
+                        k = lhs_dims[-1]
+                        total.flops += 2.0 * math.prod(out_dims) * k
+        self._memo[comp] = total
+        return total
+
+    def _is_legalized_bf16(self, d: Optional[Instr]) -> bool:
+        """Producer is a fusion/convert whose computation round-trips
+        through bf16 -> the value is logically bf16."""
+        if d is None:
+            return False
+        if d.opcode == "convert":
+            return True
+        if d.opcode == "fusion":
+            for m in _CALLS_RE.finditer(d.rest):
+                for ins in self.comps.get(m.group(1), []):
+                    if ins.opcode == "convert" and "bf16" in ins.type_str:
+                        return True
+                    if ins.opcode == "convert" and "bf16" in ins.rest:
+                        return True
+        return False
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(text: str) -> Dict[str, float]:
+    model = HloCostModel(text)
+    c = model.entry_cost()
+    out = {"flops": c.flops, "dot_bytes": c.dot_bytes,
+           "dot_bytes_once": c.dot_bytes_once,
+           "collective_bytes": c.total_coll_bytes}
+    for k, v in c.coll_bytes.items():
+        out[f"coll_{k}"] = v
+    return out

@@ -1,0 +1,65 @@
+"""First-principles TPU-v5e projections for the paper's headline numbers.
+
+The paper's accelerator is bandwidth-bound at 2 GB/s flash (10.35M docs/s,
+~240 B/doc in the Fig. 8 stream format). Our "storage" is pod HBM: the same
+roofline algebra at 819 GB/s/chip x 256 chips, with the match-matrix
+kernel's arithmetic intensity deciding when the L-query batching (paper
+Table 2) flips the bound from memory to compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+CHIPS_PER_POD = 256
+ASSUMED_CHIP_WATTS = 200.0     # assumption, recorded in EXPERIMENTS.md
+PAPER_DOCS_PER_SEC = 10.35e6   # Table 2 row 1
+PAPER_OPT_DOCS_PER_SEC = 27e6  # Table 2 row 2 (estimated in paper)
+PAPER_WATTS = 120.0            # Table 1, BlueDBM column
+PAPER_PP_PER_SEC = 13e6        # Sec V.C
+
+
+@dataclasses.dataclass
+class Projection:
+    name: str
+    docs_per_sec_chip: float
+    docs_per_sec_pod: float
+    bound: str
+    flops_per_doc: float
+    bytes_per_doc: float
+    docs_per_joule: float
+
+    def speedup_vs_paper(self) -> float:
+        return self.docs_per_sec_pod / PAPER_DOCS_PER_SEC
+
+
+def project(nnz_pad: int = 128, query_tile: int = 512, l_queries: int = 1,
+            val_bytes: int = 4, chips: int = CHIPS_PER_POD) -> Projection:
+    """ELL corpus scan: bytes/doc = 2 arrays x nnz_pad x 4B; match-matrix
+    FLOPs/doc = eq-dot (2 x nnz_pad x Qm x L) + compare ops."""
+    bytes_per_doc = 2 * nnz_pad * val_bytes
+    flops_per_doc = 2.0 * nnz_pad * query_tile * l_queries + \
+        nnz_pad * query_tile          # compares on the VPU
+    mem_rate = HBM_BW / bytes_per_doc
+    comp_rate = PEAK_FLOPS / flops_per_doc
+    rate = min(mem_rate, comp_rate)
+    bound = "memory" if mem_rate < comp_rate else "compute"
+    return Projection(
+        name=f"L={l_queries},Q={query_tile},K={nnz_pad}",
+        docs_per_sec_chip=rate,
+        docs_per_sec_pod=rate * chips,
+        bound=bound,
+        flops_per_doc=flops_per_doc,
+        bytes_per_doc=bytes_per_doc,
+        docs_per_joule=rate / ASSUMED_CHIP_WATTS,
+    )
+
+
+def partial_products_per_sec(docs_per_sec: float, avg_nnz: int = 60,
+                             vocab: int = 141_000,
+                             query_nnz: int = 60) -> float:
+    """Expected nonzero partial products/s at the paper's sparsity: each
+    (doc word, query word) pair matches with p = query_nnz / vocab."""
+    pp_per_doc = avg_nnz * query_nnz / vocab
+    return docs_per_sec * pp_per_doc

@@ -1,0 +1,55 @@
+"""Protein pre-filter search (paper §II.B, Fig. 6): encode sequences as
+3-mer bags-of-words and find candidate homologs for a mutated query —
+the BLAST-prefilter use case the paper demonstrates on UniProt TrEMBL.
+
+    PYTHONPATH=src python examples/protein_search.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+
+
+def mutate(seq: str, rng, n_mut: int) -> str:
+    s = list(seq)
+    for _ in range(n_mut):
+        i = rng.integers(len(s))
+        s[i] = corpus_lib.AMINO[rng.integers(20)]
+    return "".join(s)
+
+
+def main():
+    rng = np.random.default_rng(7)
+    print("generating 2000 synthetic protein sequences...")
+    seqs = ["".join(rng.choice(list(corpus_lib.AMINO), rng.integers(80, 300)))
+            for _ in range(2000)]
+    corpus = corpus_lib.proteins_corpus(seqs, nnz_pad=256)
+    cfg = dataclasses.replace(
+        SearchConfig(name="protein", top_k=5), vocab_size=8000)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(),
+                              backend="jnp")
+
+    target = 321
+    query_seq = mutate(seqs[target], rng, n_mut=6)   # a diverged homolog
+    bow = corpus_lib.protein_to_bow(query_seq)
+    qi = np.full(cfg.max_query_nnz, -1, np.int32)
+    qv = np.zeros(cfg.max_query_nnz, np.float32)
+    qi[:len(bow)] = [w for w, _ in bow]
+    qv[:len(bow)] = [c for _, c in bow]
+
+    res = eng.search(qi[None], qv[None])
+    print(f"query: protein {target} with 6 point mutations")
+    for rank, (d, s) in enumerate(zip(res.doc_ids[0], res.scores[0])):
+        mark = "  <-- true homolog" if d == target else ""
+        print(f"  #{rank + 1}: protein {d}  cosine {s:.4f}{mark}")
+    assert res.doc_ids[0, 0] == target, "prefilter missed the homolog"
+    print("OK: 3-mer prefilter recovered the mutated homolog "
+          "(search space reduced 2000 -> 5 for the exact aligner)")
+
+
+if __name__ == "__main__":
+    main()

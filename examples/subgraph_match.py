@@ -1,0 +1,56 @@
+"""Subgraph matching (paper §II.B, Fig. 5): edges become 'words' of their
+vertex labels; similar subgraphs share edge vocabulary.
+
+    PYTHONPATH=src python examples/subgraph_match.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+
+N_LABELS = 128
+
+
+def main():
+    rng = np.random.default_rng(3)
+    print("generating 500 random labeled subgraphs...")
+    graphs = []
+    for _ in range(500):
+        n_edges = rng.integers(10, 40)
+        graphs.append([(int(rng.integers(N_LABELS)),
+                        int(rng.integers(N_LABELS)))
+                       for _ in range(n_edges)])
+    corpus = corpus_lib.subgraphs_corpus(graphs, n_labels=N_LABELS,
+                                         nnz_pad=64)
+    cfg = dataclasses.replace(SearchConfig(name="subgraph", top_k=5),
+                              vocab_size=N_LABELS * N_LABELS)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(),
+                              backend="jnp")
+
+    # query: graph 42 with 3 edges rewired (a noisy motif)
+    target = 42
+    g = list(graphs[target])
+    for _ in range(3):
+        g[rng.integers(len(g))] = (int(rng.integers(N_LABELS)),
+                                   int(rng.integers(N_LABELS)))
+    bow = corpus_lib.subgraph_to_bow(g, N_LABELS)
+    qi = np.full(cfg.max_query_nnz, -1, np.int32)
+    qv = np.zeros(cfg.max_query_nnz, np.float32)
+    qi[:len(bow)] = [w for w, _ in bow]
+    qv[:len(bow)] = [c for _, c in bow]
+
+    res = eng.search(qi[None], qv[None])
+    print(f"query: subgraph {target} with 3 rewired edges")
+    for rank, (d, s) in enumerate(zip(res.doc_ids[0], res.scores[0])):
+        mark = "  <-- source graph" if d == target else ""
+        print(f"  #{rank + 1}: graph {d}  cosine {s:.4f}{mark}")
+    assert res.doc_ids[0, 0] == target
+    print("OK: noisy motif matched to its source subgraph")
+
+
+if __name__ == "__main__":
+    main()

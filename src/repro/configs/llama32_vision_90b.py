@@ -1,0 +1,28 @@
+"""Llama 3.2 Vision 90B — cross-attn image layers [hf:meta-llama/Llama-3.2-*-Vision].
+
+Assigned: 100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Structure: 80 self-attention layers with a cross-attention layer inserted
+after every 4th (20 sites) = 100 layers total. The vision encoder is a STUB
+per the assignment: input_specs() provides precomputed patch embeddings
+(n_image_tokens × d_model).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=28_672, vocab_size=128_256,
+        cross_attn_every=4, n_image_tokens=1600,
+        rope_theta=500_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b-smoke", family="vlm",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        cross_attn_every=2, n_image_tokens=16,
+    )

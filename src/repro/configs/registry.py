@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "llama-3.2-vision-90b": "repro.configs.llama32_vision_90b",
+    "qwen2-0.5b": "repro.configs.qwen2_0p5b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).smoke_config()

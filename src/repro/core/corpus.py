@@ -1,0 +1,145 @@
+"""Corpus construction: bag-of-words datasets, the paper's synthesizer,
+protein 3-mer encoding (Fig. 6) and subgraph-edge encoding (Fig. 5).
+
+A corpus is held in ELL form (DESIGN.md §2): ``ids [n_docs, K]`` int32
+(-1 padding), ``vals [n_docs, K]`` float32, ``doc_ids [n_docs]``,
+``norms [n_docs]`` — K a multiple of the kernel tile so HBM->VMEM streaming
+is aligned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import stream_format
+
+
+@dataclasses.dataclass
+class Corpus:
+    doc_ids: np.ndarray   # [n] int64
+    ids: np.ndarray       # [n, K] int32, -1 padded, sorted per row
+    vals: np.ndarray      # [n, K] float32
+    norms: np.ndarray     # [n] float32
+
+    @property
+    def n_docs(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def nnz_pad(self) -> int:
+        return self.ids.shape[1]
+
+    def pad_docs_to(self, n: int) -> "Corpus":
+        """Pad with empty documents (id -1) so n_docs divides the mesh."""
+        extra = n - self.n_docs
+        if extra <= 0:
+            return self
+        K = self.nnz_pad
+        return Corpus(
+            np.concatenate([self.doc_ids, np.full(extra, -1, np.int64)]),
+            np.concatenate([self.ids, np.full((extra, K), -1, np.int32)]),
+            np.concatenate([self.vals, np.zeros((extra, K), np.float32)]),
+            np.concatenate([self.norms, np.zeros(extra, np.float32)]),
+        )
+
+
+def from_tuples(tuples: Sequence[Tuple[int, int, int]], nnz_pad: int) -> Corpus:
+    """UCI-style {docID, wordID, count} tuples -> Corpus (via the Fig. 8
+    stream, exercising the paper's ingest path)."""
+    by_doc: Dict[int, List[Tuple[int, int]]] = {}
+    for d, w, c in tuples:
+        by_doc.setdefault(d, []).append((w, c))
+    docs = sorted(by_doc.items())
+    stream = stream_format.encode(docs)
+    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+
+
+def synthesize(n_docs: int, vocab_size: int, avg_nnz: int, nnz_pad: int,
+               seed: int = 0, zipf: float = 1.1) -> Corpus:
+    """The paper's dataset synthesizer (§IV.A): generate documents as
+    permutations of word sets with random add/remove and random counts.
+    Word frequencies follow a Zipf-ish distribution like real text."""
+    rng = np.random.default_rng(seed)
+    n_base = max(1, n_docs // 16)
+    lens = np.clip(rng.poisson(avg_nnz, n_docs), 1, nnz_pad).astype(np.int64)
+    ids = np.full((n_docs, nnz_pad), -1, np.int32)
+    vals = np.zeros((n_docs, nnz_pad), np.float32)
+    # base "topics": each a word set; documents permute a base set
+    ranks = rng.zipf(zipf, size=(n_base, nnz_pad * 2)) % vocab_size
+    for i in range(n_docs):
+        base = ranks[rng.integers(n_base)]
+        take = lens[i]
+        words = rng.choice(base, take, replace=False) if take <= base.size \
+            else base
+        # random add/remove (the paper's permutation step)
+        n_mut = max(1, take // 8)
+        words[:n_mut] = rng.integers(0, vocab_size, n_mut)
+        words = np.unique(words.astype(np.int32))
+        k = words.size
+        ids[i, :k] = np.sort(words)
+        vals[i, :k] = rng.integers(1, 30, k).astype(np.float32)
+    norms = np.sqrt((vals ** 2).sum(1)).astype(np.float32)
+    return Corpus(np.arange(n_docs, dtype=np.int64), ids, vals, norms)
+
+
+# ---------------------------------------------------------------------------
+# protein 3-mers (Fig. 6)
+# ---------------------------------------------------------------------------
+AMINO = "ACDEFGHIKLMNPQRSTVWY"
+_A2I = {c: i for i, c in enumerate(AMINO)}
+
+
+def protein_to_bow(seq: str) -> List[Tuple[int, int]]:
+    """Bag-of-words of all 3-mers; wordID = base-20 encoding of the 3-mer
+    (vocab 8000, well inside the 19-bit key space)."""
+    counts: Dict[int, int] = {}
+    s = [c for c in seq.upper() if c in _A2I]
+    for i in range(len(s) - 2):
+        wid = _A2I[s[i]] * 400 + _A2I[s[i + 1]] * 20 + _A2I[s[i + 2]]
+        counts[wid] = counts.get(wid, 0) + 1
+    return sorted(counts.items())
+
+
+def proteins_corpus(seqs: Sequence[str], nnz_pad: int = 256) -> Corpus:
+    docs = [(i, protein_to_bow(s)) for i, s in enumerate(seqs)]
+    stream = stream_format.encode(docs)
+    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+
+
+# ---------------------------------------------------------------------------
+# subgraph edges (Fig. 5)
+# ---------------------------------------------------------------------------
+def subgraph_to_bow(edges: Sequence[Tuple[int, int]], n_labels: int
+                    ) -> List[Tuple[int, int]]:
+    """Each edge becomes a 'word' of its two vertex labels (order-free)."""
+    counts: Dict[int, int] = {}
+    for a, b in edges:
+        lo, hi = min(a, b) % n_labels, max(a, b) % n_labels
+        wid = lo * n_labels + hi
+        counts[wid] = counts.get(wid, 0) + 1
+    return sorted(counts.items())
+
+
+def subgraphs_corpus(graphs: Sequence[Sequence[Tuple[int, int]]],
+                     n_labels: int = 512, nnz_pad: int = 128) -> Corpus:
+    docs = [(i, subgraph_to_bow(g, n_labels)) for i, g in enumerate(graphs)]
+    stream = stream_format.encode(docs)
+    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+
+
+# ---------------------------------------------------------------------------
+# queries
+# ---------------------------------------------------------------------------
+def make_query(corpus: Corpus, doc_index: int, max_nnz: int):
+    """Query = an existing document (self-search must return itself)."""
+    ids = corpus.ids[doc_index]
+    vals = corpus.vals[doc_index]
+    keep = ids >= 0
+    q_ids = np.full(max_nnz, -1, np.int32)
+    q_vals = np.zeros(max_nnz, np.float32)
+    k = min(int(keep.sum()), max_nnz)
+    q_ids[:k] = ids[keep][:k]
+    q_vals[:k] = vals[keep][:k]
+    return q_ids, q_vals

@@ -1,0 +1,176 @@
+"""PatternSearchEngine — the paper's in-storage accelerator as a sharded
+TPU service (DESIGN.md §2).
+
+The corpus lives sharded across chip HBM: doc rows over the (pod, data)
+mesh axes — the paper's K corpus partitions — and the merged query batch's
+L value-columns over the ``model`` axis — the paper's L. Each device is one
+"accelerator kernel": it scores its corpus shard against its query slice
+(Pallas kernel on TPU, gather path on CPU), takes a local top-k, and a
+hierarchical reduction returns the global winners. Only queries (in) and
+top-k (out) cross the interconnect; the corpus never moves.
+
+Streaming mode handles corpora larger than aggregate HBM: fixed-size
+resident slabs are scored while the next slab is transferred
+(double-buffered, epoch-tagged — the prefetch-predictor analogue at host
+scope), with top-k merged across slabs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import topk as topk_lib
+from repro.core.corpus import Corpus
+from repro.distributed.meshctx import MeshCtx
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass
+class SearchResult:
+    doc_ids: np.ndarray   # [L, k] int64 (-1 for no result)
+    scores: np.ndarray    # [L, k] cosine
+
+
+class PatternSearchEngine:
+    def __init__(self, corpus: Corpus, cfg: SearchConfig, ctx: MeshCtx,
+                 backend: str = "jnp"):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.backend = backend
+        if corpus.ids.size and int(corpus.ids.max()) >= cfg.vocab_size:
+            raise ValueError(
+                f"corpus word ids reach {int(corpus.ids.max())} but "
+                f"cfg.vocab_size={cfg.vocab_size}")
+        ndev = ctx.mesh.size
+        rows = ctx.dp_size
+        n = -(-corpus.n_docs // rows) * rows
+        corpus = corpus.pad_docs_to(n)
+        self.corpus = corpus
+        spec = P(ctx.dp_axes, None)
+        self.d_ids = jax.device_put(corpus.ids,
+                                    NamedSharding(ctx.mesh, spec))
+        self.d_vals = jax.device_put(corpus.vals,
+                                     NamedSharding(ctx.mesh, spec))
+        self.d_norms = jax.device_put(corpus.norms,
+                                      NamedSharding(ctx.mesh, P(ctx.dp_axes)))
+        self.d_docids = jax.device_put(corpus.doc_ids.astype(np.int32),
+                                       NamedSharding(ctx.mesh, P(ctx.dp_axes)))
+        self._search_fn = self._build(ndev)
+
+    # ------------------------------------------------------------------
+    def _build(self, ndev: int):
+        cfg, ctx, backend = self.cfg, self.ctx, self.backend
+        tp = ctx.tp_axis
+        dp = ctx.dp_axes
+
+        def local_score(ids, vals, norms, docids, q_ids, q_vals, q_norms):
+            """Per-device: score local corpus shard x local query columns."""
+            corr = kops.correlate(
+                ids, vals, q_ids, q_vals, backend=backend,
+                vocab_size=cfg.vocab_size, block_docs=cfg.block_docs,
+                block_query=cfg.block_query)
+            cos = kops.cosine_scores(corr, norms, q_norms)
+            v, i = topk_lib.local_topk(cos, docids, cfg.top_k)
+            # reduce across the corpus-shard (K) axes — paper's report path
+            for ax in dp:
+                v, i = topk_lib.tree_topk(v, i, cfg.top_k, ax)
+            return v, i
+
+        qcols_spec = P(None, tp)  # L value-columns over the model axis
+
+        @jax.jit
+        def search(ids, vals, norms, docids, q_ids, q_vals, q_norms):
+            f = shard_map(
+                local_score, mesh=ctx.mesh,
+                in_specs=(P(dp, None), P(dp, None), P(dp), P(dp),
+                          P(None), qcols_spec, P(tp)),
+                out_specs=(P(tp, None), P(tp, None)),
+                check_vma=False)
+            return f(ids, vals, norms, docids, q_ids, q_vals, q_norms)
+
+        return search
+
+    # ------------------------------------------------------------------
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """q_ids/q_vals: [L, Qn] (pad < 0). L is padded to the model-axis
+        size (the paper's L query batch)."""
+        L_ = q_ids.shape[0]
+        tp = self.ctx.tp_size
+        Lp = -(-L_ // tp) * tp
+        if Lp != L_:
+            pad_i = np.full((Lp - L_, q_ids.shape[1]), -1, q_ids.dtype)
+            pad_v = np.zeros((Lp - L_, q_vals.shape[1]), q_vals.dtype)
+            q_ids = np.concatenate([q_ids, pad_i])
+            q_vals = np.concatenate([q_vals, pad_v])
+        mi, mv = kops.merge_queries(q_ids, q_vals)
+        # pad the merged stream to the query block
+        pad = -(-mi.size // self.cfg.block_query) * self.cfg.block_query
+        mi = np.pad(mi, (0, pad - mi.size), constant_values=-2)
+        mv = np.pad(mv, ((0, pad - mv.shape[0]), (0, 0)))
+        q_norms = np.sqrt((np.where(q_vals > 0, q_vals, 0) ** 2).sum(1))
+        q_norms = np.maximum(q_norms, 1e-12).astype(np.float32)
+        v, i = self._search_fn(
+            self.d_ids, self.d_vals, self.d_norms, self.d_docids,
+            jnp.asarray(mi), jnp.asarray(mv), jnp.asarray(q_norms))
+        v = np.asarray(v)[:L_]
+        i = np.asarray(i)[:L_]
+        i = np.where(np.isfinite(v), i, -1)
+        return SearchResult(doc_ids=i.astype(np.int64), scores=v)
+
+    # ------------------------------------------------------------------
+    def search_streaming(self, q_ids, q_vals, corpus_slabs) -> SearchResult:
+        """Score a sequence of corpus slabs larger than resident memory.
+        Double-buffers the next slab's device_put against the current
+        score (epoch-tagged host prefetch — DESIGN.md §2)."""
+        best: Optional[SearchResult] = None
+        next_dev = None
+        slabs = list(corpus_slabs)
+        for idx, slab in enumerate(slabs):
+            if next_dev is None:
+                next_dev = self._put_slab(slab)
+            cur = next_dev
+            if idx + 1 < len(slabs):  # prefetch the next slab (async)
+                next_dev = self._put_slab(slabs[idx + 1])
+            else:
+                next_dev = None
+            eng = self._with_slab(cur)
+            r = eng_search(eng, q_ids, q_vals)
+            best = r if best is None else _merge_results(best, r,
+                                                         self.cfg.top_k)
+        return best
+
+    def _put_slab(self, slab: Corpus):
+        rows = self.ctx.dp_size
+        slab = slab.pad_docs_to(-(-slab.n_docs // rows) * rows)
+        sh = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes, None))
+        sh1 = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes))
+        return (jax.device_put(slab.ids, sh), jax.device_put(slab.vals, sh),
+                jax.device_put(slab.norms, sh1),
+                jax.device_put(slab.doc_ids.astype(np.int32), sh1))
+
+    def _with_slab(self, dev):
+        eng = object.__new__(PatternSearchEngine)
+        eng.__dict__.update(self.__dict__)
+        eng.d_ids, eng.d_vals, eng.d_norms, eng.d_docids = dev
+        return eng
+
+
+def eng_search(eng: PatternSearchEngine, q_ids, q_vals) -> SearchResult:
+    return PatternSearchEngine.search(eng, q_ids, q_vals)
+
+
+def _merge_results(a: SearchResult, b: SearchResult, k: int) -> SearchResult:
+    ids = np.concatenate([a.doc_ids, b.doc_ids], axis=1)
+    sc = np.concatenate([a.scores, b.scores], axis=1)
+    order = np.argsort(-sc, axis=1)[:, :k]
+    return SearchResult(np.take_along_axis(ids, order, 1),
+                        np.take_along_axis(sc, order, 1))

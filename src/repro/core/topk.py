@@ -1,0 +1,56 @@
+"""Hierarchical distributed top-k (the paper's result reporting path).
+
+Per-chip top-k over the local corpus shard, then a tree reduction along the
+mesh axes so only O(k) values cross each ICI link — the in-pod analogue of
+"only documentIDs with high scores are reported to the computer". The MoE
+router's top-k dispatch (repro.models.moe) shares this primitive family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def local_topk(scores: Array, doc_ids: Array, k: int) -> Tuple[Array, Array]:
+    """scores: [D, L]; doc_ids: [D] -> (vals [L, k], ids [L, k])."""
+    vals, idx = jax.lax.top_k(scores.T, k)        # [L, k]
+    return vals, doc_ids[idx]
+
+
+def merge_topk(vals_a, ids_a, vals_b, ids_b, k: int):
+    """Merge two [L, k] candidate sets."""
+    vals = jnp.concatenate([vals_a, vals_b], axis=1)
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    v, idx = jax.lax.top_k(vals, k)
+    return v, jnp.take_along_axis(ids, idx, axis=1)
+
+
+def tree_topk(vals: Array, ids: Array, k: int, axis_name: str):
+    """Reduce [L, k] candidates across a mesh axis inside shard_map.
+
+    all_gather + re-top_k; with k << D_local the gathered tensor is tiny
+    (k * axis_size entries), so a single gather is cheaper than a log-depth
+    ppermute tree on real ICI — both are provided, the tree variant is used
+    when k * axis_size would exceed the VMEM-friendly threshold."""
+    g_vals = jax.lax.all_gather(vals, axis_name, axis=1, tiled=True)
+    g_ids = jax.lax.all_gather(ids, axis_name, axis=1, tiled=True)
+    v, idx = jax.lax.top_k(g_vals, k)
+    return v, jnp.take_along_axis(g_ids, idx, axis=1)
+
+
+def tree_topk_ppermute(vals: Array, ids: Array, k: int, axis_name: str,
+                       axis_size: int):
+    """Log-depth butterfly merge via ppermute (collective-light variant for
+    very large meshes / large k)."""
+    step = 1
+    while step < axis_size:
+        perm = [(i, i ^ step) for i in range(axis_size)]
+        ov = jax.lax.ppermute(vals, axis_name, perm)
+        oi = jax.lax.ppermute(ids, axis_name, perm)
+        vals, ids = merge_topk(vals, ids, ov, oi, k)
+        step *= 2
+    return vals, ids

@@ -1,0 +1,80 @@
+"""Int8 gradient compression with error feedback for the multi-pod DP axis.
+
+Across pods the per-pod gradient replicas must be averaged over a link that
+is far thinner than in-pod ICI (DCN in practice). We compress that
+all-reduce: block-quantize (g + err) to int8, all_gather the int8 payloads
+(+ fp32 block scales), dequantize + average locally, and keep the residual
+as the next step's error feedback. Wire bytes drop ~3.7x vs fp32
+all-reduce; error feedback keeps the long-run gradient unbiased
+(1-bit Adam / EF-SGD lineage).
+
+Implemented as a shard_map over only the ``pod`` axis so it composes with
+the jit-SPMD sharding of everything else.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshctx import MeshCtx
+from repro.train.optimizer import QTensor, dequantize_block, quantize_block
+
+
+def compressed_mean_tree(grads, err, ctx: MeshCtx, axis: str = "pod"):
+    """Per-leaf compressed mean over ``axis``. grads/err: matching trees
+    (err fp32). Returns (mean_grads, new_err). Must be called inside a
+    shard_map (or jit program) where ``axis`` is a manual mesh axis."""
+    n = ctx.mesh.shape[axis]
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        qt = quantize_block(gf)
+        new_e = gf - dequantize_block(qt)
+        gq = jax.lax.all_gather(qt.q, axis)          # [n, nb, B] int8 wire
+        gs = jax.lax.all_gather(qt.scale, axis)      # [n, nb] fp32
+        total = jnp.zeros(gf.shape, jnp.float32)
+        for i in range(n):
+            total = total + dequantize_block(
+                QTensor(q=gq[i], scale=gs[i], shape=gf.shape))
+        return (total / n).astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, err)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err
+
+
+def make_pod_grad_reducer(ctx: MeshCtx, grads_like, compress: bool):
+    """Returns f(grads, err) -> (mean_grads, err') reducing over the 'pod'
+    axis. Identity when there is no pod axis."""
+    if "pod" not in ctx.mesh.axis_names:
+        return lambda g, e: (g, e)
+
+    if not compress:
+        def psum_mean(grads, err):
+            f = shard_map(
+                lambda g: jax.tree.map(
+                    lambda x: jax.lax.pmean(x, "pod"), g),
+                mesh=ctx.mesh, in_specs=P(), out_specs=P(),
+                axis_names={"pod"}, check_vma=False)
+            return f(grads), err
+        return psum_mean
+
+    def reducer(grads, err):
+        f = shard_map(
+            lambda g, e: compressed_mean_tree(g, e, ctx, "pod"),
+            mesh=ctx.mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+            axis_names={"pod"}, check_vma=False)
+        return f(grads, err)
+    return reducer
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,165 @@
+"""Parameter sharding rules (2-D: FSDP over ``data`` x TP over ``model``).
+
+Rules are name-based over the param tree with divisibility guards: a dim is
+sharded over an axis only if it divides evenly AND (for attention) head
+boundaries stay aligned — otherwise that dim is replicated (e.g. qwen2's 14
+heads and musicgen's 24 heads on a 16-way model axis: attention weights
+replicate over ``model`` while FFN/vocab still shard; the small models'
+attention doesn't need TP).
+
+``pod`` is a pure-DP axis: params are replicated over it; gradients reduce
+across it (optionally int8-compressed, distributed/compression.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.meshctx import MeshCtx
+
+# weight classes: which of the last two dims carries TP
+_OUT_TP = {"wq", "wk", "wv", "wg", "w_gate", "w_up", "wr"}
+_IN_TP = {"wo", "w_down", "out_proj", "wv_cm"}
+_REPLICATE = {"router", "wA", "wB", "conv_w", "A_log", "D", "dt_bias",
+              "w0", "u", "in_proj"}
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _leaf_spec(path_names, shape, cfg: ModelConfig, ctx: MeshCtx):
+    fsdp, tp = ctx.fsdp_axis, ctx.tp_axis
+    fs, ts = ctx.mesh.shape[fsdp], ctx.mesh.shape[tp]
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+
+    def guard(axis_ok, dim, size):
+        return axis_ok and _div(shape[dim], size)
+
+    # embedding
+    if name == "table":
+        return P(tp if _div(shape[0], ts) else None,
+                 fsdp if _div(shape[1], fs) else None)
+    if name == "head":
+        return P(fsdp if _div(shape[0], fs) else None,
+                 tp if _div(shape[1], ts) else None)
+
+    # attention head guards
+    attn_ok_q = _div(cfg.n_heads, ts)
+    attn_ok_kv = _div(cfg.n_kv_heads, ts)
+    in_attn = parent == "attn" or name in ("wq", "wk", "wv", "wo")
+
+    # rwkv channel-mix value matrix is named "wv" but is [ff, d] (in-TP);
+    # must be decided before the _OUT_TP branch
+    if parent == "cm" and name == "wv":
+        lead = (None,) * (len(shape) - 2)
+        return P(*lead, tp if _div(shape[-2], ts) else None,
+                 fsdp if _div(shape[-1], fs) else None)
+
+    # mamba in_proj [L, d, 2*d_in+2N+nh]: FSDP on d, replicate the fused
+    # out dim (sections are not TP-aligned)
+    if name == "in_proj":
+        return P(None, fsdp if _div(shape[1], fs) else None, None)
+
+    if len(shape) >= 2 and name in _OUT_TP and name not in _REPLICATE:
+        tp_ok = _div(shape[-1], ts)
+        if in_attn and name == "wq":
+            tp_ok = tp_ok and attn_ok_q
+        if in_attn and name in ("wk", "wv") and parent == "attn":
+            tp_ok = tp_ok and attn_ok_kv
+        lead = (None,) * (len(shape) - 2)
+        # MoE experts: [L, E, d, ff] — E carries TP (EP), d carries FSDP
+        if len(shape) == 4:
+            return P(None, tp if _div(shape[1], ts) else None,
+                     fsdp if _div(shape[2], fs) else None, None)
+        return P(*lead, fsdp if _div(shape[-2], fs) else None,
+                 tp if tp_ok else None)
+
+    if len(shape) >= 2 and name in _IN_TP:
+        tp_ok = _div(shape[-2], ts)
+        if name == "wo":
+            tp_ok = tp_ok and attn_ok_q
+        lead = (None,) * (len(shape) - 2)
+        if len(shape) == 4:  # [L, E, ff, d]
+            return P(None, tp if _div(shape[1], ts) else None, None,
+                     fsdp if _div(shape[-1], fs) else None)
+        return P(*lead, tp if tp_ok else None,
+                 fsdp if _div(shape[-1], fs) else None)
+
+    return P()  # biases, norms, router, small tensors: replicated
+
+
+def opt_state_specs(opt_state, param_specs, ctx: MeshCtx):
+    """Shardings for the optimizer state tree: fp32 moments mirror the
+    param spec; int8 QTensor payloads shard their flat block dim over
+    (fsdp x tp) jointly (divisibility-guarded)."""
+    from repro.train.optimizer import QTensor
+
+    fsdp, tp = ctx.fsdp_axis, ctx.tp_axis
+    both = ctx.mesh.shape[fsdp] * ctx.mesh.shape[tp]
+
+    def one(state_leaf, spec):
+        if isinstance(state_leaf, QTensor):
+            # int8 payload has the param's shape -> the param's spec; the
+            # per-block scale shares the leading specs and keeps the last
+            # (blocked) axis' sharding only if blocks divide across it
+            qs = spec
+            rank = len(state_leaf.q.shape)
+            entries = list(spec) + [None] * (rank - len(list(spec)))
+
+            def axes_size(e):
+                if e is None:
+                    return 1
+                names = e if isinstance(e, tuple) else (e,)
+                s = 1
+                for nm in names:
+                    s *= ctx.mesh.shape[nm]
+                return s
+
+            if state_leaf.scale.ndim == rank and rank > 0:
+                n_blocks = state_leaf.scale.shape[-1]
+                last = entries[-1]
+                ok = n_blocks % axes_size(last) == 0
+                ss = P(*entries[:-1], last if ok else None)
+            else:
+                ss = P(*entries[:state_leaf.scale.ndim])
+            # keep the same static aux (shape) so the spec tree's treedef
+            # matches the state tree's for in_shardings
+            return QTensor(q=qs, scale=ss, shape=state_leaf.shape)
+        return spec
+
+    m = jax.tree.map(one, opt_state["m"], param_specs,
+                     is_leaf=lambda x: isinstance(x, QTensor))
+    v = jax.tree.map(one, opt_state["v"], param_specs,
+                     is_leaf=lambda x: isinstance(x, QTensor))
+    return {"step": P(), "m": m, "v": v}
+
+
+def build_param_specs(params, cfg: ModelConfig, ctx: MeshCtx):
+    """Mirror the param tree with PartitionSpecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        specs.append(_leaf_spec(names, leaf.shape, cfg, ctx))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_param_shardings(params, cfg: ModelConfig, ctx: MeshCtx):
+    specs = build_param_specs(params, cfg, ctx)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_init(key, cfg: ModelConfig, ctx: MeshCtx, init_fn):
+    """jit the initializer with out_shardings so giant param trees are
+    *born* sharded (no host-memory spike)."""
+    shapes = jax.eval_shape(init_fn, key)
+    shardings = build_param_specs(shapes, cfg, ctx)
+    named = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), shardings,
+                         is_leaf=lambda x: isinstance(x, P))
+    return jax.jit(init_fn, out_shardings=named)(key), named

@@ -1,0 +1,89 @@
+"""jit'd public wrappers around the sparse_match kernel.
+
+Handles padding to tile multiples, merged multi-query streams, sentinel
+conventions and cosine normalization. ``backend``:
+  - "pallas": the TPU kernel (interpret=True on CPU — used by tests)
+  - "jnp":    gather-based scoring (engine default on CPU; also the
+              in-memory CPU baseline of the paper's Fig. 13)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.sparse_match import sparse_match, QUERY_PAD
+from repro.kernels.sparse_match_packed import sparse_match_packed
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, n: int, axis: int, fill) -> Array:
+    need = n - x.shape[axis]
+    if need <= 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, need)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def merge_queries(q_ids: np.ndarray, q_vals: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack L queries ([L, Qn] ids, [L, Qn] vals, pad<0) into one merged
+    id stream with L value columns: ids [Qm], vals [Qm, L]."""
+    L_, _ = q_ids.shape
+    ids_out, vals_out = [], []
+    for l in range(L_):
+        keep = q_ids[l] >= 0
+        ids_out.append(q_ids[l][keep])
+        v = np.zeros((keep.sum(), L_), np.float32)
+        v[:, l] = q_vals[l][keep]
+        vals_out.append(v)
+    ids = np.concatenate(ids_out).astype(np.int32)
+    vals = np.concatenate(vals_out, axis=0)
+    order = np.argsort(ids, kind="stable")
+    return ids[order], vals[order]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_docs",
+                                             "block_query", "vocab_size"))
+def correlate(doc_ids: Array, doc_vals: Array, q_ids: Array, q_vals: Array,
+              *, backend: str = "jnp", vocab_size: int = 0,
+              block_docs: int = 128, block_query: int = 512) -> Array:
+    """Correlation (cosine numerator) [D, L]."""
+    if backend in ("pallas", "pallas_packed"):
+        D = doc_ids.shape[0]
+        Qm = q_ids.shape[0]
+        td = min(block_docs, max(D, 8))
+        tq = min(block_query, max(Qm, 8))
+        Dp = -(-D // td) * td
+        Qp = -(-Qm // tq) * tq
+        qi = _pad_to(q_ids, Qp, 0, QUERY_PAD)
+        qv = _pad_to(q_vals, Qp, 0, 0.0)
+        # query padding might collide with doc padding sentinel: remap
+        qi = jnp.where(qi < 0, QUERY_PAD, qi)
+        interpret = jax.default_backend() != "tpu"
+        if backend == "pallas_packed":
+            # doc_ids here is the packed uint32 corpus (Fig. 8 in HBM)
+            dp = _pad_to(doc_ids, Dp, 0, 0xFFFFFFFF)
+            out = sparse_match_packed(dp, qi, qv, block_docs=td,
+                                      block_query=tq, interpret=interpret)
+            return out[:D]
+        di = _pad_to(doc_ids, Dp, 0, -1)
+        dv = _pad_to(doc_vals, Dp, 0, 0.0)
+        out = sparse_match(di, dv, qi, qv, block_docs=td, block_query=tq,
+                           interpret=interpret)
+        return out[:D]
+    assert vocab_size > 0, "jnp backend needs vocab_size"
+    qi = jnp.where(q_ids < 0, -1, q_ids)
+    return ref_mod.sparse_match_ref(doc_ids, doc_vals, qi, q_vals, vocab_size)
+
+
+def cosine_scores(corr: Array, doc_norms: Array, q_norms: Array) -> Array:
+    """corr: [D, L]; doc_norms: [D]; q_norms: [L] -> cosine in [-1, 1]."""
+    denom = doc_norms[:, None] * q_norms[None, :]
+    return jnp.where(denom > 0, corr / jnp.maximum(denom, 1e-12), -jnp.inf)

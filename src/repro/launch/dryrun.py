@@ -1,0 +1,230 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production mesh with 512 placeholder host devices, record
+memory_analysis / cost_analysis / HLO for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k \
+      --mesh single --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh multi --out results/dryrun
+"""
+# The assignment requires these to be the VERY FIRST lines — jax locks the
+# device count on first init, and smoke tests/benches must still see 1.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import gzip              # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, OptimizerConfig, TrainConfig, \
+    shape_applicable  # noqa: E402
+from repro.configs.registry import ARCH_NAMES, get_config  # noqa: E402
+from repro.distributed import sharding as sh_lib  # noqa: E402
+from repro.launch import specs as specs_lib  # noqa: E402
+from repro.launch.mesh import make_ctx  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.serve import step as serve_step  # noqa: E402
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+V5E_HBM_PER_CHIP = 16 * 1024 ** 3
+
+
+def _named(ctx, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowering(arch: str, shape_name: str, multi_pod: bool,
+                   int8_opt: bool = False, compress: bool = False,
+                   variant: str = "base"):
+    from repro.models import perfcfg
+    if variant == "cf11":
+        perfcfg.set_variant("a2aint8")
+    else:
+        perfcfg.set_variant(variant)
+    cfg = get_config(arch)
+    if variant == "cf11":   # tighter expert capacity: cf appears squared
+        cfg = dataclasses.replace(cfg, capacity_factor=1.1)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+    # >500B-param training requires int8 optimizer states to fit the pod
+    # (DESIGN.md §8 / EXPERIMENTS.md §Dry-run)
+    if shape.kind == "train" and cfg.param_count() > 5e11:
+        int8_opt = True
+    ctx = make_ctx(multi_pod=multi_pod)
+    params_struct = jax.eval_shape(lambda k: M.init(k, cfg),
+                                   jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = sh_lib.build_param_specs(params_struct, cfg, ctx)
+    p_shard = _named(ctx, pspecs)
+    batch_spec = specs_lib.input_specs(cfg, shape)
+    dpspec = P(ctx.dp_axes)
+
+    def batch_shardings(bs):
+        out = {}
+        for k, v in bs.items():
+            out[k] = NamedSharding(
+                ctx.mesh, P(ctx.dp_axes, *([None] * (v.ndim - 1))))
+        return out
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig(int8_states=int8_opt,
+                                  grad_compression=compress)
+        tc = TrainConfig(model=cfg, opt=opt_cfg, seq_len=shape.seq_len,
+                         global_batch=shape.global_batch)
+        opt_struct = jax.eval_shape(
+            lambda p: opt_lib.init_state(opt_cfg, p), params_struct)
+        o_specs = sh_lib.opt_state_specs(opt_struct, pspecs, ctx)
+        o_shard = _named(ctx, o_specs)
+        step_fn = make_train_step(tc, cfg, ctx, donate=True, jit=False)
+        err_struct, err_shard = {}, {}
+        if compress and "pod" in ctx.mesh.axis_names:
+            err_struct = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params_struct)
+            err_shard = p_shard
+        args = (params_struct, opt_struct, batch_spec["batch"], err_struct)
+        in_sh = (p_shard, o_shard, batch_shardings(batch_spec["batch"]),
+                 err_shard)
+        lowered = jax.jit(
+            step_fn, in_shardings=in_sh, donate_argnums=(0, 1),
+        ).lower(*args)
+        return (lowered, cfg, ctx), ""
+
+    if shape.kind == "prefill":
+        fn = serve_step.make_prefill(cfg, ctx, jit=False)
+        args = (params_struct, batch_spec["batch"])
+        in_sh = (p_shard, batch_shardings(batch_spec["batch"]))
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        return (lowered, cfg, ctx), ""
+
+    # decode
+    fn = serve_step.make_decode_step(cfg, ctx, donate=True, jit=False)
+    cache_struct = batch_spec["cache"]
+    c_specs = serve_step.cache_specs(cfg, ctx, shape.global_batch)
+    c_shard = _named(ctx, c_specs)
+    args = (params_struct, batch_spec["batch"], cache_struct,
+            batch_spec["cur_index"])
+    b = batch_spec["batch"]
+    bsh = {}
+    for k, v in b.items():
+        spec = P(ctx.dp_axes, *([None] * (v.ndim - 1))) \
+            if shape.global_batch % ctx.dp_size == 0 else \
+            P(*([None] * v.ndim))
+        bsh[k] = NamedSharding(ctx.mesh, spec)
+    in_sh = (p_shard, bsh, c_shard, NamedSharding(ctx.mesh, P()))
+    lowered = jax.jit(fn, in_shardings=in_sh,
+                      donate_argnums=(2,)).lower(*args)
+    return (lowered, cfg, ctx), ""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             int8_opt: bool = False, compress: bool = False,
+             variant: str = "base", save_hlo: bool = True):
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + \
+        (f"__{variant}" if variant != "base" else "")
+    os.makedirs(out_dir, exist_ok=True)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": variant, "int8_opt": int8_opt, "compress": compress}
+    t0 = time.time()
+    try:
+        built, why = build_lowering(arch, shape_name, multi_pod,
+                                    int8_opt=int8_opt, compress=compress,
+                                    variant=variant)
+        if built is None:
+            rec["status"] = "skipped"
+            rec["reason"] = why
+            _dump(out_dir, tag, rec)
+            print(f"[dryrun] {tag}: SKIPPED ({why})")
+            return rec
+        lowered, cfg, ctx = built
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = _mem_dict(ma)
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {k: float(v) for k, v in (ca or {}).items()
+                                if isinstance(v, (int, float))}
+        print(compiled.memory_analysis())
+        print({k: v for k, v in rec["cost_analysis"].items()
+               if k in ("flops", "bytes accessed")})
+        n_chips = ctx.mesh.size
+        rec["n_chips"] = n_chips
+        rec["params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+        if save_hlo:
+            hlo = compiled.as_text()
+            with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+            rec["hlo_bytes"] = len(hlo)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: ERROR {rec['error']}")
+    _dump(out_dir, tag, rec)
+    status = rec["status"]
+    print(f"[dryrun] {tag}: {status} "
+          f"(lower {rec.get('lower_s', 0):.1f}s, "
+          f"compile {rec.get('compile_s', 0):.1f}s)")
+    return rec
+
+
+def _mem_dict(ma):
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes", "host_generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                  "host_alias_size_in_bytes", "host_temp_size_in_bytes"):
+        if hasattr(ma, field):
+            out[field] = int(getattr(ma, field))
+    return out
+
+
+def _dump(out_dir, tag, rec):
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--int8-opt", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    multi = args.mesh == "multi"
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                run_cell(arch, shape, multi, args.out,
+                         int8_opt=args.int8_opt, compress=args.compress,
+                         save_hlo=not args.no_hlo)
+    else:
+        run_cell(args.arch, args.shape, multi, args.out,
+                 int8_opt=args.int8_opt, compress=args.compress,
+                 variant=args.variant, save_hlo=not args.no_hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Production mesh builders (assignment MULTI-POD DRY-RUN spec)."""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.meshctx import MeshCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_ctx(*, multi_pod: bool = False) -> MeshCtx:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return MeshCtx(mesh=mesh, dp_axes=dp, fsdp_axis="data", tp_axis="model")

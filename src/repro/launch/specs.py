@@ -1,0 +1,46 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation (assignment step 2)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.meshctx import MeshCtx
+from repro.models import model as M
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    s = {}
+    if cfg.embeds_input:
+        s["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                           jnp.bfloat16)
+        s["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        s["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "vlm":
+        s["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return s
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree matching model.init_cache (no allocation)."""
+    return jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Returns (kind, specs dict) for the step function to lower."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    # decode: one new token against a seq_len cache
+    step = batch_specs(cfg, shape.global_batch, 1)
+    return {
+        "batch": step,
+        "cache": cache_struct(cfg, shape.global_batch, shape.seq_len),
+        "cur_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,55 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b \
+        --steps 100 --seq-len 128 --batch 8 --ckpt-dir /tmp/run1
+
+On this CPU container it runs the single-device mesh with the exact same
+code path as the pod meshes (see dryrun.py for the 256/512-chip lowering).
+Restart the command to resume from the latest checkpoint; SIGTERM triggers
+a synchronous final checkpoint (preemption hook).
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.configs.registry import ARCH_NAMES, get_config, get_smoke_config
+from repro.distributed.meshctx import MeshCtx, single_device_ctx
+from repro.train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--int8-opt", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(
+        model=cfg,
+        opt=OptimizerConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                            total_steps=args.steps,
+                            int8_states=args.int8_opt),
+        seq_len=args.seq_len, global_batch=args.batch,
+        microbatches=args.microbatches,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt_dir)
+    ctx = single_device_ctx()   # pod meshes: see launch/mesh.py + dryrun.py
+    trainer = Trainer(tc, ctx)
+    trainer.install_preemption_hook()
+    print(f"[train] {cfg.name}: {cfg.param_count():,} params, "
+          f"{args.steps} steps")
+    metrics = trainer.run(args.steps)
+    print(f"[train] final metrics: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

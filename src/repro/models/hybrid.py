@@ -1,0 +1,129 @@
+"""Zamba2 hybrid [arXiv:2411.15242]: Mamba2 backbone + *shared* attention.
+
+The backbone is ``n_layers`` Mamba2 blocks; a single attention+MLP block
+with shared weights is applied after every ``attn_every``-th Mamba layer
+(6 application sites for 38 layers / every 6). Mamba segments between the
+shared-attention sites are scanned; the shared block is python-unrolled at
+its (static) sites. Decode carries O(1) Mamba state + a KV cache per
+shared-attention site — the hybrid's long-context story.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import rematcfg
+from repro.models import mamba2
+from repro.models.transformer import _self_attn
+
+Array = jax.Array
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """Mamba-layer index ranges between shared-attn sites."""
+    out, start = [], 0
+    for i in range(cfg.n_layers):
+        if (i + 1) % cfg.attn_every == 0:
+            out.append((start, i + 1))
+            start = i + 1
+    if start < cfg.n_layers:
+        out.append((start, cfg.n_layers))
+    return out
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shared = {
+        "ln1": jnp.ones((1, cfg.d_model), jnp.float32),
+        "attn": L.attn_init(k3, cfg, 1),
+        "ln2": jnp.ones((1, cfg.d_model), jnp.float32),
+        "mlp": L.ffn_init(k4, cfg, 1),
+    }
+    shared = jax.tree.map(lambda t: t[0], shared)
+    return {
+        "embed": L.embed_init(k1, cfg),
+        "mamba": mamba2.layer_init(k2, cfg, cfg.n_layers),
+        "shared_attn": shared,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ns = n_attn_sites(cfg)
+    kv = (ns, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "mamba": mamba2.init_state(cfg, cfg.n_layers, batch_size, dtype),
+        "k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, ctx, batch, *, mode="train",
+            remat=True, caches=None, cur_index=None, chunk=64):
+    x = L.embed_apply(params["embed"], batch["tokens"])
+    B, S = x.shape[:2]
+    single = mode == "decode"
+    if caches is None:
+        caches = {"mamba": mamba2.init_state(cfg, cfg.n_layers, B, x.dtype)}
+    mstate = caches["mamba"]
+    if single:
+        positions = jnp.full((B, 1), cur_index, jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    def seg_body(carry, inp):
+        x, = carry
+        pb, st = inp
+        x, st_new = mamba2.block_apply(pb, x, cfg, st, chunk=chunk,
+                                       single=single)
+        x = jax.lax.with_sharding_constraint(
+            x, ctx.sharding(ctx.dp_axes, None, None))
+        return (x,), st_new
+
+    if remat:
+        seg_body = rematcfg.wrap(seg_body)
+
+    new_mstate_parts = []
+    new_k, new_v = [], []
+    sh = params["shared_attn"]
+    for si, (a, b) in enumerate(segments(cfg)):
+        seg_params = jax.tree.map(lambda t: t[a:b], params["mamba"])
+        seg_state = jax.tree.map(lambda t: t[a:b], mstate)
+        (x,), st_new = jax.lax.scan(seg_body, (x,), (seg_params, seg_state))
+        new_mstate_parts.append(st_new)
+        if (b % cfg.attn_every) == 0 and b <= n_attn_sites(cfg) * cfg.attn_every:
+            site = b // cfg.attn_every - 1
+            if single:
+                attn_out, (kc, vc) = _self_attn(
+                    sh, x, cfg, positions=positions, window=0, mode=mode,
+                    cache=(caches["k"][site], caches["v"][site]),
+                    cur_index=cur_index)
+                new_k.append(kc); new_v.append(vc)
+            else:
+                attn_out, (k, v) = _self_attn(
+                    sh, x, cfg, positions=positions, window=0, mode=mode)
+                if mode == "prefill":
+                    new_k.append(k); new_v.append(v)
+            x = x + attn_out
+            x = x + L.ffn_apply(sh["mlp"], L.rms_norm(x, sh["ln2"],
+                                                      cfg.norm_eps))
+
+    new_mstate = jax.tree.map(
+        lambda *parts: jnp.concatenate(parts, axis=0), *new_mstate_parts)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x)
+    logits = jax.lax.with_sharding_constraint(
+        logits, ctx.sharding(ctx.dp_axes, None, ctx.tp_axis))
+    cache_out = {"mamba": new_mstate}
+    if new_k:
+        cache_out["k"] = jnp.stack(new_k)
+        cache_out["v"] = jnp.stack(new_v)
+    return logits, jnp.float32(0), cache_out

@@ -1,0 +1,424 @@
+"""Shared neural-net layers: norms, RoPE, flash-style attention, FFNs.
+
+Everything is a pure function over nested-dict params. Layer stacks are
+stored with a leading layer axis and consumed via ``jax.lax.scan`` so HLO
+size stays O(1) in depth (critical for the 512-device dry-run compiles).
+
+The training/prefill attention is a blockwise streaming-softmax
+implementation (flash attention expressed in jnp + lax.scan): memory is
+O(block_q * block_kv) instead of O(S^2), XLA sees real FLOPs (needed for
+cost_analysis-based rooflines — a Pallas custom call would hide them), and
+it partitions cleanly under the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, (n, d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norm
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [S] or [B, S] (int32)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # [S, half]
+        ang = ang[None, :, None, :]                                     # [1,S,1,half]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs          # [B,S,half]
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) attention — train / prefill
+#
+# custom_vjp so the backward is O(block) memory: the naive scan's AD would
+# save per-kv-block residuals (measured: 65 GB/device temp for qwen2
+# train_4k; 2.9 GB with this — EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+def _attn_mask(qpos, kp, causal, window):
+    mask = jnp.ones((qpos.shape[0], qpos.shape[1], kp.shape[0]), bool)
+    dq = qpos[:, :, None]
+    dk = kp[None, None, :]
+    if causal:
+        mask &= dq >= dk
+    w = jnp.asarray(window, jnp.int32)  # traced per-layer scalar; 0 = global
+    mask &= jnp.where(w > 0, (dq - dk) < w, True)
+    return mask
+
+
+def _flash_fwd(q, k, v, qpos, kpos, causal, window, softcap, scale):
+    """q: [B,nq,bq,KV,G,hd]; k,v: [nk,B,bk,KV,hd]. Returns out, lse."""
+    B, nq, bq, KV, G, hd = q.shape
+
+    m0 = jnp.full((B, nq, bq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, bq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, nq, bq, KV, G, hd), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, kp = inp
+        s = jnp.einsum("bnqkgd,bskd->bnqkgs", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _attn_mask(qpos, kp, causal, window)
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bnqkgs,bskd->bnqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (k, v, kpos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, qpos, kpos, causal, window_static, softcap, scale):
+    # window_static: python int >= 0, or -1 meaning "traced" (then window
+    # rides in qpos aux — see blockwise_attention)
+    out, _ = _flash_fwd(q, k, v, qpos[0], kpos, causal, qpos[1], softcap,
+                        scale)
+    return out
+
+
+def _flash_f(q, k, v, qpos, kpos, causal, window_static, softcap, scale):
+    out, lse = _flash_fwd(q, k, v, qpos[0], kpos, causal, qpos[1], softcap,
+                          scale)
+    return out, (q, k, v, qpos, kpos, out, lse)
+
+
+def _flash_b(causal, window_static, softcap, scale, res, dout):
+    q, k, v, qpos_w, kpos, out, lse = res
+    qpos, window = qpos_w
+    B, nq, bq, KV, G, hd = q.shape
+    dout = dout.astype(jnp.float32)
+    delta = (dout * out.astype(jnp.float32)).sum(-1)       # [B,nq,bq,KV,G]
+
+    def body(dq_acc, inp):
+        kb, vb, kp = inp
+        sraw = jnp.einsum("bnqkgd,bskd->bnqkgs", q, kb,
+                          preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            t = jnp.tanh(sraw / softcap)
+            s = softcap * t
+            dcap = 1.0 - jnp.square(t)                     # ds_raw/ds
+        else:
+            s = sraw
+            dcap = None
+        mask = _attn_mask(qpos, kp, causal, window)
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                    # [B,nq,bq,KV,G,s]
+        dp = jnp.einsum("bnqkgd,bskd->bnqkgs", dout, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        if dcap is not None:
+            ds = ds * dcap
+        dv = jnp.einsum("bnqkgs,bnqkgd->bskd", p, dout)
+        dk = jnp.einsum("bnqkgs,bnqkgd->bskd", ds, q.astype(jnp.float32))
+        dq_acc = dq_acc + jnp.einsum("bnqkgs,bskd->bnqkgd", ds,
+                                     kb.astype(jnp.float32))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (k, v, kpos))
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            (jnp.zeros_like(qpos), jnp.zeros_like(window)),
+            jnp.zeros_like(kpos))
+
+
+_flash.defvjp(_flash_f, _flash_b)
+
+
+def blockwise_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 256,
+    block_kv: int = 512,
+    q_offset: int = 0,
+) -> Array:
+    """Streaming-softmax attention with O(block) backward memory.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd]; returns [B, Sq, H, hd].
+    GQA handled by grouping H into (KV, G). Window > 0 restricts attention
+    to the last ``window`` positions (sliding-window / gemma3 local layers;
+    may be a traced per-layer scalar).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_kv, Sk)
+    if Sq % bq:
+        bq = math.gcd(bq, Sq)   # e.g. cross-attn over 1600 image tokens
+    if Sk % bk:
+        bk = math.gcd(bk, Sk)
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qh = q.reshape(B, nq, bq, KV, G, hd)
+    kh = jnp.moveaxis(k.reshape(B, nk, bk, KV, hd), 1, 0)    # [nk,B,bk,KV,hd]
+    vh = jnp.moveaxis(v.reshape(B, nk, bk, KV, hd), 1, 0)
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32).reshape(nq, bq)
+    kpos = jnp.arange(Sk, dtype=jnp.int32).reshape(nk, bk)
+    w = jnp.asarray(window, jnp.int32)
+
+    out = _flash(qh, kh, vh, (qpos, w), kpos, causal, 0, softcap, scale)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# banded attention — static sliding window, O(S*w) instead of O(S^2)
+# (§Perf cell B: gemma3 local layers compute 5/6 of the stack; masking the
+# full S^2 wastes S/w = 32x at prefill_32k)
+# ---------------------------------------------------------------------------
+def banded_attention(q: Array, k: Array, v: Array, *, window: int,
+                     block: int = 512, softcap: float = 0.0) -> Array:
+    """Causal sliding-window attention computing only the kv blocks inside
+    the window band. window must be a python int > 0."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    assert Sq == Sk, "banded path is for self-attention prefill/train"
+    G = H // KV
+    b = min(block, Sq)
+    if Sq % b:
+        b = math.gcd(b, Sq)
+    n = Sq // b
+    nb = -(-window // b) + 1          # kv blocks per band
+    nb = min(nb, n)
+    scale = 1.0 / math.sqrt(hd)
+
+    qh = q.reshape(B, n, b, KV, G, hd)
+    kb = k.reshape(B, n, b, KV, hd)
+    vb = v.reshape(B, n, b, KV, hd)
+    # band indices: for q block i -> kv blocks [i-nb+1 .. i]
+    off = jnp.arange(nb, dtype=jnp.int32) - (nb - 1)
+    idx = jnp.arange(n, dtype=jnp.int32)[:, None] + off[None, :]  # [n, nb]
+    valid_blk = idx >= 0
+    idx_c = jnp.clip(idx, 0, n - 1)
+    bk = jnp.take(kb, idx_c, axis=1)   # [B, n, nb, b, KV, hd]
+    bv = jnp.take(vb, idx_c, axis=1)
+
+    qpos = jnp.arange(Sq, dtype=jnp.int32).reshape(n, b)
+    kpos = jnp.take(qpos, idx_c, axis=0)                  # [n, nb, b]
+    kpos = jnp.where(valid_blk[:, :, None], kpos, -1)
+
+    s = jnp.einsum("bnqkgd,bntskd->bnkgqts", qh, bk,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    # s: [B, n, KV, G, q=b, t=nb, s=b] -> flatten band, mask, softmax
+    sf = s.reshape(B, n, KV, G, b, nb * b)
+    mask = _banded_mask(qpos, kpos, window)               # [n, b, nb*b]
+    sf = jnp.where(mask[None, :, None, None], sf, NEG_INF)
+    p = jax.nn.softmax(sf, axis=-1)
+    out = jnp.einsum("bnkgqe,bnekd->bnqkgd", p.astype(v.dtype),
+                     bv.reshape(B, n, nb * b, KV, hd),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _banded_mask(qpos, kpos, window):
+    """[n, b(q), nb, b(s)] -> mask reshaped to [n, b, nb*b] laid out as
+    s's (q, t*s) trailing dims."""
+    dq = qpos[:, :, None, None]
+    dk = kpos[:, None, :, :]
+    m = (dk >= 0) & (dq >= dk) & ((dq - dk) < window)     # [n, b, nb, b]
+    n, b = qpos.shape
+    return m.reshape(n, b, -1)
+
+
+# ---------------------------------------------------------------------------
+# decode attention — one query token against a (possibly huge) cache
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, cur_index: Array, *,
+    window: int = 0, softcap: float = 0.0,
+) -> Array:
+    """q: [B, 1, H, hd]; caches: [B, S, KV, hd]; cur_index: scalar int32
+    (position of the query token; cache entries at positions <= cur_index
+    are valid). Works with the cache sequence dim sharded over the mesh
+    (flash-decoding: XLA partitions the max/sum reductions with psum).
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    mask = pos <= cur_index
+    w = jnp.asarray(window, jnp.int32)
+    mask &= jnp.where(w > 0, (cur_index - pos) < w, True)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projection + rope + core), shared by all transformer archs
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, n: int, cross: bool = False):
+    """Stacked attention params for ``n`` layers."""
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": stacked_dense_init(ks[0], n, cfg.d_model, cfg.q_dim, dtype),
+        "wk": stacked_dense_init(ks[1], n, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": stacked_dense_init(ks[2], n, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": stacked_dense_init(ks[3], n, cfg.q_dim, cfg.d_model, dtype,
+                                 scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((n, cfg.q_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n, cfg.kv_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n, cfg.kv_dim), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((n, cfg.head_dim), jnp.float32)
+        p["k_norm"] = jnp.ones((n, cfg.head_dim), jnp.float32)
+    return p
+
+
+def attn_qkv(p, x: Array, cfg, kv_x: Optional[Array] = None):
+    """Project to q/k/v heads. kv_x: cross-attention source (image embeds)."""
+    src = x if kv_x is None else kv_x
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    q = q.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def ffn_init(key, cfg, n: int, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    down_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    if cfg.ffn_kind == "gelu":
+        return {
+            "w_up": stacked_dense_init(ks[0], n, cfg.d_model, d_ff, dtype),
+            "w_down": stacked_dense_init(ks[1], n, d_ff, cfg.d_model, dtype,
+                                         scale=down_scale),
+        }
+    return {
+        "w_gate": stacked_dense_init(ks[0], n, cfg.d_model, d_ff, dtype),
+        "w_up": stacked_dense_init(ks[1], n, cfg.d_model, d_ff, dtype),
+        "w_down": stacked_dense_init(ks[2], n, d_ff, cfg.d_model, dtype,
+                                     scale=down_scale),
+    }
+
+
+def ffn_apply(p, x: Array) -> Array:
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding with vocab sharding-friendly loss
+# ---------------------------------------------------------------------------
+def embed_init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"table": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                   * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_apply(p, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_apply(p, x: Array) -> Array:
+    w = p["table"].T if "head" not in p else p["head"]
+    return x @ w
+
+
+def softmax_cross_entropy(logits: Array, labels: Array, mask: Array) -> Array:
+    """logits: [B, S, V] with V sharded over 'model'; labels: [B, S].
+
+    Written so the SPMD partitioner never gathers the vocab dim: max/sum
+    reductions partition into partial-reduce + psum, and the label
+    log-probability is a one-hot contraction (fuses into the reduce loop)
+    instead of a gather on the sharded axis.
+    """
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m                                     # bf16, sharded
+    sumexp = jnp.exp(shifted.astype(jnp.float32)).sum(axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    ll = (shifted.astype(jnp.float32) * onehot).sum(axis=-1) + \
+        m[..., 0].astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,159 @@
+"""Mamba-2 (SSD) block [arXiv:2405.21060] — used by the Zamba2 hybrid.
+
+State-space recurrence per head (scalar decay a_t per head):
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T,    y_t = C_t h_t + D x_t
+Chunked SSD form: within a chunk the decay couples only (t, s) scalars per
+head, so the intra-chunk term is a pure matmul (MXU-friendly); the O(hd*N)
+state crosses chunks via lax.scan. Decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+CONV_K = 4  # depthwise causal conv kernel size
+
+
+def layer_init(key, cfg: ModelConfig, n: int):
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * N
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((n, d), jnp.float32),
+        "in_proj": L.stacked_dense_init(ks[0], n, d, 2 * d_in + 2 * N + nh,
+                                        dtype),
+        "conv_w": (jax.random.normal(ks[1], (n, CONV_K, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(CONV_K))).astype(jnp.float32),
+        "A_log": jnp.zeros((n, nh), jnp.float32),     # a = exp(-exp(A_log)*dt)
+        "D": jnp.ones((n, nh), jnp.float32),
+        "dt_bias": jnp.zeros((n, nh), jnp.float32),
+        "gate_norm": jnp.ones((n, d_in), jnp.float32),
+        "out_proj": L.stacked_dense_init(ks[2], n, d_in, d, dtype,
+                                         scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def init_state(cfg: ModelConfig, n: int, batch_size: int, dtype=jnp.float32):
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * N
+    return {
+        "h": jnp.zeros((n, batch_size, nh, cfg.ssm_headdim, N), jnp.float32),
+        "conv": jnp.zeros((n, batch_size, CONV_K - 1, conv_dim), dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state, single: bool):
+    """Depthwise causal conv. x: [B,T,C]; w: [K,C]; conv_state: [B,K-1,C]."""
+    ctx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    new_state = ctx[:, -(CONV_K - 1):, :]
+    if single:
+        out = jnp.einsum("bkc,kc->bc", ctx, w.astype(x.dtype))[:, None, :]
+    else:
+        T = x.shape[1]
+        # gather K shifted views: out_t = sum_k w_k * ctx[t + k]
+        views = jnp.stack([ctx[:, i:i + T, :] for i in range(CONV_K)], axis=2)
+        out = jnp.einsum("btkc,kc->btc", views, w.astype(x.dtype))
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, B_, C_, a_log, h0, chunk: int):
+    """x: [B,T,nh,hd]; dt: [B,T,nh]; B_,C_: [B,T,N]; a_log: [B,T,nh] (log a);
+    h0: [B,nh,hd,N]. Returns (y [B,T,nh,hd], h)."""
+    Bb, T, nh, hd = x.shape
+    N = B_.shape[-1]
+    Cn = min(chunk, T)
+    assert T % Cn == 0
+    n = T // Cn
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape((Bb, n, Cn) + t.shape[2:]), 1, 0)
+
+    xs, dts, Bs, Cs, als = resh(x), resh(dt), resh(B_), resh(C_), resh(a_log)
+
+    def body(h, inp):
+        xc, dtc, Bc, Cc, alc = inp
+        xc = xc.astype(jnp.float32)
+        dtc = dtc.astype(jnp.float32)
+        Bc = Bc.astype(jnp.float32)
+        Cc = Cc.astype(jnp.float32)
+        cum = jnp.cumsum(alc, axis=1)                   # [B,C,nh] inclusive
+        # intra: score[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s, s<=t
+        G = jnp.einsum("btn,bsn->bts", Cc, Bc)          # [B,C,C]
+        Dm = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,t,s,nh]
+        tri = jnp.tril(jnp.ones((Cn, Cn), bool))
+        Dm = jnp.where(tri[None, :, :, None], Dm, 0.0)
+        scores = G[:, :, :, None] * Dm * dtc[:, None, :, :]
+        y = jnp.einsum("btsh,bshe->bthe", scores, xc)
+        # inter: y_t += exp(cum_t) C_t . h_in
+        decay_in = jnp.exp(cum)                          # [B,C,nh]
+        y = y + jnp.einsum("btn,bhen,bth->bthe", Cc, h, decay_in)
+        # state update: h = exp(cum_last) h + sum_s exp(cum_last-cum_s) dt_s x_s B_s^T
+        cum_last = cum[:, -1:, :]
+        w_s = jnp.exp(cum_last - cum) * dtc              # [B,C,nh]
+        h = jnp.exp(cum_last[:, 0])[:, :, None, None] * h + jnp.einsum(
+            "bsh,bshe,bsn->bhen", w_s, xc, Bc)
+        return h, y
+
+    # remat per chunk (the [B,C,C,nh] decay tensor must not be saved per
+    # chunk by the scan's AD)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, ys = jax.lax.scan(body, h0.astype(jnp.float32),
+                         (xs, dts, Bs, Cs, als))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, T, nh, hd)
+    return y.astype(x.dtype), h
+
+
+def _ssd_step(x, dt, B_, C_, a_log, h):
+    """Single-token recurrence. x: [B,nh,hd]; dt,a_log: [B,nh]; B_,C_: [B,N]."""
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(a_log.astype(jnp.float32))               # [B,nh]
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhe,bn->bhen", dt.astype(jnp.float32), xf, B_.astype(jnp.float32))
+    y = jnp.einsum("bn,bhen->bhe", C_.astype(jnp.float32), h)
+    return y.astype(x.dtype), h
+
+
+def block_apply(pb, x, cfg: ModelConfig, state, *, chunk=64, single=False):
+    """One Mamba2 block. x: [B,T,d]; state: {'h','conv'} for this layer."""
+    B, T, d = x.shape
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    hd = cfg.ssm_headdim
+    nh = d_in // hd
+
+    resid = x
+    xn = L.rms_norm(x, pb["norm"], cfg.norm_eps)
+    proj = xn @ pb["in_proj"]
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt_raw = xbc_dt[..., :d_in + 2 * N], xbc_dt[..., d_in + 2 * N:]
+    xbc, conv_state = _causal_conv(xbc, pb["conv_w"], state["conv"], single)
+    xs = xbc[..., :d_in].reshape(B, T, nh, hd)
+    B_ = xbc[..., d_in:d_in + N]
+    C_ = xbc[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         pb["dt_bias"][None, None, :])    # [B,T,nh]
+    a_log = -jnp.exp(pb["A_log"])[None, None, :] * dt     # log a_t  [B,T,nh]
+
+    if single:
+        y, h = _ssd_step(xs[:, 0], dt[:, 0], B_[:, 0], C_[:, 0],
+                         a_log[:, 0], state["h"])
+        y = y[:, None]
+    else:
+        y, h = _ssd_chunked(xs, dt, B_, C_, a_log, state["h"], chunk)
+    y = y + xs * pb["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, T, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), pb["gate_norm"], cfg.norm_eps)
+    out = y @ pb["out_proj"]
+    return resid + out, {"h": h, "conv": conv_state}

@@ -1,0 +1,74 @@
+"""Family dispatcher: one API over transformer / rwkv6 / zamba2 backbones.
+
+    params = init(key, cfg)
+    logits, aux, _     = apply_train(params, cfg, ctx, batch)
+    logits, _, cache   = apply_prefill(params, cfg, ctx, batch)
+    logits, _, cache   = apply_decode(params, cfg, ctx, batch, cache, idx)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.meshctx import MeshCtx
+from repro.models import hybrid, rwkv6, transformer
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def init(key, cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6.init(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init(key, cfg)
+    return transformer.init(key, cfg)
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return hybrid
+    return transformer
+
+
+def apply_train(params, cfg, ctx: MeshCtx, batch, remat=True):
+    return _mod(cfg).forward(params, cfg, ctx, batch, mode="train",
+                             remat=remat)
+
+
+def apply_prefill(params, cfg, ctx: MeshCtx, batch, remat=True):
+    return _mod(cfg).forward(params, cfg, ctx, batch, mode="prefill",
+                             remat=remat)
+
+
+def apply_decode(params, cfg, ctx: MeshCtx, batch, caches, cur_index,
+                 remat=False):
+    return _mod(cfg).forward(params, cfg, ctx, batch, mode="decode",
+                             remat=remat, caches=caches, cur_index=cur_index)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    if cfg.family == "ssm":
+        return rwkv6.init_state(cfg, batch_size, jnp.dtype(cfg.dtype))
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch_size, max_len)
+    return transformer.init_cache(cfg, batch_size, max_len)
+
+
+def loss_fn(params, cfg, ctx, batch, remat=True):
+    """Next-token cross-entropy + MoE aux. batch: tokens/embeds + labels?"""
+    from repro.models.layers import softmax_cross_entropy
+    logits, aux, _ = apply_train(params, cfg, ctx, batch, remat=remat)
+    if "labels" in batch:
+        labels = batch["labels"]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        lg = logits
+    else:
+        tokens = batch["tokens"]
+        labels = tokens[:, 1:]
+        lg = logits[:, :-1]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    ce = softmax_cross_entropy(lg, labels, mask)
+    return ce + 0.01 * aux, (ce, aux)

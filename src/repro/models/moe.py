@@ -1,0 +1,250 @@
+"""Mixture-of-Experts block with expert parallelism (EP).
+
+Dispatch is MegaBlocks-style adapted to TPU/SPMD (DESIGN.md §5):
+
+  router top-k -> sort assignments by destination expert shard -> capacity
+  slice -> all_to_all along the ``model`` (EP) axis -> per-expert matmul via
+  a lax.scan over local experts with capacity-sized blocks -> all_to_all
+  back -> weighted combine.
+
+Run inside ``shard_map`` so the all_to_all is explicit; tokens are sharded
+over (dp axes x model axis) during dispatch (sequence dim over ``model`` —
+a sequence-parallel region), expert weights are sharded E over ``model``
+(EP) and d over ``data`` (FSDP, gathered per layer with an explicit
+all_gather).
+
+The same hierarchical top-k + sort-dispatch machinery the paper uses for
+result reporting (§III.B "documentIDs with high scores are reported") backs
+the routing here — see repro.core.topk.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshctx import MeshCtx
+from repro.models.layers import stacked_dense_init
+
+Array = jax.Array
+
+
+@jax.custom_vjp
+def _same_dtype_grad(x):
+    """Identity whose cotangent is cast back to x's dtype — stops the
+    router einsum's fp32 VJP (preferred_element_type propagates into the
+    transpose rule) from promoting the residual-stream backward chain to
+    fp32 (measured: 2x collective bytes on kimi train_4k)."""
+    return x
+
+
+def _sdg_fwd(x):
+    return x, jnp.zeros((), x.dtype)
+
+
+def _sdg_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+_same_dtype_grad.defvjp(_sdg_fwd, _sdg_bwd)
+
+
+def moe_init(key, cfg, n: int):
+    """Stacked MoE params for n layers."""
+    E, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    down_std = 1.0 / math.sqrt(ff)
+
+    def experts(k, d_in, d_out, s):
+        return (jax.random.truncated_normal(
+            k, -3.0, 3.0, (n, E, d_in, d_out), jnp.float32) * s).astype(dtype)
+
+    p = {
+        "router": (jax.random.truncated_normal(
+            ks[0], -3.0, 3.0, (n, d, E), jnp.float32) * std),  # fp32 router
+        "w_gate": experts(ks[1], d, ff, std),
+        "w_up": experts(ks[2], d, ff, std),
+        "w_down": experts(ks[3], ff, d, down_std),
+    }
+    if cfg.n_shared_experts > 0:
+        ff_sh = cfg.n_shared_experts * ff
+        p["shared"] = {
+            "w_gate": stacked_dense_init(ks[4], n, d, ff_sh, dtype),
+            "w_up": stacked_dense_init(jax.random.fold_in(ks[4], 1), n, d, ff_sh, dtype),
+            "w_down": stacked_dense_init(jax.random.fold_in(ks[4], 2), n, ff_sh, d, dtype),
+        }
+    return p
+
+
+def _expert_ffn_scan(x_sorted: Array, starts: Array, counts: Array,
+                     w_gate: Array, w_up: Array, w_down: Array,
+                     cap: int) -> Array:
+    """Per-expert SwiGLU over capacity-sized dynamic slices of the sorted
+    token buffer. x_sorted: [N, d]; w_*: [E_loc, ...]. Returns [N, d]."""
+    N, d = x_sorted.shape
+    E_loc = w_gate.shape[0]
+    out0 = jnp.zeros((N, d), x_sorted.dtype)
+
+    def body(out, inp):
+        wg, wu, wd, start, count = inp
+        s = jnp.clip(start, 0, max(N - cap, 0))
+        rows = jax.lax.dynamic_slice_in_dim(x_sorted, s, cap, axis=0)
+        idx = s + jnp.arange(cap, dtype=jnp.int32)
+        valid = (idx >= start) & (idx < start + count)
+        h = (jax.nn.silu(rows @ wg) * (rows @ wu)) @ wd
+        h = jnp.where(valid[:, None], h, 0)
+        out = out.at[idx].add(h, mode="drop")
+        return out, None
+
+    out, _ = jax.lax.scan(body, out0, (w_gate, w_up, w_down, starts, counts))
+    return out
+
+
+def _a2a_maybe_int8(x: Array, tp_axis: str) -> Array:
+    """Dispatch all_to_all, optionally int8-quantized per token row
+    (a2a_int8 flag): 2x wire bytes vs bf16, DeepSeek-V3 fp8-dispatch style
+    and the paper's bandwidth-efficient-encoding insight on ICI. Error
+    feedback is unnecessary: quantization is per-row absmax and the value
+    is consumed once."""
+    from repro.models import perfcfg
+    if not perfcfg.flag("a2a_int8"):
+        return jax.lax.all_to_all(x, tp_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    q = jax.lax.all_to_all(q, tp_axis, split_axis=0, concat_axis=0,
+                           tiled=False)
+    s = jax.lax.all_to_all(scale, tp_axis, split_axis=0, concat_axis=0,
+                           tiled=False)
+    return (q.astype(jnp.float32) * s).astype(x.dtype)
+
+
+def _dispatch_local(x: Array, router: Array, w_gate: Array, w_up: Array,
+                    w_down: Array, *, cfg, tp_axis: str, M: int) -> Tuple[Array, Array]:
+    """Per-device body under shard_map. x: [T_loc, d] local tokens;
+    w_*: [E_loc, ...] local expert shards (d already FSDP-gathered)."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // M
+
+    from repro.models import perfcfg
+    if perfcfg.flag("router_bf16_matmul"):
+        # bf16 matmul, fp32 accumulation: keeps the x-cotangent bf16 (an
+        # fp32 cast here promotes the whole residual stream's backward
+        # collectives to fp32 — measured 2x collective bytes, kimi train)
+        logits = jnp.einsum("td,de->te", _same_dtype_grad(x),
+                            router.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = (x.astype(jnp.float32) @ router)                 # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_id = jax.lax.top_k(probs, k)                   # [T, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- aux load-balancing loss (global over all shards) -------------------
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_id.reshape(-1)].add(
+        1.0 / (T * k))
+    me = jax.lax.pmean(me, axis_name=tp_axis)
+    ce = jax.lax.pmean(ce, axis_name=tp_axis)
+    aux = E * jnp.sum(me * ce)
+
+    # --- send-side sort by destination shard --------------------------------
+    cap_send = int(math.ceil(T * k / M * cfg.capacity_factor))
+    flat_eid = expert_id.reshape(-1)                              # [T*k]
+    flat_tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_gw = gate_w.reshape(-1)
+    dest = flat_eid // E_loc
+    order = jnp.argsort(dest, stable=True)
+    s_dest, s_eid, s_tok, s_gw = dest[order], flat_eid[order], flat_tok[order], flat_gw[order]
+    counts = jnp.zeros((M,), jnp.int32).at[s_dest].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[s_dest]
+    keep = pos < cap_send
+    slot = jnp.where(keep, s_dest * cap_send + pos, M * cap_send)  # drop slot
+
+    send_x = jnp.zeros((M * cap_send, d), x.dtype).at[slot].set(
+        x[s_tok], mode="drop")
+    send_le = jnp.full((M * cap_send,), E_loc, jnp.int32).at[slot].set(
+        s_eid % E_loc, mode="drop")                                # local expert id
+    # bookkeeping to combine on the way back (stays on source device)
+    slot_tok = jnp.full((M * cap_send,), -1, jnp.int32).at[slot].set(
+        s_tok, mode="drop")
+    slot_gw = jnp.zeros((M * cap_send,), jnp.float32).at[slot].set(
+        s_gw, mode="drop")
+
+    # --- all_to_all to expert shards ----------------------------------------
+    recv_x = _a2a_maybe_int8(send_x.reshape(M, cap_send, d), tp_axis)
+    recv_le = jax.lax.all_to_all(send_le.reshape(M, cap_send), tp_axis,
+                                 split_axis=0, concat_axis=0, tiled=False)
+    N = M * cap_send
+    recv_x = recv_x.reshape(N, d)
+    recv_le = recv_le.reshape(N)
+
+    # --- local expert compute (sorted, capacity-sliced scan) -----------------
+    order2 = jnp.argsort(recv_le, stable=True)
+    xs = recv_x[order2]
+    le_sorted = recv_le[order2]
+    counts2 = jnp.zeros((E_loc + 1,), jnp.int32).at[le_sorted].add(1)
+    counts2 = counts2[:E_loc]
+    starts2 = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts2)[:-1]])
+    cap_exp = int(math.ceil(N / max(E_loc, 1) * cfg.capacity_factor))
+    cap_exp = min(cap_exp, N)
+    ys = _expert_ffn_scan(xs, starts2, counts2, w_gate, w_up, w_down, cap_exp)
+    out_recv = jnp.zeros((N, d), x.dtype).at[order2].set(ys)
+
+    # --- all_to_all back + weighted combine ----------------------------------
+    back = _a2a_maybe_int8(out_recv.reshape(M, cap_send, d), tp_axis)
+    back = back.reshape(N, d)
+    contrib = back * slot_gw[:, None].astype(back.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[slot_tok].add(contrib, mode="drop")
+    return y, aux
+
+
+def moe_apply(p_layer, x: Array, cfg, ctx: MeshCtx) -> Tuple[Array, Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux scalar). p_layer holds this layer's
+    slices: router [d,E], w_gate/w_up [E,d,ff], w_down [E,ff,d]."""
+    B, S, d = x.shape
+    M = ctx.tp_size
+    seq_shard = S % M == 0 and S >= M
+    xs_spec = P(ctx.dp_axes, ctx.tp_axis if seq_shard else None, None)
+    wg_spec = P(ctx.tp_axis, ctx.fsdp_axis, None)
+    wd_spec = P(ctx.tp_axis, None, ctx.fsdp_axis)
+
+    @functools.partial(
+        shard_map, mesh=ctx.mesh,
+        in_specs=(xs_spec, P(None, None), wg_spec, wg_spec, wd_spec),
+        out_specs=(xs_spec, P()),
+        check_vma=False)
+    def run(xb, router, wg, wu, wd):
+        # FSDP gather of the expert weights for this layer (explicit)
+        wg = jax.lax.all_gather(wg, ctx.fsdp_axis, axis=1, tiled=True)
+        wu = jax.lax.all_gather(wu, ctx.fsdp_axis, axis=1, tiled=True)
+        wd = jax.lax.all_gather(wd, ctx.fsdp_axis, axis=2, tiled=True)
+        Bl, Sl = xb.shape[0], xb.shape[1]
+        y, aux = _dispatch_local(
+            xb.reshape(Bl * Sl, d), router, wg, wu, wd,
+            cfg=cfg, tp_axis=ctx.tp_axis, M=M)
+        aux = jax.lax.pmean(aux, ctx.fsdp_axis)
+        for ax in ctx.dp_axes:
+            if ax != ctx.fsdp_axis:
+                aux = jax.lax.pmean(aux, ax)
+        return y.reshape(Bl, Sl, d), aux
+
+    y, aux = run(x, p_layer["router"], p_layer["w_gate"], p_layer["w_up"],
+                 p_layer["w_down"])
+
+    if "shared" in p_layer:
+        sh = p_layer["shared"]
+        y = y + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+    return y, aux

@@ -1,0 +1,58 @@
+"""Performance-variant flags (§Perf hillclimb knobs).
+
+Each flag is an independent, measurable change; the dryrun CLI sets them
+via --variant so before/after HLO comparisons are one command apart.
+
+  router_bf16_matmul  (default ON): MoE router as a bf16 matmul with fp32
+      accumulation (preferred_element_type) instead of casting activations
+      to fp32 — the cast promoted the *residual-stream cotangent* to fp32,
+      doubling every cross-layer collective (measured on kimi train_4k).
+  sp_residual: keep the residual stream sequence-sharded over the model
+      axis between blocks (Megatron-SP style); attention gathers what it
+      needs.
+  banded_local: gemma3-style local layers use O(S*w) banded attention via
+      a static-window superblock scan instead of masked O(S^2).
+  seq_shard_attn: shard attention compute over the *sequence* on the model
+      axis when head counts don't divide it (qwen2 14H, gemma3 8H,
+      musicgen 24H on a 16-way axis) — replicated attention was 16x wasted
+      compute.
+"""
+_FLAGS = {
+    "router_bf16_matmul": True,
+    "sp_residual": False,
+    "banded_local": False,
+    "seq_shard_attn": False,
+    "a2a_int8": False,
+}
+
+VARIANTS = {
+    "base": {},
+    "spresid": {"sp_residual": True},
+    "banded": {"banded_local": True, "seq_shard_attn": True},
+    "seqattn": {"seq_shard_attn": True},
+    "a2aint8": {"sp_residual": True, "a2a_int8": True},
+    "compressed": {},   # int8 pod-axis gradient all-reduce (dryrun --compress)
+    "allopt": {"sp_residual": True, "banded_local": True,
+               "seq_shard_attn": True, "a2a_int8": True},
+    "paperfaithful": {"router_bf16_matmul": False},
+}
+
+
+def set_flags(**kw):
+    for k, v in kw.items():
+        assert k in _FLAGS, k
+        _FLAGS[k] = v
+
+
+def set_variant(name: str):
+    reset()
+    set_flags(**VARIANTS[name])
+
+
+def reset():
+    _FLAGS.update(router_bf16_matmul=True, sp_residual=False,
+                  banded_local=False, seq_shard_attn=False, a2a_int8=False)
+
+
+def flag(name: str) -> bool:
+    return _FLAGS[name]

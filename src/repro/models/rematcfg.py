@@ -1,0 +1,36 @@
+"""Rematerialization policy knob (a §Perf hillclimb axis).
+
+  minimal — nothing_saveable: full per-layer remat; activations are just
+            the scan carries (L x [B,S,d]). Memory-lean default; backward
+            recomputes the layer.
+  dots    — dots_with_no_batch_dims_saveable: saves projection outputs
+            (d_ff-sized) — ~30x more activation memory at qwen2 scale
+            (measured: 82.8 GB vs 2.9 GB temp per device, train_4k), in
+            exchange for no matmul recompute.
+  none    — no remat (only for tiny smoke configs).
+"""
+import jax
+
+_POLICY = "minimal"
+
+
+def set_policy(name: str):
+    global _POLICY
+    assert name in ("minimal", "dots", "none")
+    _POLICY = name
+
+
+def policy_name() -> str:
+    return _POLICY
+
+
+def wrap(fn):
+    """Apply the active remat policy to a scan body."""
+    if _POLICY == "none":
+        return fn
+    if _POLICY == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)

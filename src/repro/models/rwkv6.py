@@ -1,0 +1,243 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix uses the WKV recurrence
+    o_t = r_t^T (diag(u) k_t v_t^T + S_t),   S_{t+1} = diag(w_t) S_t + k_t v_t^T
+with per-channel data-dependent decay w_t = exp(-exp(w0 + tanh(x W_A) W_B)).
+Training/prefill run a *chunked* form: within a chunk the pairwise decay
+tensor D[t,s,d] = exp(cum_{t-1} - cum_s) is materialized (numerically safe —
+no exp(+large)), across chunks an O(hd^2) state is carried by lax.scan.
+Decode is the O(1)-state recurrence — the reason this arch runs long_500k.
+
+Simplifications vs the released model (DESIGN.md §8): static token-shift
+lerp coefficients (the ddlerp LoRA is kept only for the decay, which is the
+paper's headline mechanism); per-head RMS norm in place of GroupNorm.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import rematcfg
+
+Array = jax.Array
+LORA_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _layer_init(key, cfg: ModelConfig, n: int):
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+
+    def mat(k, i, o, scale=1.0):
+        return L.stacked_dense_init(k, n, i, o, dtype, scale)
+
+    tm = {
+        "mu_r": jnp.full((n, d), 0.5, jnp.float32),
+        "mu_k": jnp.full((n, d), 0.5, jnp.float32),
+        "mu_v": jnp.full((n, d), 0.5, jnp.float32),
+        "mu_g": jnp.full((n, d), 0.5, jnp.float32),
+        "mu_w": jnp.full((n, d), 0.5, jnp.float32),
+        "w0": jnp.full((n, d), -2.0, jnp.float32),   # base decay ~exp(-exp(-2))
+        "wA": mat(ks[0], d, LORA_DIM) * 0.1,
+        "wB": mat(ks[1], LORA_DIM, d) * 0.1,
+        "u": jnp.zeros((n, H, hd), jnp.float32),
+        "wr": mat(ks[2], d, d), "wk": mat(ks[3], d, d),
+        "wv": mat(ks[4], d, d), "wg": mat(ks[5], d, d),
+        "wo": mat(ks[6], d, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "ln_x": jnp.ones((n, d), jnp.float32),
+    }
+    cm = {
+        "mu_r": jnp.full((n, d), 0.5, jnp.float32),
+        "mu_k": jnp.full((n, d), 0.5, jnp.float32),
+        "wr": mat(ks[7], d, d),
+        "wk": mat(ks[8], d, ff),
+        "wv": mat(ks[9], ff, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    return {
+        "ln1": jnp.ones((n, d), jnp.float32),
+        "ln2": jnp.ones((n, d), jnp.float32),
+        "tm": tm, "cm": cm,
+    }
+
+
+def init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": L.embed_init(k1, cfg),
+        "blocks": _layer_init(k2, cfg, cfg.n_layers),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV chunked scan
+# ---------------------------------------------------------------------------
+def _wkv_chunked(r, k, v, lw, u, state, chunk: int):
+    """r,k,v: [B,T,H,hd]; lw: [B,T,H,hd] log-decay (<=0); u: [H,hd];
+    state: [B,H,hd,hd]. Returns (out [B,T,H,hd], state)."""
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    assert T % C == 0
+    n = T // C
+
+    def resh(x):  # [B,T,H,hd] -> [n, B, H, C, hd]
+        return jnp.moveaxis(x.reshape(B, n, C, H, hd), (1, 3), (0, 2))
+
+    r_, k_, v_, lw_ = resh(r), resh(k), resh(v), resh(lw)
+
+    def body(S, inp):
+        rc, kc, vc, lwc = (x.astype(jnp.float32) for x in inp)  # [B,H,C,hd]
+        cum = jnp.cumsum(lwc, axis=2)                    # inclusive
+        cum_prev = cum - lwc                             # cum_{t-1}
+        # intra-chunk pairwise decay D[t,s,d] = exp(cum_prev[t] - cum[s]) s<t
+        D = jnp.exp(cum_prev[:, :, :, None, :] - cum[:, :, None, :, :])
+        tri = jnp.tril(jnp.ones((C, C), bool), -1)
+        D = jnp.where(tri[None, None, :, :, None], D, 0.0)
+        A = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc, kc, D)
+        A = A + jnp.einsum("bhtd,bhtd->bht", rc * u[None, :, None, :], kc)[
+            ..., None] * jnp.eye(C)[None, None]
+        y = jnp.einsum("bhts,bhse->bhte", A, vc)
+        # inter-chunk: r'_t = r_t * exp(cum_prev_t) applied to incoming state
+        y = y + jnp.einsum("bhtd,bhde->bhte", rc * jnp.exp(cum_prev), S)
+        # state update
+        cum_last = cum[:, :, -1:, :]
+        k_dec = kc * jnp.exp(cum_last - cum)
+        S = jnp.exp(cum_last[:, :, 0, :])[..., None] * S + jnp.einsum(
+            "bhsd,bhse->bhde", k_dec, vc)
+        return S, y
+
+    # remat per chunk: the inner scan's AD would otherwise save the
+    # [B,H,C,C,hd] decay tensor for every chunk
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (r_, k_, v_, lw_))
+    out = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(B, T, H, hd)
+    return out.astype(r.dtype), state
+
+
+def _wkv_step(r, k, v, lw, u, state):
+    """Single decode step. r,k,v,lw: [B,H,hd]; state: [B,H,hd,hd]."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    att = state + u[None, :, :, None] * kf[..., None] * vf[..., None, :]
+    out = jnp.einsum("bhd,bhde->bhe", rf, att)
+    state = jnp.exp(lw.astype(jnp.float32))[..., None] * state + \
+        kf[..., None] * vf[..., None, :]
+    return out.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _shift(x, last):
+    """Token shift: previous token's value. last: [B,1,d] carried state."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _time_mix(p, x, cfg, state, chunk=64, single=False):
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    xprev = state["tm_x"][:, None, :] if single else _shift(x, state["tm_x"][:, None, :])
+
+    def lerp(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["wg"])
+    xw = lerp(p["mu_w"]).astype(jnp.float32)
+    lw = -jnp.exp(p["w0"][None, None] +
+                  jnp.tanh(xw @ p["wA"].astype(jnp.float32))
+                  @ p["wB"].astype(jnp.float32))         # log w_t <= 0
+
+    def heads(t):
+        return t.reshape(B, T, H, hd)
+
+    u = p["u"]
+    if single:
+        o, s_new = _wkv_step(heads(r)[:, 0], heads(k)[:, 0], heads(v)[:, 0],
+                             lw.reshape(B, T, H, hd)[:, 0], u, state["wkv"])
+        o = o[:, None]
+    else:
+        o, s_new = _wkv_chunked(heads(r), heads(k), heads(v),
+                                lw.reshape(B, T, H, hd), u, state["wkv"],
+                                chunk)
+    # per-head norm then gate
+    o = L.rms_norm(o, jnp.ones((hd,), jnp.float32), cfg.norm_eps)
+    o = o.reshape(B, T, d) * p["ln_x"].astype(o.dtype)
+    out = (o * g) @ p["wo"]
+    new_state = {"wkv": s_new, "tm_x": x[:, -1, :]}
+    return out, new_state
+
+
+def _channel_mix(p, x, state, single=False):
+    xprev = state["cm_x"][:, None, :] if single else _shift(x, state["cm_x"][:, None, :])
+
+    def lerp(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    r = jax.nn.sigmoid(lerp(p["mu_r"]) @ p["wr"])
+    k = jnp.square(jax.nn.relu(lerp(p["mu_k"]) @ p["wk"]))
+    return r * (k @ p["wv"]), {"cm_x": x[:, -1, :]}
+
+
+def block_apply(pb, x, cfg, state, *, chunk=64, single=False):
+    y, tm_state = _time_mix(pb["tm"], L.rms_norm(x, pb["ln1"], cfg.norm_eps),
+                            cfg, state, chunk=chunk, single=single)
+    x = x + y
+    y, cm_state = _channel_mix(pb["cm"], L.rms_norm(x, pb["ln2"], cfg.norm_eps),
+                               state, single=single)
+    x = x + y
+    return x, {**tm_state, **cm_state}
+
+
+# ---------------------------------------------------------------------------
+# model-level forward
+# ---------------------------------------------------------------------------
+def init_state(cfg: ModelConfig, batch_size: int, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    n = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((n, batch_size, H, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((n, batch_size, d), dtype),
+        "cm_x": jnp.zeros((n, batch_size, d), dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, ctx, batch, *, mode="train",
+            remat=True, caches=None, cur_index=None, chunk=64):
+    x = L.embed_apply(params["embed"], batch["tokens"])
+    B = x.shape[0]
+    state = caches if caches is not None else init_state(cfg, B, x.dtype)
+    single = mode == "decode"
+
+    def body(carry, inp):
+        x, = carry
+        pb, st = inp
+        x, st_new = block_apply(pb, x, cfg, st, chunk=chunk, single=single)
+        x = jax.lax.with_sharding_constraint(
+            x, ctx.sharding(ctx.dp_axes, None, None))
+        return (x,), st_new
+
+    if remat:
+        body = rematcfg.wrap(body)
+    (x,), new_state = jax.lax.scan(body, (x,), (params["blocks"], state))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x)
+    logits = jax.lax.with_sharding_constraint(
+        logits, ctx.sharding(ctx.dp_axes, None, ctx.tp_axis))
+    return logits, jnp.float32(0), new_state

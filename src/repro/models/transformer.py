@@ -1,0 +1,417 @@
+"""Decoder-only transformer covering the dense / MoE / VLM / audio archs.
+
+One parameterized implementation:
+  - GQA attention with RoPE, optional qkv-bias (qwen2), qk-norm (qwen3,
+    gemma3), sliding-window local:global mix (gemma3);
+  - SwiGLU / GELU FFN or MoE block (kimi-k2, qwen3-moe) with EP dispatch;
+  - cross-attention "superblocks" for the VLM (llama-3.2-vision): 4 self
+    layers + 1 cross-attn layer per superblock, scanned over 20 superblocks;
+  - audio backbone (musicgen): embeddings-in (stub EnCodec frontend).
+
+Layer stacks are scanned; per-layer heterogeneity (gemma3 window pattern)
+rides along as scan xs so the HLO stays O(1) in depth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.meshctx import MeshCtx
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import perfcfg
+from repro.models import rematcfg
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig, n: int, kind: str):
+    """kind: dense | moe | cross."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((n, cfg.d_model), jnp.float32),
+        "attn": L.attn_init(k1, cfg, n, cross=(kind == "cross")),
+        "ln2": jnp.ones((n, cfg.d_model), jnp.float32),
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.moe_init(k2, cfg, n)
+    else:
+        d_ff = cfg.d_ff
+        if kind == "dense_lead" and cfg.d_ff_dense:
+            d_ff = cfg.d_ff_dense
+        p["mlp"] = L.ffn_init(k3, cfg, n, d_ff=d_ff)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 8)
+    p = {"embed": L.embed_init(keys[0], cfg),
+         "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "vlm":
+        n_sb = cfg.n_layers // cfg.cross_attn_every
+        p["self_blocks"] = _block_init(
+            keys[1], cfg, n_sb * cfg.cross_attn_every, "dense")
+        p["cross_blocks"] = _block_init(keys[2], cfg, n_sb, "cross")
+    elif cfg.n_experts > 0:
+        nd = cfg.first_k_dense
+        if nd:
+            cfg_lead = cfg
+            p["dense_blocks"] = _block_init(keys[1], cfg_lead, nd, "dense_lead")
+        p["moe_blocks"] = _block_init(keys[2], cfg, cfg.n_layers - nd, "moe")
+    else:
+        p["blocks"] = _block_init(keys[1], cfg, cfg.n_layers, "dense")
+    return p
+
+
+def window_schedule(cfg: ModelConfig, n: int) -> Array:
+    """Per-layer sliding window (0 = global). gemma3: 5 local : 1 global."""
+    if cfg.local_global_ratio > 0 and cfg.sliding_window > 0:
+        per = cfg.local_global_ratio + 1
+        w = [cfg.sliding_window if (i % per) != (per - 1) else 0
+             for i in range(n)]
+    elif cfg.sliding_window > 0:
+        w = [cfg.sliding_window] * n
+    else:
+        w = [0] * n
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+def _self_attn(pb, x, cfg, *, positions, window, mode, cache=None,
+               cur_index=None, ctx=None, static_window=0):
+    """pb: block params {'ln1', 'attn', ...}. Returns (attn_out, kv).
+
+    static_window > 0 (python int) + banded_local flag -> O(S*w) banded
+    attention. seq_shard_attn flag + unshardable heads -> attention compute
+    sharded over the sequence on the model axis (q seq-sharded, kv full).
+    """
+    ap = pb["attn"]
+    q, k, v = L.attn_qkv(ap, L_norm(x, pb["ln1"], cfg), cfg)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k_rot = L.rope(k, positions, cfg.rope_theta)
+    if mode in ("train", "prefill"):
+        S = q.shape[1]
+        if (ctx is not None and perfcfg.flag("seq_shard_attn")
+                and cfg.n_heads % ctx.tp_size != 0
+                and S % ctx.tp_size == 0 and S >= 1024):
+            q = jax.lax.with_sharding_constraint(
+                q, ctx.sharding(ctx.dp_axes, ctx.tp_axis, None, None))
+            k_rot = jax.lax.with_sharding_constraint(
+                k_rot, ctx.sharding(ctx.dp_axes, None, None, None))
+            v = jax.lax.with_sharding_constraint(
+                v, ctx.sharding(ctx.dp_axes, None, None, None))
+        if static_window > 0 and perfcfg.flag("banded_local"):
+            out = L.banded_attention(q, k_rot, v, window=static_window,
+                                     softcap=cfg.attn_logit_softcap)
+        else:
+            out = L.blockwise_attention(
+                q, k_rot, v, causal=True, window=window,
+                softcap=cfg.attn_logit_softcap)
+        new_kv = (k_rot, v)
+    else:  # decode: cache = (k_cache, v_cache) [B, S, KV, hd]
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_rot.astype(k_cache.dtype), cur_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cur_index, axis=1)
+        out = L.decode_attention(q, k_cache, v_cache, cur_index,
+                                 window=window,
+                                 softcap=cfg.attn_logit_softcap)
+        new_kv = (k_cache, v_cache)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.q_dim) @ ap["wo"], new_kv
+
+
+def L_norm(x, scale, cfg):
+    return L.rms_norm(x, scale, cfg.norm_eps)
+
+
+def _cross_attn(pb, x, img_kv, cfg):
+    """Cross-attention onto precomputed image K/V. img_kv: (k, v)
+    [B, n_img, KV, hd]. Non-causal."""
+    q = (L_norm(x, pb["ln1"], cfg) @ pb["attn"]["wq"])
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if "q_norm" in pb["attn"]:
+        q = L.rms_norm(q, pb["attn"]["q_norm"], cfg.norm_eps)
+    k, v = img_kv
+    out = L.blockwise_attention(q, k, v, causal=False, window=0,
+                                block_q=min(256, S),
+                                block_kv=min(512, k.shape[1]))
+    x = x + out.reshape(B, S, cfg.q_dim) @ pb["attn"]["wo"]
+    x = x + L.ffn_apply(pb["mlp"], L_norm(x, pb["ln2"], cfg))
+    return x
+
+
+def _image_kv(pb_cross, image_embeds, cfg):
+    """Precompute cross-attn K/V from image embeddings for all cross blocks.
+    image_embeds: [B, n_img, d]; returns stacked (k, v) [n_cross, B, n_img, KV, hd]."""
+    def one(p):
+        B, n_img = image_embeds.shape[:2]
+        k = (image_embeds @ p["wk"]).reshape(B, n_img, cfg.n_kv_heads, cfg.head_dim)
+        v = (image_embeds @ p["wv"]).reshape(B, n_img, cfg.n_kv_heads, cfg.head_dim)
+        if "k_norm" in p:
+            k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+        return k, v
+    return jax.vmap(one)(pb_cross["attn"])
+
+
+def _mlp_or_moe(pb, x, cfg, ctx):
+    if "moe" in pb:
+        y, aux = moe_lib.moe_apply(pb["moe"], L_norm(x, pb["ln2"], cfg), cfg, ctx)
+        return x + y, aux
+    return x + L.ffn_apply(pb["mlp"], L_norm(x, pb["ln2"], cfg)), jnp.float32(0)
+
+
+def _dense_stack(blocks, x, cfg, ctx, *, positions, windows, mode,
+                 caches=None, cur_index=None, remat=True, moe=False):
+    """Scan a stacked block group. caches: (k,v) stacks [n,B,S,KV,hd] for
+    decode. Returns (x, aux_sum, new_caches or kv stacks)."""
+    dp_spec = P(ctx.dp_axes, None, None)
+
+    def resid_spec(x):
+        # sp_residual: residual stream stays sequence-sharded on the model
+        # axis between blocks (Megatron-SP) — halves the per-layer
+        # reshard collectives around the MoE shard_map region
+        if perfcfg.flag("sp_residual") and x.shape[1] % ctx.tp_size == 0 \
+                and x.shape[1] >= ctx.tp_size:
+            return ctx.sharding(ctx.dp_axes, ctx.tp_axis, None)
+        return ctx.sharding(ctx.dp_axes, None, None)
+
+    def body(carry, inp):
+        x, aux = carry
+        if mode == "decode":
+            pb, w, kc, vc = inp
+            attn_out, (kc, vc) = _self_attn(
+                pb, x, cfg, positions=positions, window=w, mode=mode,
+                cache=(kc, vc), cur_index=cur_index, ctx=ctx)
+            ys = (kc, vc)
+        else:
+            pb, w = inp
+            attn_out, (k, v) = _self_attn(
+                pb, x, cfg, positions=positions, window=w, mode=mode,
+                ctx=ctx)
+            ys = (k, v) if mode == "prefill" else None
+        x = x + attn_out
+        x = jax.lax.with_sharding_constraint(x, resid_spec(x))
+        x, aux_l = _mlp_or_moe(pb, x, cfg, ctx)
+        x = jax.lax.with_sharding_constraint(x, resid_spec(x))
+        return (x, aux + aux_l), ys
+
+    if remat:
+        body = rematcfg.wrap(body)
+
+    xs = (blocks, windows)
+    if mode == "decode":
+        xs = (blocks, windows, caches[0], caches[1])
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, aux, ys
+
+
+def _static_window_stack(blocks, x, cfg, ctx, *, positions, mode, remat):
+    """gemma3 5:1 local:global as a superblock scan: per-position windows
+    are PYTHON ints, so local positions use banded attention (O(S*w))
+    and only the global position pays O(S^2). Layer order is preserved
+    (layer i is local iff i % (ratio+1) != ratio — same as
+    window_schedule)."""
+    per = cfg.local_global_ratio + 1
+    n_sb = cfg.n_layers // per
+    rem = cfg.n_layers - n_sb * per
+    win_of = [cfg.sliding_window if j != per - 1 else 0 for j in range(per)]
+
+    def group(t):
+        return t[:n_sb * per].reshape((n_sb, per) + t.shape[1:])
+    main = jax.tree.map(group, blocks)
+
+    def one_layer(pb, x, w):
+        attn_out, kv = _self_attn(pb, x, cfg, positions=positions,
+                                  window=w, mode=mode, ctx=ctx,
+                                  static_window=w)
+        x = x + attn_out
+        x = x + L.ffn_apply(pb["mlp"], L_norm(x, pb["ln2"], cfg))
+        x = jax.lax.with_sharding_constraint(
+            x, ctx.sharding(ctx.dp_axes, None, None))
+        return x, kv
+
+    def sb_body(carry, pb_group):
+        x, = carry
+        ks, vs = [], []
+        for j in range(per):
+            pb = jax.tree.map(lambda t: t[j], pb_group)
+            x, (k, v) = one_layer(pb, x, win_of[j])
+            if mode == "prefill":
+                ks.append(k); vs.append(v)
+        ys = (jnp.stack(ks), jnp.stack(vs)) if ks else None
+        return (x,), ys
+
+    if remat:
+        sb_body = rematcfg.wrap(sb_body)
+    (x,), ys = jax.lax.scan(sb_body, (x,), main)
+    rem_ks, rem_vs = [], []
+    for i in range(n_sb * per, cfg.n_layers):
+        pb = jax.tree.map(lambda t: t[i], blocks)
+        x, (k, v) = one_layer(pb, x, win_of[i % per])
+        if mode == "prefill":
+            rem_ks.append(k); rem_vs.append(v)
+
+    kv = None
+    if mode == "prefill":
+        k_all = ys[0].reshape((-1,) + ys[0].shape[2:])
+        v_all = ys[1].reshape((-1,) + ys[1].shape[2:])
+        if rem_ks:
+            k_all = jnp.concatenate([k_all, jnp.stack(rem_ks)], axis=0)
+            v_all = jnp.concatenate([v_all, jnp.stack(rem_vs)], axis=0)
+        kv = (k_all, v_all)
+    return x, kv
+
+
+# ---------------------------------------------------------------------------
+# forward (train) / prefill / decode
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, ctx: MeshCtx, batch, *, mode="train",
+            remat=True, caches=None, cur_index=None):
+    """batch: dict with 'tokens' [B,S] (or 'embeds' [B,S,d] for audio stub)
+    and optional 'image_embeds' [B,n_img,d] (vlm). Returns
+    (logits, aux, caches_out)."""
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = L.embed_apply(params["embed"], batch["tokens"])
+    B, S = x.shape[:2]
+    if mode == "decode":
+        positions = jnp.full((B, 1), cur_index, jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = jax.lax.with_sharding_constraint(
+        x, ctx.sharding(ctx.dp_axes, None, None))
+
+    aux = jnp.float32(0)
+    kv_out = None
+    if cfg.family == "vlm":
+        n_sb = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every
+        img_kv = (caches["img_k"], caches["img_v"]) if mode == "decode" else \
+            _image_kv(params["cross_blocks"], batch["image_embeds"], cfg)
+
+        def reshape_group(t):
+            return t.reshape((n_sb, per) + t.shape[1:])
+        self_groups = jax.tree.map(reshape_group, params["self_blocks"])
+        windows = jnp.zeros((n_sb, per), jnp.int32)
+
+        def sb_body(carry, inp):
+            x, aux = carry
+            if mode == "decode":
+                sg, cb, w, kc, vc, ik, iv = inp
+            else:
+                sg, cb, w, ik, iv = inp
+            ys_k, ys_v = [], []
+            for i in range(per):
+                pb = jax.tree.map(lambda t: t[i], sg)
+                if mode == "decode":
+                    attn_out, (nk, nv) = _self_attn(
+                        pb, x, cfg, positions=positions, window=w[i],
+                        mode=mode, cache=(kc[i], vc[i]), cur_index=cur_index)
+                    ys_k.append(nk); ys_v.append(nv)
+                else:
+                    attn_out, (nk, nv) = _self_attn(
+                        pb, x, cfg, positions=positions, window=w[i],
+                        mode=mode)
+                    if mode == "prefill":
+                        ys_k.append(nk); ys_v.append(nv)
+                x = x + attn_out
+                x = x + L.ffn_apply(pb["mlp"], L_norm(x, pb["ln2"], cfg))
+            x = _cross_attn(cb, x, (ik, iv), cfg)
+            ys = (jnp.stack(ys_k), jnp.stack(ys_v)) if ys_k else None
+            return (x, aux), ys
+
+        if remat:
+            sb_body = rematcfg.wrap(sb_body)
+        ik, iv = img_kv
+        xs = (self_groups, params["cross_blocks"], windows, ik, iv)
+        if mode == "decode":
+            xs = (self_groups, params["cross_blocks"], windows,
+                  caches["k"], caches["v"], ik, iv)
+        (x, aux), ys = jax.lax.scan(sb_body, (x, aux), xs)
+        if mode in ("prefill", "decode"):
+            kv_out = {"k": ys[0], "v": ys[1], "img_k": ik, "img_v": iv}
+    elif cfg.n_experts > 0:
+        nd = cfg.first_k_dense
+        ks, vs = [], []
+        if nd and "dense_blocks" in params:
+            wd = jnp.zeros((nd,), jnp.int32)
+            c = None if mode != "decode" else (caches["k"][:nd], caches["v"][:nd])
+            x, aux_d, ys = _dense_stack(
+                params["dense_blocks"], x, cfg, ctx, positions=positions,
+                windows=wd, mode=mode, caches=c, cur_index=cur_index,
+                remat=remat)
+            aux += aux_d
+            if ys is not None:
+                ks.append(ys[0]); vs.append(ys[1])
+        nm = cfg.n_layers - nd
+        wm = jnp.zeros((nm,), jnp.int32)
+        c = None if mode != "decode" else (caches["k"][nd:], caches["v"][nd:])
+        x, aux_m, ys = _dense_stack(
+            params["moe_blocks"], x, cfg, ctx, positions=positions,
+            windows=wm, mode=mode, caches=c, cur_index=cur_index, remat=remat,
+            moe=True)
+        aux += aux_m
+        if ys is not None:
+            ks.append(ys[0]); vs.append(ys[1])
+        if ks:
+            kv_out = {"k": jnp.concatenate(ks, 0) if len(ks) > 1 else ks[0],
+                      "v": jnp.concatenate(vs, 0) if len(vs) > 1 else vs[0]}
+    elif (cfg.local_global_ratio > 0 and cfg.sliding_window > 0
+          and mode != "decode" and perfcfg.flag("banded_local")):
+        # gemma3 + banded_local: superblock scan with STATIC per-position
+        # windows so local layers run the O(S*w) banded kernel
+        x, ys = _static_window_stack(params["blocks"], x, cfg, ctx,
+                                     positions=positions, mode=mode,
+                                     remat=remat)
+        if ys is not None:
+            kv_out = {"k": ys[0], "v": ys[1]}
+    else:
+        windows = window_schedule(cfg, cfg.n_layers)
+        c = None if mode != "decode" else (caches["k"], caches["v"])
+        x, aux, ys = _dense_stack(
+            params["blocks"], x, cfg, ctx, positions=positions,
+            windows=windows, mode=mode, caches=c, cur_index=cur_index,
+            remat=remat)
+        if ys is not None:
+            kv_out = {"k": ys[0], "v": ys[1]}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], x)
+    logits = jax.lax.with_sharding_constraint(
+        logits, ctx.sharding(ctx.dp_axes, None, ctx.tp_axis))
+    return logits, aux, kv_out
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=None):
+    """Decode KV caches. For gemma3-style local layers the window cache is
+    still allocated at max_len (optimization: ring buffers — see
+    EXPERIMENTS.md §Perf)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n = cfg.n_layers
+    shape = (n, batch_size, max_len, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.family == "vlm":
+        n_sb = cfg.n_layers // cfg.cross_attn_every
+        kv = (n_sb, cfg.cross_attn_every, batch_size, max_len,
+              cfg.n_kv_heads, cfg.head_dim)
+        cache = {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                 "img_k": jnp.zeros((n_sb, batch_size, cfg.n_image_tokens,
+                                     cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "img_v": jnp.zeros((n_sb, batch_size, cfg.n_image_tokens,
+                                     cfg.n_kv_heads, cfg.head_dim), dtype)}
+    return cache

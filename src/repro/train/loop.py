@@ -1,0 +1,115 @@
+"""Fault-tolerant training loop.
+
+- auto-restore from the latest atomic checkpoint (restart == preemption
+  recovery);
+- async checkpointing every N steps;
+- deterministic counter-based data (any step regenerates identically);
+- preemption hook (SIGTERM -> synchronous final checkpoint);
+- elastic: restoring onto a different mesh reshards via the checkpoint
+  manager (host .npy is the full logical array).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import PrefetchingLoader, SyntheticLMData, shard_batch
+from repro.distributed import sharding as sh_lib
+from repro.distributed.compression import init_error_state
+from repro.distributed.meshctx import MeshCtx
+from repro.models import model as M
+from repro.train import optimizer as opt_lib
+from repro.train.step import make_train_step
+
+
+class Trainer:
+    def __init__(self, tc: TrainConfig, ctx: MeshCtx,
+                 log_fn: Callable[[str], None] = print):
+        self.tc = tc
+        self.cfg = tc.model
+        self.ctx = ctx
+        self.log = log_fn
+        self.ckpt = CheckpointManager(tc.checkpoint_dir,
+                                      keep=tc.keep_checkpoints)
+        self.step_fn = make_train_step(tc, self.cfg, ctx)
+        self._preempted = False
+
+        key = jax.random.PRNGKey(tc.seed)
+        self.params, self.param_shardings = sh_lib.sharded_init(
+            key, self.cfg, ctx, lambda k: M.init(k, self.cfg))
+        pspecs = sh_lib.build_param_specs(self.params, self.cfg, ctx)
+        self.opt_state = jax.jit(
+            lambda p: opt_lib.init_state(tc.opt, p),
+        )(self.params)
+        o_specs = sh_lib.opt_state_specs(self.opt_state, pspecs, ctx)
+        self.opt_shardings = jax.tree.map(
+            lambda s: NamedSharding(ctx.mesh, s), o_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        self.err = {} if not tc.opt.grad_compression else \
+            init_error_state(self.params)
+        self.start_step = 0
+
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            self._restore(latest)
+
+        self.data = SyntheticLMData(self.cfg, tc.global_batch, tc.seq_len,
+                                    seed=tc.seed)
+        self.loader = PrefetchingLoader(self.data, ctx)
+        self.loader.seek(self.start_step)
+
+    # ------------------------------------------------------------------
+    def _restore(self, step: int):
+        state = {"params": self.params, "opt": self.opt_state}
+        shardings = {"params": self.param_shardings,
+                     "opt": self.opt_shardings}
+        restored, extra = self.ckpt.restore(step, state, shardings)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.start_step = int(extra.get("next_step", step))
+        self.log(f"[trainer] restored step {step} "
+                 f"(resume at {self.start_step}) on mesh "
+                 f"{dict(self.ctx.mesh.shape)}")
+
+    def _save(self, step: int, sync: bool = False):
+        state = {"params": self.params, "opt": self.opt_state}
+        extra = {"next_step": step + 1}
+        if sync:
+            self.ckpt.save(step, state, extra)
+        else:
+            self.ckpt.save_async(step, state, extra)
+
+    def install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int) -> Dict[str, float]:
+        metrics = {}
+        t0 = time.time()
+        for step in range(self.start_step, self.start_step + n_steps):
+            batch = self.loader.next(step)
+            self.params, self.opt_state, self.err, metrics = self.step_fn(
+                self.params, self.opt_state, batch, self.err)
+            if step % 10 == 0 or step == self.start_step + n_steps - 1:
+                loss = float(metrics["loss"])
+                self.log(f"[trainer] step {step} loss {loss:.4f} "
+                         f"lr {float(metrics['lr']):.2e} "
+                         f"gnorm {float(metrics['grad_norm']):.3f} "
+                         f"({(time.time()-t0):.1f}s)")
+            if self._preempted:
+                self.log(f"[trainer] preempted at step {step}: checkpointing")
+                self._save(step, sync=True)
+                return {k: float(v) for k, v in metrics.items()}
+            if (step + 1) % self.tc.checkpoint_every == 0:
+                self._save(step)
+        self.ckpt.wait()
+        return {k: float(v) for k, v in metrics.items()}

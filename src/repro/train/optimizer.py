@@ -1,0 +1,183 @@
+"""In-house AdamW with distributed-memory options.
+
+- fp32 m/v states by default;
+- ``int8_states``: block-quantized (per-128-block absmax int8) first/second
+  moments — the optimizer-memory trick that makes kimi-k2-scale training
+  fit the pod (EXPERIMENTS.md §Dry-run memory table);
+- cosine LR schedule with warmup, decoupled weight decay, global-norm clip.
+
+States mirror the param tree so the checkpointer and the elastic resharder
+treat them uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Array = jax.Array
+BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# block-wise int8 quantization (for optimizer states / gradient compression)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    q: Array        # int8 payload, [n_blocks, BLOCK]
+    scale: Array    # fp32 per-block absmax / 127, [n_blocks]
+    shape: Tuple[int, ...] = ()   # static (aux data)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(q=children[0], scale=children[1], shape=aux)
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+
+def _block_of(shape) -> int:
+    """Quantization blocks run along the LAST axis so the int8 payload has
+    the *same shape/sharding as the param* — no resharding or gathers in
+    the update step (the flat-blocked variant replicated kimi-1T moments:
+    4 TB/device temp measured; this layout: none)."""
+    last = shape[-1] if shape else 1
+    return BLOCK if last % BLOCK == 0 else last
+
+
+def quantize_block(x: Array) -> QTensor:
+    shape = x.shape
+    if not shape:
+        return QTensor(q=jnp.zeros((), jnp.int8),
+                       scale=jnp.abs(x).astype(jnp.float32)[None] / 127.0,
+                       shape=shape)
+    b = _block_of(shape)
+    xb = x.astype(jnp.float32).reshape(shape[:-1] + (shape[-1] // b, b))
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q.reshape(shape), scale=scale[..., 0], shape=shape)
+
+
+def _quantum_floor(t: QTensor) -> Array:
+    """Elementwise half-quantum of a blocked QTensor (error bound of the
+    stored value), broadcast back to the tensor shape."""
+    if not t.shape:
+        return t.scale[0] * 0.5
+    b = _block_of(t.shape)
+    s = jnp.repeat(t.scale, b, axis=-1).reshape(t.shape)
+    return s * 0.5
+
+
+def dequantize_block(t: QTensor) -> Array:
+    if not t.shape:
+        return (t.q.astype(jnp.float32) * t.scale[0])
+    b = _block_of(t.shape)
+    qb = t.q.astype(jnp.float32).reshape(
+        t.shape[:-1] + (t.shape[-1] // b, b))
+    return (qb * t.scale[..., None]).reshape(t.shape)
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+def lr_schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def init_state(cfg: OptimizerConfig, params):
+    def zeros_like_state(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.int8_states:
+            return quantize_block(z)
+        return z
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_state, params),
+        "v": jax.tree.map(zeros_like_state, params),
+    }
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms / biases / scalars."""
+    name = str(path[-1]) if path else ""
+    return not any(s in name for s in ("norm", "ln", "bias", "b_", "mu_",
+                                       "w0", "u", "scale", "A_log", "D",
+                                       "dt_bias"))
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        if cfg.int8_states:
+            # m stored int8 directly; v stored in sqrt domain (halves the
+            # dynamic range) with a quantum-floored denominator so v-entries
+            # that quantize to 0 can't explode the update
+            m = dequantize_block(m)
+            u = dequantize_block(v)
+            v = jnp.square(u)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        if cfg.int8_states:
+            uq = quantize_block(jnp.sqrt(v))
+            u_deq = dequantize_block(uq)
+            floor = _quantum_floor(uq)
+            denom = u_deq / jnp.sqrt(c2) + floor + cfg.eps
+            delta = mh / denom
+            m_out, v_out = quantize_block(m), uq
+        else:
+            delta = mh / (jnp.sqrt(v / c2) + cfg.eps)
+            m_out, v_out = m, v
+        if cfg.weight_decay and _decayable(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m_out, v_out
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state["m"],
+                               is_leaf=lambda x: isinstance(x, QTensor))
+    v_leaves = jax.tree.leaves(state["v"],
+                               is_leaf=lambda x: isinstance(x, QTensor))
+    out = [upd(path, p, g, m, v) for (path, p), g, m, v in
+           zip(flat, g_leaves, m_leaves, v_leaves)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, \
+        {"lr": lr, "grad_norm": gnorm}

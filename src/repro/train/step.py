@@ -1,0 +1,93 @@
+"""Train step factory: grad (with microbatch accumulation + remat) ->
+optional compressed pod-reduction -> AdamW update. Donates params and
+optimizer state.
+
+Two pod-axis modes:
+  - "spmd" (default): the batch is sharded over (pod, data); XLA's SPMD
+    partitioner inserts the cross-pod gradient all-reduce (fp32).
+  - "compressed": gradients are computed per-pod under a shard_map over
+    {'pod'} and reduced with the int8 + error-feedback collective
+    (distributed/compression.py) — the wire-bytes win shows up directly in
+    the dry-run collective-bytes roofline term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed import compression
+from repro.distributed.meshctx import MeshCtx
+from repro.models import model as M
+from repro.train import optimizer as opt_lib
+
+
+def _grads_fn(tc: TrainConfig, cfg: ModelConfig, ctx: MeshCtx):
+    def compute(params, batch):
+        if tc.microbatches <= 1:
+            (loss, (ce, aux)), grads = jax.value_and_grad(
+                M.loss_fn, has_aux=True)(params, cfg, ctx, batch,
+                                         remat=tc.remat)
+            return grads, {"loss": loss, "ce": ce, "aux": aux}
+
+        def mb(carry, mbatch):
+            gacc, lacc = carry
+            (loss, _), g = jax.value_and_grad(M.loss_fn, has_aux=True)(
+                params, cfg, ctx, mbatch, remat=tc.remat)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            return (gacc, lacc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        split = jax.tree.map(
+            lambda x: x.reshape((tc.microbatches,
+                                 x.shape[0] // tc.microbatches) + x.shape[1:]),
+            batch)
+        (gacc, loss), _ = jax.lax.scan(mb, (g0, jnp.float32(0)), split)
+        n = tc.microbatches
+        grads = jax.tree.map(lambda g: g / n, gacc)
+        return grads, {"loss": loss / n, "ce": loss / n,
+                       "aux": jnp.float32(0)}
+    return compute
+
+
+def make_train_step(tc: TrainConfig, cfg: ModelConfig, ctx: MeshCtx,
+                    param_shardings=None, donate=True, jit=True):
+    compute = _grads_fn(tc, cfg, ctx)
+    use_compress = tc.opt.grad_compression and "pod" in ctx.mesh.axis_names
+
+    # inside the pod-manual region, the model must not mention 'pod' in
+    # sharding constraints (mixed Manual/Auto specs are rejected)
+    import dataclasses as _dc
+    inner_ctx = _dc.replace(
+        ctx, dp_axes=tuple(a for a in ctx.dp_axes if a != "pod"))
+    compute_inner = _grads_fn(tc, cfg, inner_ctx)
+
+    def train_step(params, opt_state, batch, err):
+        if use_compress:
+            def per_pod(p, b):
+                return compute_inner(p, b)
+            f = shard_map(
+                per_pod, mesh=ctx.mesh,
+                in_specs=(P(), P("pod")), out_specs=(P(), P()),
+                axis_names={"pod"}, check_vma=False)
+            grads, metrics = f(params, batch)
+            reduce = compression.make_pod_grad_reducer(ctx, params, True)
+            grads, err = reduce(grads, err)
+            metrics = jax.tree.map(lambda x: x, metrics)
+        else:
+            grads, metrics = compute(params, batch)
+        params, opt_state, om = opt_lib.apply_updates(
+            tc.opt, params, grads, opt_state)
+        metrics.update(om)
+        return params, opt_state, err, metrics
+
+    if not jit:
+        return train_step
+    donate_args = (0, 1, 3) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_args)

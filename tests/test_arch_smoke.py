@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one train-grad step + prefill/decode on CPU,
+asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_NAMES, get_config, get_smoke_config
+from repro.distributed.meshctx import single_device_ctx
+from repro.models import model as M
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _smoke_batch(cfg, B=2, S=16, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.embeds_input:
+        batch["embeds"] = jax.random.normal(
+            k, (B, S, cfg.d_model), jnp.float32) * 0.02
+        batch["labels"] = batch.pop("tokens")
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            k, (B, cfg.n_image_tokens, cfg.d_model), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg)
+    B, S = 2, 16
+
+    fwd = jax.jit(lambda p, b: M.apply_train(p, cfg, ctx, b)[:2])
+    logits, aux = fwd(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert np.isfinite(float(aux))
+
+    loss_f = jax.jit(lambda p, b: M.loss_fn(p, cfg, ctx, b)[0])
+    loss = loss_f(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+    grads = jax.jit(jax.grad(lambda p: M.loss_fn(p, cfg, ctx, batch)[0]))(params)
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: float(jnp.sum(jnp.square(g.astype(jnp.float32)))), grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_then_decode(arch):
+    cfg = get_smoke_config(arch)
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = _smoke_batch(cfg, B, S)
+
+    prefill = jax.jit(lambda p, b: M.apply_prefill(p, cfg, ctx, b))
+    logits, _, cache = prefill(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert cache is not None, f"{arch}: prefill must return a cache"
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        # grow the KV cache to max_len for decode
+        full = M.init_cache(cfg, B, S + 4)
+        def place(dst, src):
+            if dst.shape == src.shape:
+                return src
+            return jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * src.ndim)
+        cache = jax.tree.map(place, full, cache)
+
+    step = {"tokens": jnp.full((B, 1), 3, jnp.int32)}
+    if cfg.embeds_input:
+        step = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32),
+                "labels": jnp.full((B, 1), 3, jnp.int32)}
+    if cfg.family == "vlm":
+        step["image_embeds"] = batch["image_embeds"]
+    decode = jax.jit(lambda p, s, c, i: M.apply_decode(p, cfg, ctx, s, c, i))
+    logits2, _, cache2 = decode(params, step, cache, jnp.int32(S))
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_is_exact(arch):
+    """The full (non-smoke) configs carry the exact assigned hyperparams."""
+    cfg = get_config(arch)
+    assigned = {
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840, 384, 8),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936, 128, 8),
+        "rwkv6-7b": (32, 4096, None, None, 14336, 65536, 0, 0),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000, 0, 0),
+        "llama-3.2-vision-90b": (80, 8192, 64, 8, 28672, 128256, 0, 0),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936, 0, 0),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544, 0, 0),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144, 0, 0),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936, 0, 0),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048, 0, 0),
+    }[arch]
+    L_, d, H, kv, ff, V, E, k = assigned
+    assert cfg.n_layers == L_ and cfg.d_model == d
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == V
+    assert cfg.n_experts == E and cfg.top_k == k
+
+
+def test_param_counts_in_band():
+    """Analytic param counts should land near the advertised sizes."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.6e11),
+        "rwkv6-7b": (6.0e9, 8.5e9),
+        "zamba2-1.2b": (0.9e9, 1.5e9),
+        "llama-3.2-vision-90b": (8.0e10, 10.0e10),
+        "qwen2-0.5b": (3.5e8, 6.5e8),
+        "internlm2-20b": (1.7e10, 2.3e10),
+        "gemma3-4b": (3.0e9, 5.0e9),
+        "qwen3-4b": (3.2e9, 5.0e9),
+        "musicgen-medium": (1.1e9, 1.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_long_context_rule():
+    longs = {a: get_config(a).supports_long_context for a in ARCH_NAMES}
+    assert longs["rwkv6-7b"] and longs["zamba2-1.2b"] and longs["gemma3-4b"]
+    assert not longs["kimi-k2-1t-a32b"] and not longs["qwen2-0.5b"]
+    assert not longs["musicgen-medium"]

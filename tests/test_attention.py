@@ -1,0 +1,137 @@
+"""Flash (custom-vjp blockwise) attention vs naive softmax: values + grads."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import blockwise_attention, decode_attention
+
+
+def naive_attention(q, k, v, causal=True, window=0, softcap=0.0):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qh = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    kh = k.astype(jnp.float32)
+    vh = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kh) / np.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vh)
+    return out.reshape(B, Sq, H, hd)
+
+
+CASES = [
+    dict(B=2, Sq=32, Sk=32, H=4, KV=2, hd=16, causal=True, window=0, cap=0.0),
+    dict(B=1, Sq=64, Sk=64, H=4, KV=4, hd=8, causal=True, window=16, cap=0.0),
+    dict(B=2, Sq=16, Sk=48, H=6, KV=2, hd=8, causal=False, window=0, cap=0.0),
+    dict(B=1, Sq=32, Sk=32, H=2, KV=1, hd=16, causal=True, window=0, cap=30.0),
+]
+
+
+@pytest.mark.parametrize("c", CASES)
+def test_flash_matches_naive(c):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (c["B"], c["Sq"], c["H"], c["hd"]), jnp.float32)
+    k = jax.random.normal(kk, (c["B"], c["Sk"], c["KV"], c["hd"]), jnp.float32)
+    v = jax.random.normal(kv, (c["B"], c["Sk"], c["KV"], c["hd"]), jnp.float32)
+    got = blockwise_attention(q, k, v, causal=c["causal"], window=c["window"],
+                              softcap=c["cap"], block_q=16, block_kv=16)
+    want = naive_attention(q, k, v, c["causal"], c["window"], c["cap"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("c", CASES)
+def test_flash_grads_match_naive(c):
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (c["B"], c["Sq"], c["H"], c["hd"]), jnp.float32)
+    k = jax.random.normal(kk, (c["B"], c["Sk"], c["KV"], c["hd"]), jnp.float32)
+    v = jax.random.normal(kv, (c["B"], c["Sk"], c["KV"], c["hd"]), jnp.float32)
+
+    def loss_flash(q, k, v):
+        o = blockwise_attention(q, k, v, causal=c["causal"],
+                                window=c["window"], softcap=c["cap"],
+                                block_q=16, block_kv=16)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(naive_attention(q, k, v, c["causal"],
+                                               c["window"], c["cap"])))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_decode_matches_prefill_last_token():
+    key = jax.random.PRNGKey(2)
+    B, S, H, KV, hd = 2, 24, 4, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    full = blockwise_attention(q, k, v, causal=True, block_q=8, block_kv=8)
+    dec = decode_attention(q[:, -1:], k, v, jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_window():
+    key = jax.random.PRNGKey(3)
+    B, S, H, KV, hd, w = 1, 32, 2, 2, 8, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    got = decode_attention(q, k, v, jnp.int32(S - 1), window=w)
+    # zero out everything outside the window: result must be unchanged
+    mask = (jnp.arange(S) >= S - w)[None, :, None, None]
+    got2 = decode_attention(q, k * mask, v * mask, jnp.int32(S - 1), window=w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_banded_matches_windowed_flash():
+    from repro.models.layers import banded_attention
+    key = jax.random.PRNGKey(5)
+    B, S, H, KV, hd, w = 2, 128, 4, 2, 16, 32
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    want = blockwise_attention(q, k, v, causal=True, window=w,
+                               block_q=16, block_kv=16)
+    got = banded_attention(q, k, v, window=w, block=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_banded_window_not_multiple_of_block():
+    from repro.models.layers import banded_attention
+    key = jax.random.PRNGKey(6)
+    B, S, H, KV, hd, w = 1, 96, 2, 2, 8, 24
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, hd), jnp.float32)
+    want = blockwise_attention(q, k, v, causal=True, window=w,
+                               block_q=16, block_kv=16)
+    got = banded_attention(q, k, v, window=w, block=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

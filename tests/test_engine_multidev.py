@@ -1,0 +1,52 @@
+"""Distributed engine numerics on a real (placeholder) multi-device mesh.
+
+Runs in a subprocess so the 8-device XLA_FLAGS never leaks into the other
+tests (they must see 1 device per the assignment)."""
+import json
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import MeshCtx
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+ctx = MeshCtx(mesh=mesh, dp_axes=("data",), fsdp_axis="data",
+              tp_axis="model")
+cfg = smoke()
+corpus = corpus_lib.synthesize(256, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                               cfg.nnz_pad, seed=5)
+eng = PatternSearchEngine(corpus, cfg, ctx, backend="jnp")
+idxs = [3, 77, 150, 200]   # L=4 over model axis of 2
+qs = [corpus_lib.make_query(corpus, i, cfg.max_query_nnz) for i in idxs]
+qi = np.stack([q[0] for q in qs]); qv = np.stack([q[1] for q in qs])
+r = eng.search(qi, qv)
+print(json.dumps({
+    "top1": [int(x) for x in r.doc_ids[:, 0]],
+    "score1": [float(x) for x in r.scores[:, 0]],
+}))
+"""
+
+
+def test_engine_on_8_device_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["top1"] == [3, 77, 150, 200]          # self-search exact
+    for s in res["score1"]:
+        assert abs(s - 1.0) < 1e-4

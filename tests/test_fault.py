@@ -1,0 +1,46 @@
+"""Straggler requeue semantics (distributed/fault.py)."""
+from repro.distributed.fault import SlabScheduler
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_all_slabs_processed_in_order():
+    s = SlabScheduler(4, timeout_s=10)
+    got = []
+    while not s.all_done:
+        t = s.next_task(worker=0)
+        assert t is not None
+        assert s.complete(t.slab_id, t.epoch)
+        got.append(t.slab_id)
+    assert got == [0, 1, 2, 3]
+
+
+def test_straggler_requeued_and_stale_result_discarded():
+    clk = FakeClock()
+    s = SlabScheduler(2, timeout_s=5, now=clk)
+    t0 = s.next_task(worker=0)        # worker 0 takes slab 0
+    assert t0.slab_id == 0 and t0.epoch == 0
+    t1 = s.next_task(worker=1)        # worker 1 takes slab 1
+    assert s.complete(t1.slab_id, t1.epoch)
+    clk.t = 6.0                       # worker 0 straggles past timeout
+    t0b = s.next_task(worker=1)       # requeued to worker 1, epoch bumped
+    assert t0b.slab_id == 0 and t0b.epoch == 1
+    # the straggler finally reports: stale epoch -> discarded
+    assert not s.complete(0, epoch=0)
+    assert not s.all_done
+    # the requeued run completes: accepted
+    assert s.complete(0, epoch=1)
+    assert s.all_done
+
+
+def test_no_double_completion():
+    s = SlabScheduler(1)
+    t = s.next_task(0)
+    assert s.complete(t.slab_id, t.epoch)
+    assert not s.complete(t.slab_id, t.epoch)   # idempotent

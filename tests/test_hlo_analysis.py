@@ -1,0 +1,62 @@
+"""Validate the HLO static analyzer against programs with known costs."""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.hlo_analysis import HloCostModel, analyze, shape_bytes
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    text = _hlo(lambda a, b: a @ b, a, b)
+    got = analyze(text)["flops"]
+    want = 2 * 128 * 256 * 64
+    assert got == want, (got, want)
+
+
+def test_while_loop_multiplies():
+    w = jnp.zeros((64, 64), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    text = _hlo(fn, jnp.zeros((32, 64), jnp.float32))
+    got = analyze(text)["flops"]
+    want = 7 * 2 * 32 * 64 * 64
+    assert got == want, (got, want)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((16, 16), jnp.float32)
+
+    def fn(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    text = _hlo(fn, jnp.zeros((8, 16), jnp.float32))
+    got = analyze(text)["flops"]
+    want = 15 * 2 * 8 * 16 * 16
+    assert got == want, (got, want)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert shape_bytes("(f32[8], s8[16])") == 32 + 16
+    assert shape_bytes("pred[]") == 1

@@ -1,0 +1,92 @@
+"""Perf-variant flags must not change model outputs (same math, different
+schedule/sharding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.distributed.meshctx import single_device_ctx
+from repro.models import model as M
+from repro.models import perfcfg
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    perfcfg.reset()
+    yield
+    perfcfg.reset()
+
+
+def _logits(cfg, ctx, params, batch):
+    return np.asarray(
+        jax.jit(lambda p, b: M.apply_train(p, cfg, ctx, b)[0])(params, batch),
+        np.float32)
+
+
+def test_banded_variant_matches_base_gemma3():
+    cfg = get_smoke_config("gemma3-4b")
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    base = _logits(cfg, ctx, params, batch)
+    perfcfg.set_variant("banded")
+    opt = _logits(cfg, ctx, params, batch)
+    np.testing.assert_allclose(opt, base, rtol=2e-2, atol=2e-2)
+
+
+def test_banded_variant_grads_match():
+    cfg = get_smoke_config("gemma3-4b")
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    g = jax.jit(jax.grad(lambda p: M.loss_fn(p, cfg, ctx, batch)[0]))
+    base = g(params)
+    perfcfg.set_variant("banded")
+    opt = g(params)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(opt)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_sp_residual_matches_base_moe():
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    base = _logits(cfg, ctx, params, batch)
+    perfcfg.set_variant("spresid")
+    opt = _logits(cfg, ctx, params, batch)
+    np.testing.assert_allclose(opt, base, rtol=2e-2, atol=2e-2)
+
+
+def test_router_bf16_close_to_fp32():
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    opt = _logits(cfg, ctx, params, batch)          # router_bf16 default ON
+    perfcfg.set_variant("paperfaithful")            # fp32-cast router
+    base = _logits(cfg, ctx, params, batch)
+    # top-k routing can differ on ties; logits must stay close in norm
+    denom = np.abs(base).mean() + 1e-6
+    assert np.abs(opt - base).mean() / denom < 0.05
+
+
+def test_a2a_int8_close_to_exact():
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    base = _logits(cfg, ctx, params, batch)
+    perfcfg.set_variant("a2aint8")
+    opt = _logits(cfg, ctx, params, batch)
+    denom = np.abs(base).mean() + 1e-6
+    assert np.abs(opt - base).mean() / denom < 0.03, \
+        np.abs(opt - base).mean() / denom

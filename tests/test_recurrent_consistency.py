@@ -1,0 +1,69 @@
+"""Chunked prefill and step-by-step decode must agree for the recurrent
+archs (rwkv6, zamba2): the chunked decay algebra has off-by-one hazards
+that only this cross-check catches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.distributed.meshctx import single_device_ctx
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-1.2b"])
+def test_decode_continues_prefill_exactly(arch):
+    """logits(prefill S+1)[last] == logits(decode step after prefill S)."""
+    cfg = get_smoke_config(arch)
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+
+    # full prefill over S+1 tokens
+    full_logits, _, _ = jax.jit(
+        lambda p, t: M.apply_prefill(p, cfg, ctx, {"tokens": t}))(
+            params, toks)
+
+    # prefill S tokens, then one decode step with token S
+    _, _, cache = jax.jit(
+        lambda p, t: M.apply_prefill(p, cfg, ctx, {"tokens": t}))(
+            params, toks[:, :S])
+    if cfg.family == "hybrid":
+        # grow the shared-attn KV cache to S+1 before the step
+        full = M.init_cache(cfg, B, S + 4)
+        cache = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0,) * src.ndim)
+            if dst.shape != src.shape else src, full, cache)
+    step_logits, _, _ = jax.jit(
+        lambda p, t, c: M.apply_decode(p, cfg, ctx, {"tokens": t}, c,
+                                       jnp.int32(S)))(
+            params, toks[:, S:S + 1], cache)
+
+    # tolerance: the models run bf16; prefill vs decode reduce in different
+    # orders (chunked SSD vs step, blockwise vs full-cache attention). The
+    # isolated Mamba block agrees to 2e-7 in fp32 (verified); end-to-end
+    # bf16 noise is ~1% of logit scale.
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=3e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b"])
+def test_chunk_size_invariance(arch):
+    """The chunked WKV result must not depend on the chunk size."""
+    from repro.models import rwkv6
+    cfg = get_smoke_config(arch)
+    ctx = single_device_ctx()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 24), 0,
+                              cfg.vocab_size)
+    l4, _, _ = jax.jit(lambda p, t: rwkv6.forward(
+        p, cfg, ctx, {"tokens": t}, mode="train", chunk=4))(params, toks)
+    l12, _, _ = jax.jit(lambda p, t: rwkv6.forward(
+        p, cfg, ctx, {"tokens": t}, mode="train", chunk=12))(params, toks)
+    np.testing.assert_allclose(np.asarray(l4, np.float32),
+                               np.asarray(l12, np.float32), rtol=2e-2,
+                               atol=2e-2)

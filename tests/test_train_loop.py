@@ -1,0 +1,126 @@
+"""Training substrate: loss goes down, checkpoint restart is bit-identical,
+int8 optimizer states track fp32, preemption recovery works."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.configs.registry import get_smoke_config
+from repro.distributed.meshctx import single_device_ctx
+from repro.train.loop import Trainer
+from repro.train import optimizer as opt_lib
+
+
+def _tc(tmp, arch="qwen2-0.5b", **opt_kw):
+    cfg = get_smoke_config(arch)
+    return TrainConfig(
+        model=cfg, opt=OptimizerConfig(lr=1e-3, warmup_steps=5,
+                                       total_steps=100, **opt_kw),
+        seq_len=32, global_batch=4, checkpoint_every=5,
+        checkpoint_dir=str(tmp), keep_checkpoints=2, seed=0)
+
+
+def test_loss_decreases(tmp_path):
+    t = Trainer(_tc(tmp_path / "a"), single_device_ctx(), log_fn=lambda s: None)
+    first = None
+    m = t.run(30)
+    # measure loss at start vs end via fresh runs of the metric
+    t2 = Trainer(_tc(tmp_path / "b"), single_device_ctx(),
+                 log_fn=lambda s: None)
+    m0 = t2.run(1)
+    assert m["loss"] < m0["loss"], (m["loss"], m0["loss"])
+
+
+def test_checkpoint_restart_bit_identical(tmp_path):
+    d = tmp_path / "ck"
+    # run 10 steps straight
+    t1 = Trainer(_tc(d / "x"), single_device_ctx(), log_fn=lambda s: None)
+    m1 = t1.run(10)
+    # run 5, "die", restart (auto-restores), run 5 more
+    t2 = Trainer(_tc(d / "y"), single_device_ctx(), log_fn=lambda s: None)
+    t2.run(5)  # checkpoint_every=5 -> checkpoint at step 4 (+1 = 5)
+    t2.ckpt.wait()
+    del t2
+    t3 = Trainer(_tc(d / "y"), single_device_ctx(), log_fn=lambda s: None)
+    assert t3.start_step == 5, t3.start_step
+    m3 = t3.run(5)
+    np.testing.assert_allclose(m1["loss"], m3["loss"], rtol=1e-6,
+                               err_msg="restart not deterministic")
+
+
+def test_int8_optimizer_tracks_fp32():
+    """Blockwise-int8 Adam tracks fp32 in the mean; per-coordinate error is
+    bounded by the quantum floor (coords tiny relative to their 128-block
+    absmax update less — the standard 8-bit-Adam tradeoff)."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (64, 256)) * 0.1}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 256)) * 0.01}
+    cfg32 = OptimizerConfig(lr=1e-2, warmup_steps=0, total_steps=10)
+    cfg8 = OptimizerConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                           int8_states=True)
+    s32 = opt_lib.init_state(cfg32, params)
+    s8 = opt_lib.init_state(cfg8, params)
+    p32, p8 = params, params
+    for _ in range(5):
+        p32, s32, _ = opt_lib.apply_updates(cfg32, p32, grads, s32)
+        p8, s8, _ = opt_lib.apply_updates(cfg8, p8, grads, s8)
+    diff = np.abs(np.asarray(p32["w"]) - np.asarray(p8["w"]))
+    upd = np.abs(np.asarray(p32["w"]) - np.asarray(params["w"]))
+    assert diff.mean() < 0.10 * upd.max(), (diff.mean(), upd.max())
+    assert diff.max() < 1.0 * upd.max()
+    # directional agreement: int8 must never move a coord the wrong way
+    d32 = np.asarray(p32["w"]) - np.asarray(params["w"])
+    d8 = np.asarray(p8["w"]) - np.asarray(params["w"])
+    agree = np.sign(d32) == np.sign(d8)
+    assert agree.mean() > 0.99
+
+
+def test_int8_training_converges(tmp_path):
+    tc = _tc(tmp_path / "i8", int8_states=True)
+    t = Trainer(tc, single_device_ctx(), log_fn=lambda s: None)
+    m_end = t.run(30)
+    t0 = Trainer(_tc(tmp_path / "i8b", int8_states=True),
+                 single_device_ctx(), log_fn=lambda s: None)
+    m_start = t0.run(1)
+    assert m_end["loss"] < m_start["loss"]
+
+
+def test_quantize_roundtrip_property():
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**20),
+           shape=st.sampled_from([(128,), (3, 128), (5, 7), (2, 3, 256)]))
+    def inner(seed, shape):
+        x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 3.0
+        q = opt_lib.quantize_block(x)
+        back = opt_lib.dequantize_block(q)
+        absmax = float(jnp.abs(x).max())
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=absmax / 127 + 1e-6)
+    inner()
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(opt_lib.lr_schedule(cfg, jnp.int32(s)))
+           for s in [0, 5, 10, 55, 100, 200]]
+    assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 <= lrs[3] <= 1.0 and abs(lrs[4] - 0.1) < 1e-6
+    assert abs(lrs[5] - 0.1) < 1e-6
+
+
+def test_grad_clip_applied():
+    params = {"w": jnp.ones((8, 8))}
+    grads = {"w": jnp.full((8, 8), 100.0)}
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=0, total_steps=10,
+                          grad_clip=1.0, weight_decay=0.0)
+    s = opt_lib.init_state(cfg, params)
+    _, _, m = opt_lib.apply_updates(cfg, params, grads, s)
+    assert float(m["grad_norm"]) == pytest.approx(800.0)
