@@ -1,0 +1,131 @@
+"""Storage-tier benchmark: segments/sec through the flash path and
+vocabulary-filter skip-rate vs query sparsity (DESIGN.md §7).
+
+Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
+
+The skip-rate sweep is the storage tier's headline: the paper's
+in-storage filter wins by never moving non-matching data, and the
+segment vocabulary filter is the same lever at store scope — sparser
+(fewer-word) queries overlap fewer segments and skip more of the store.
+The corpus here is clustered (documents drawn from per-topic vocabulary
+bands, one band group per segment) the way real corpora are (tenants,
+languages, protein families); a fully-mixed corpus degrades to
+skip-rate 0 and the streaming throughput row is then the floor.
+
+Usage: PYTHONPATH=src python benchmarks/storage_bench.py [--docs 20000]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.storage import FlashSearchSession, FlashStore
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _clustered_docs(n_docs, vocab_size, n_topics, nnz, rng):
+    """Per-topic vocabulary bands -> docs list grouped by topic."""
+    band = vocab_size // n_topics
+    docs = []
+    for i in range(n_docs):
+        topic = (i * n_topics) // n_docs     # contiguous topic runs
+        words = rng.choice(np.arange(topic * band, (topic + 1) * band),
+                           min(nnz, band), replace=False)
+        docs.append((i, sorted((int(w), int(rng.integers(1, 30)))
+                               for w in words)))
+    return docs
+
+
+def _query(docs, idx, q_nnz, max_query_nnz):
+    qi = np.full((1, max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, max_query_nnz), np.float32)
+    pairs = docs[idx][1][:q_nnz]
+    for j, (w, c) in enumerate(pairs):
+        qi[0, j] = w
+        qv[0, j] = c
+    return qi, qv
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--docs-per-segment", type=int, default=1_000)
+    ap.add_argument("--topics", type=int, default=20)
+    ap.add_argument("--vocab", type=int, default=141_000)
+    ap.add_argument("--nnz", type=int, default=60)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--keep", help="persist the store at this path")
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="storage-bench", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.nnz, nnz_pad=64, top_k=16,
+                       block_docs=128, block_query=512)
+    rng = np.random.default_rng(0)
+    docs = _clustered_docs(args.docs, args.vocab, args.topics, args.nnz, rng)
+
+    root = args.keep or os.path.join(tempfile.mkdtemp(), "store")
+    t0 = time.perf_counter()
+    store = FlashStore.create(root, vocab_size=args.vocab,
+                              docs_per_segment=args.docs_per_segment)
+    store.append_docs(docs)
+    build_s = time.perf_counter() - t0
+    nbytes = sum(seg.nbytes for seg in store.segments())
+    _row("storage/build_docs_per_sec", build_s * 1e6,
+         f"{args.docs / build_s:.0f}")
+    _row("storage/store_MB", 0.0, f"{nbytes / 1e6:.1f}")
+
+    sess = FlashSearchSession(store, cfg)
+
+    # -- streaming throughput: a dense query that hits every segment ---
+    dense = np.concatenate([np.asarray(d[1], np.int64)[:, 0]
+                            for d in docs[:: args.docs // 64]])
+    qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+    uw = np.unique(dense)[:cfg.max_query_nnz]
+    qi[0, :uw.size] = uw.astype(np.int32)
+    qv[0, :uw.size] = 1.0
+    sess.search(qi, qv)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(args.repeats):
+        sess.search(qi, qv)
+    dt = (time.perf_counter() - t0) / args.repeats
+    st = sess.last_stats
+    _row("storage/segments_per_sec", dt * 1e6 / max(st.segments_scored, 1),
+         f"{st.segments_scored / dt:.1f}")
+    _row("storage/stream_docs_per_sec", dt * 1e6,
+         f"{st.docs_scored / dt:.0f}")
+    _row("storage/stream_MBps", dt * 1e6, f"{nbytes / dt / 1e6:.1f}")
+
+    # -- skip-rate vs query sparsity -----------------------------------
+    for q_nnz in (1, 4, 16, 64):
+        rates, lat = [], []
+        for trial in range(5):
+            idx = int(rng.integers(args.docs))
+            tqi, tqv = _query(docs, idx, q_nnz, cfg.max_query_nnz)
+            t0 = time.perf_counter()
+            sess.search(tqi, tqv)
+            lat.append(time.perf_counter() - t0)
+            rates.append(sess.last_stats.skip_rate)
+        _row(f"storage/skip_rate@qnnz={q_nnz}", np.mean(lat) * 1e6,
+             f"{np.mean(rates):.3f}")
+
+    sess.close()
+    if not args.keep:
+        shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

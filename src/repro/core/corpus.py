@@ -31,6 +31,17 @@ class Corpus:
     def nnz_pad(self) -> int:
         return self.ids.shape[1]
 
+    @classmethod
+    def empty(cls, nnz_pad: int) -> "Corpus":
+        return cls(np.empty(0, np.int64),
+                   np.full((0, nnz_pad), -1, np.int32),
+                   np.zeros((0, nnz_pad), np.float32),
+                   np.zeros(0, np.float32))
+
+    def slice_rows(self, lo: int, hi: int) -> "Corpus":
+        return Corpus(self.doc_ids[lo:hi], self.ids[lo:hi],
+                      self.vals[lo:hi], self.norms[lo:hi])
+
     def pad_docs_to(self, n: int) -> "Corpus":
         """Pad with empty documents (id -1) so n_docs divides the mesh."""
         extra = n - self.n_docs
@@ -45,6 +56,19 @@ class Corpus:
         )
 
 
+def from_stream(stream: np.ndarray, nnz_pad: int, *,
+                strict: bool = False) -> Corpus:
+    """Fig. 8 uint32 stream -> Corpus. ``strict`` raises if any document
+    had pairs truncated to fit ``nnz_pad`` (decode_to_ell reports the
+    count; silent truncation changes scores)."""
+    doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
+        stream, nnz_pad)
+    if strict and n_trunc:
+        raise ValueError(
+            f"{n_trunc} pairs truncated decoding stream at nnz_pad={nnz_pad}")
+    return Corpus(doc_ids, ids, vals, norms)
+
+
 def from_tuples(tuples: Sequence[Tuple[int, int, int]], nnz_pad: int) -> Corpus:
     """UCI-style {docID, wordID, count} tuples -> Corpus (via the Fig. 8
     stream, exercising the paper's ingest path)."""
@@ -53,7 +77,7 @@ def from_tuples(tuples: Sequence[Tuple[int, int, int]], nnz_pad: int) -> Corpus:
         by_doc.setdefault(d, []).append((w, c))
     docs = sorted(by_doc.items())
     stream = stream_format.encode(docs)
-    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+    return from_stream(stream, nnz_pad)
 
 
 def synthesize(n_docs: int, vocab_size: int, avg_nnz: int, nnz_pad: int,
@@ -105,7 +129,7 @@ def protein_to_bow(seq: str) -> List[Tuple[int, int]]:
 def proteins_corpus(seqs: Sequence[str], nnz_pad: int = 256) -> Corpus:
     docs = [(i, protein_to_bow(s)) for i, s in enumerate(seqs)]
     stream = stream_format.encode(docs)
-    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+    return from_stream(stream, nnz_pad)
 
 
 # ---------------------------------------------------------------------------
@@ -126,7 +150,7 @@ def subgraphs_corpus(graphs: Sequence[Sequence[Tuple[int, int]]],
                      n_labels: int = 512, nnz_pad: int = 128) -> Corpus:
     docs = [(i, subgraph_to_bow(g, n_labels)) for i, g in enumerate(graphs)]
     stream = stream_format.encode(docs)
-    return Corpus(*stream_format.decode_to_ell(stream, nnz_pad))
+    return from_stream(stream, nnz_pad)
 
 
 # ---------------------------------------------------------------------------

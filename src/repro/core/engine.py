@@ -18,12 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Iterable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.distributed.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.paper_search import SearchConfig
@@ -40,12 +40,29 @@ class SearchResult:
     scores: np.ndarray    # [L, k] cosine
 
 
+class DeviceSlab(NamedTuple):
+    """A corpus slab already uploaded and sharded over the mesh — the unit
+    the streaming path scores. Produced by ``put_slab`` (or by the storage
+    prefetcher's background thread, DESIGN.md §3)."""
+    ids: jax.Array        # [n, K] int32
+    vals: jax.Array       # [n, K] float32
+    norms: jax.Array      # [n] float32
+    doc_ids: jax.Array    # [n] int32
+
+
+SlabLike = Union[Corpus, DeviceSlab]
+
+
 class PatternSearchEngine:
-    def __init__(self, corpus: Corpus, cfg: SearchConfig, ctx: MeshCtx,
-                 backend: str = "jnp"):
+    def __init__(self, corpus: Optional[Corpus], cfg: SearchConfig,
+                 ctx: MeshCtx, backend: str = "jnp"):
+        """``corpus=None`` builds a streaming-only engine (no resident
+        corpus): callers must use ``search_streaming`` / ``put_slab``."""
         self.cfg = cfg
         self.ctx = ctx
         self.backend = backend
+        if corpus is None:
+            corpus = Corpus.empty(cfg.nnz_pad)
         if corpus.ids.size and int(corpus.ids.max()) >= cfg.vocab_size:
             raise ValueError(
                 f"corpus word ids reach {int(corpus.ids.max())} but "
@@ -127,37 +144,55 @@ class PatternSearchEngine:
         return SearchResult(doc_ids=i.astype(np.int64), scores=v)
 
     # ------------------------------------------------------------------
-    def search_streaming(self, q_ids, q_vals, corpus_slabs) -> SearchResult:
-        """Score a sequence of corpus slabs larger than resident memory.
-        Double-buffers the next slab's device_put against the current
-        score (epoch-tagged host prefetch — DESIGN.md §2)."""
+    def search_streaming(self, q_ids, q_vals,
+                         corpus_slabs: Iterable[SlabLike]) -> SearchResult:
+        """Score a lazily-consumed sequence of corpus slabs larger than
+        resident memory, merging top-k across slabs (DESIGN.md §2).
+
+        Each element may be a host ``Corpus`` (uploaded here, with the next
+        slab's async device_put overlapping the current slab's scoring) or
+        an already-resident ``DeviceSlab`` (e.g. from the storage tier's
+        background prefetcher, which overlaps disk read + decode + upload
+        as well — DESIGN.md §3). The iterable is never materialized, so
+        store-backed iterators stream arbitrarily large corpora."""
         best: Optional[SearchResult] = None
-        next_dev = None
-        slabs = list(corpus_slabs)
-        for idx, slab in enumerate(slabs):
-            if next_dev is None:
-                next_dev = self._put_slab(slab)
-            cur = next_dev
-            if idx + 1 < len(slabs):  # prefetch the next slab (async)
-                next_dev = self._put_slab(slabs[idx + 1])
-            else:
-                next_dev = None
-            eng = self._with_slab(cur)
-            r = eng_search(eng, q_ids, q_vals)
+        it = iter(corpus_slabs)
+        cur = self._as_device(next(it, None))
+        if cur is None:
+            return self.empty_result(q_ids.shape[0])
+        while cur is not None:
+            # start the next H2D transfer before scoring the current slab
+            nxt = self._as_device(next(it, None))
+            r = eng_search(self._with_slab(cur), q_ids, q_vals)
             best = r if best is None else _merge_results(best, r,
                                                          self.cfg.top_k)
+            cur = nxt
         return best
 
-    def _put_slab(self, slab: Corpus):
+    def empty_result(self, n_queries: int) -> SearchResult:
+        """The [L, k] no-result sentinel (id -1, score -inf)."""
+        k = self.cfg.top_k
+        return SearchResult(np.full((n_queries, k), -1, np.int64),
+                            np.full((n_queries, k), -np.inf, np.float32))
+
+    def put_slab(self, slab: Corpus) -> DeviceSlab:
+        """Upload a host slab, sharded like the resident corpus. device_put
+        is async: the transfer overlaps whatever is already enqueued."""
         rows = self.ctx.dp_size
         slab = slab.pad_docs_to(-(-slab.n_docs // rows) * rows)
         sh = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes, None))
         sh1 = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes))
-        return (jax.device_put(slab.ids, sh), jax.device_put(slab.vals, sh),
-                jax.device_put(slab.norms, sh1),
-                jax.device_put(slab.doc_ids.astype(np.int32), sh1))
+        return DeviceSlab(
+            jax.device_put(slab.ids, sh), jax.device_put(slab.vals, sh),
+            jax.device_put(slab.norms, sh1),
+            jax.device_put(slab.doc_ids.astype(np.int32), sh1))
 
-    def _with_slab(self, dev):
+    def _as_device(self, slab: Optional[SlabLike]) -> Optional[DeviceSlab]:
+        if slab is None or isinstance(slab, DeviceSlab):
+            return slab
+        return self.put_slab(slab)
+
+    def _with_slab(self, dev: DeviceSlab):
         eng = object.__new__(PatternSearchEngine)
         eng.__dict__.update(self.__dict__)
         eng.d_ids, eng.d_vals, eng.d_norms, eng.d_docids = dev
@@ -169,8 +204,28 @@ def eng_search(eng: PatternSearchEngine, q_ids, q_vals) -> SearchResult:
 
 
 def _merge_results(a: SearchResult, b: SearchResult, k: int) -> SearchResult:
+    """Merge two [L, k] candidate sets into the best k per row.
+
+    Deterministic: descending score, stable within ties (a's candidates
+    win over b's). Duplicate doc ids keep only their best-scoring entry,
+    and no-result fillers (id < 0) never displace real candidates — any
+    unfilled tail stays (-1, -inf)."""
     ids = np.concatenate([a.doc_ids, b.doc_ids], axis=1)
     sc = np.concatenate([a.scores, b.scores], axis=1)
-    order = np.argsort(-sc, axis=1)[:, :k]
-    return SearchResult(np.take_along_axis(ids, order, 1),
-                        np.take_along_axis(sc, order, 1))
+    L = ids.shape[0]
+    out_i = np.full((L, k), -1, np.int64)
+    out_s = np.full((L, k), -np.inf, np.float32)
+    for row in range(L):
+        col = 0
+        seen = set()
+        for j in np.argsort(-sc[row], kind="stable"):
+            d = int(ids[row, j])
+            if d < 0 or d in seen:
+                continue
+            seen.add(d)
+            out_i[row, col] = d
+            out_s[row, col] = sc[row, j]
+            col += 1
+            if col == k:
+                break
+    return SearchResult(out_i, out_s)

@@ -68,13 +68,19 @@ def decode(stream: np.ndarray):
 
 def decode_to_ell(stream: np.ndarray, nnz_pad: int):
     """Vectorized stream -> ELL tiles (ids padded with -1, float32 values,
-    fp32 L2 norms). This is the ingest path the engine uses."""
+    fp32 L2 norms) plus the number of pairs dropped because their document
+    exceeded ``nnz_pad``. This is the ingest path the engine uses; callers
+    that care about exactness must check ``n_truncated == 0``.
+
+    Returns ``(doc_ids, ids, vals, norms, n_truncated)``.
+    """
     stream = np.asarray(stream, np.uint32)
     is_hdr = (stream & HEADER_BIT) != 0
     n_docs = int(is_hdr.sum())
     if n_docs == 0:
         return (np.empty((0,), np.int64), np.full((0, nnz_pad), -1, np.int32),
-                np.zeros((0, nnz_pad), np.float32), np.zeros((0,), np.float32))
+                np.zeros((0, nnz_pad), np.float32), np.zeros((0,), np.float32),
+                0)
     hdr_pos = np.flatnonzero(is_hdr)
     doc_ids = (stream[hdr_pos] & MAX_DOC_ID).astype(np.int64)
     # for every item, which document segment it belongs to
@@ -86,13 +92,14 @@ def decode_to_ell(stream: np.ndarray, nnz_pad: int):
     # position of each pair within its document
     idx = np.arange(stream.size)[pair_mask]
     pos = idx - hdr_pos[pair_seg] - 1
-    keep = pos < nnz_pad  # truncate docs longer than the pad (counted in tests)
+    keep = pos < nnz_pad  # truncate docs longer than the pad
+    n_truncated = int((~keep).sum())
     ids = np.full((n_docs, nnz_pad), -1, np.int32)
     vals = np.zeros((n_docs, nnz_pad), np.float32)
     ids[pair_seg[keep], pos[keep]] = words[keep]
     vals[pair_seg[keep], pos[keep]] = counts[keep]
     norms = np.sqrt((vals.astype(np.float64) ** 2).sum(1)).astype(np.float32)
-    return doc_ids, ids, vals, norms
+    return doc_ids, ids, vals, norms, n_truncated
 
 
 def stream_bytes(docs) -> int:

@@ -16,9 +16,22 @@ Array = jax.Array
 
 
 def local_topk(scores: Array, doc_ids: Array, k: int) -> Tuple[Array, Array]:
-    """scores: [D, L]; doc_ids: [D] -> (vals [L, k], ids [L, k])."""
-    vals, idx = jax.lax.top_k(scores.T, k)        # [L, k]
-    return vals, doc_ids[idx]
+    """scores: [D, L]; doc_ids: [D] -> (vals [L, k], ids [L, k]).
+
+    Padding rows (doc_id < 0, from pad_docs_to) are masked to -inf so they
+    never outrank a real document, and their reported id is forced to -1.
+    When k exceeds the shard's row count the candidate list is padded with
+    (-inf, -1) placeholders so every shard reports the same [L, k] shape.
+    """
+    scores = jnp.where(doc_ids[:, None] >= 0, scores, -jnp.inf)
+    k_eff = min(k, scores.shape[0])
+    vals, idx = jax.lax.top_k(scores.T, k_eff)    # [L, k_eff]
+    ids = jnp.where(jnp.isfinite(vals), doc_ids[idx], -1)
+    if k_eff < k:
+        pad = ((0, 0), (0, k - k_eff))
+        vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    return vals, ids
 
 
 def merge_topk(vals_a, ids_a, vals_b, ids_b, k: int):

@@ -25,7 +25,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.meshctx import MeshCtx

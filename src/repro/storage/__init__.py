@@ -1,0 +1,14 @@
+"""Flash storage tier: persistent segment store with in-storage filtering
+and async prefetch (DESIGN.md §3)."""
+from repro.storage.filter import (BitmapFilter, BloomFilter, build_filter,
+                                  from_meta)
+from repro.storage.prefetch import Prefetcher
+from repro.storage.segment import Segment, write_segment
+from repro.storage.session import FlashSearchSession, SearchStats
+from repro.storage.store import FlashStore
+
+__all__ = [
+    "BitmapFilter", "BloomFilter", "build_filter", "from_meta",
+    "Prefetcher", "Segment", "write_segment",
+    "FlashSearchSession", "SearchStats", "FlashStore",
+]

@@ -1,0 +1,97 @@
+"""Background slab prefetcher (DESIGN.md §3.3).
+
+The paper hides flash latency behind compute with a prefetch predictor in
+the flash interface logic; the host-scope analogue is a worker thread that
+stays ``depth`` slabs ahead of the scoring loop: while the engine scores
+segment i, the worker reads segment i+1 from disk (mmap page-in), decodes
+it to ELL, and issues the async ``device_put``. A bounded queue provides
+the double buffering — depth 2 means one slab being scored, one in flight
+— and backpressure so host RAM holds at most ``depth`` decoded slabs no
+matter how large the store is.
+
+``Prefetcher`` is generic: ``items`` is any iterable, ``load`` maps an
+item to the prefetched value (here: ``Segment`` -> ``DeviceSlab``).
+Exceptions in the worker surface in the consumer at the failing item's
+position; ``close()`` stops early without draining.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Generic, Iterable, Iterator, TypeVar
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+_DONE = object()
+
+
+class _WorkerError:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class Prefetcher(Generic[T, U]):
+    def __init__(self, items: Iterable[T], load: Callable[[T], U],
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._finished = False
+        self._worker = threading.Thread(
+            target=self._run, args=(iter(items), load), daemon=True,
+            name="slab-prefetch")
+        self._worker.start()
+
+    def _put(self, obj) -> bool:
+        """Blocking put that aborts on close(); True if delivered."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(obj, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self, it: Iterator[T], load: Callable[[T], U]):
+        try:
+            for item in it:
+                if self._stop.is_set():
+                    return
+                if not self._put(load(item)):
+                    return
+            self._put(_DONE)
+        except BaseException as e:  # surfaced at the consumer
+            self._put(_WorkerError(e))
+
+    def __iter__(self) -> Iterator[U]:
+        return self
+
+    def __next__(self) -> U:
+        if self._finished:          # after _DONE or a worker error the
+            raise StopIteration     # stream is over; never block again
+        v = self._q.get()
+        if v is _DONE:
+            self._finished = True
+            raise StopIteration
+        if isinstance(v, _WorkerError):
+            self._finished = True
+            raise v.exc
+        return v
+
+    def close(self):
+        """Stop the worker and discard queued slabs."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._worker.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

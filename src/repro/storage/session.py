@@ -1,0 +1,118 @@
+"""FlashSearchSession — end-to-end search over a FlashStore (DESIGN.md §3.4).
+
+Wires the storage tier into the engine the way the paper wires flash
+slices into accelerator kernels:
+
+    FlashStore segments
+        -> vocabulary-filter pruning   (in-storage pattern filter, §3.2)
+        -> Prefetcher background thread (read + decode + device_put, §3.3)
+        -> PatternSearchEngine.search_streaming (score + merge top-k)
+
+Every surviving segment becomes one fixed-shape DeviceSlab (padded to the
+store's largest segment rounded up to the mesh rows) so the whole stream
+reuses a single compiled program. ``last_stats`` reports how much the
+filter pruned — the skip-rate is the storage tier's headline metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import stream_format
+from repro.core.corpus import Corpus
+from repro.core.engine import DeviceSlab, PatternSearchEngine, SearchResult
+from repro.distributed.meshctx import MeshCtx, single_device_ctx
+from repro.storage.prefetch import Prefetcher
+from repro.storage.store import FlashStore
+
+
+@dataclasses.dataclass
+class SearchStats:
+    segments_total: int = 0
+    segments_skipped: int = 0
+    segments_scored: int = 0
+    docs_scored: int = 0
+    pairs_truncated: int = 0
+
+    @property
+    def skip_rate(self) -> float:
+        return (self.segments_skipped / self.segments_total
+                if self.segments_total else 0.0)
+
+
+class FlashSearchSession:
+    def __init__(self, store: FlashStore, cfg: SearchConfig,
+                 ctx: Optional[MeshCtx] = None, backend: str = "jnp",
+                 use_filter: bool = True, prefetch_depth: int = 2):
+        self.store = store
+        self.cfg = cfg
+        self.ctx = ctx or single_device_ctx()
+        self.use_filter = use_filter
+        self.prefetch_depth = prefetch_depth
+        if store.vocab_size > cfg.vocab_size:
+            # same invariant the resident engine constructor enforces:
+            # out-of-range word ids would silently scatter out of bounds
+            raise ValueError(
+                f"store vocab_size {store.vocab_size} exceeds "
+                f"cfg.vocab_size {cfg.vocab_size}")
+        self.engine = PatternSearchEngine(None, cfg, self.ctx, backend)
+        self.last_stats = SearchStats()
+        # one program shape for every slab: largest segment, mesh-aligned
+        rows = self.ctx.dp_size
+        self._slab_docs = -(-max(store.max_segment_docs, 1) // rows) * rows
+
+    # ------------------------------------------------------------------
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over the store."""
+        stats = SearchStats(segments_total=self.store.n_segments)
+        # segments appended since construction may have grown the slab shape
+        rows = self.ctx.dp_size
+        self._slab_docs = -(-max(self.store.max_segment_docs, 1)
+                            // rows) * rows
+        q_words = np.unique(q_ids[q_ids >= 0])
+        survivors = []
+        # one segment open at a time: a skipped segment costs its footer +
+        # filter pages and the handle is dropped immediately
+        for entry in self.store.entries:
+            seg = self.store.segment(entry.name)
+            if (self.use_filter and q_words.size
+                    and not seg.vocab_filter.contains_any(q_words)):
+                stats.segments_skipped += 1
+                self.store.release(entry.name)
+                continue
+            survivors.append(entry.name)
+            self.store.release(entry.name)
+        stats.segments_scored = len(survivors)
+        self.last_stats = stats
+        if not survivors:
+            return self.engine.empty_result(q_ids.shape[0])
+        with Prefetcher(survivors, self._load_slab,
+                        depth=self.prefetch_depth) as slabs:
+            result = self.engine.search_streaming(q_ids, q_vals, slabs)
+        return result
+
+    # ------------------------------------------------------------------
+    def _load_slab(self, name: str) -> DeviceSlab:
+        """Prefetch-thread body: mmap read -> ELL decode -> device upload.
+        The segment handle is released once decoded, so at most
+        ``prefetch_depth`` segments are open during the scoring stream."""
+        seg = self.store.segment(name)
+        doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
+            seg.stream(), self.cfg.nnz_pad)
+        self.store.release(name)
+        self.last_stats.docs_scored += int(doc_ids.size)
+        self.last_stats.pairs_truncated += n_trunc
+        corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(self._slab_docs)
+        return self.engine.put_slab(corpus)
+
+    def close(self):
+        self.store.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,213 @@
+"""FlashStore — a directory of segments plus a manifest (DESIGN.md §3.1).
+
+The persistent analogue of the paper's flash slices: a corpus too large
+for aggregate device memory lives as Fig. 8 segment files; queries stream
+only the segments whose vocabulary filter matches. Layout:
+
+    <root>/MANIFEST.json        store config + ordered segment entries
+    <root>/seg-000000.rsps      paged stream + filter + footer (segment.py)
+    <root>/seg-000001.rsps      ...
+
+The manifest is the commit point: segments are written (atomically) first,
+then the manifest is swapped via ``os.replace``; a crash mid-append leaves
+the previous manifest intact and at worst an orphan segment file, which
+``compact()`` garbage-collects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import stream_format
+from repro.core.corpus import Corpus, from_stream
+from repro.storage import segment as segment_lib
+
+MANIFEST = "MANIFEST.json"
+SEGMENT_SUFFIX = ".rsps"
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentEntry:
+    name: str
+    n_docs: int
+    n_items: int
+    doc_id_min: int
+    doc_id_max: int
+
+
+def _corpus_docs(corpus: Corpus) -> List[Tuple[int, List[Tuple[int, int]]]]:
+    """ELL rows -> [(doc_id, [(word, count), ...])], skipping pad rows."""
+    docs = []
+    for r in range(corpus.n_docs):
+        did = int(corpus.doc_ids[r])
+        if did < 0:
+            continue
+        keep = corpus.ids[r] >= 0
+        docs.append((did, list(zip(corpus.ids[r][keep].tolist(),
+                                   corpus.vals[r][keep].astype(int).tolist()))))
+    return docs
+
+
+class FlashStore:
+    def __init__(self, root: str, manifest: Dict):
+        self.root = root
+        self.manifest = manifest
+        self._open_segments: Dict[str, segment_lib.Segment] = {}
+
+    # -- lifecycle -----------------------------------------------------
+    @classmethod
+    def create(cls, root: str, *, vocab_size: int,
+               docs_per_segment: int = 4096,
+               page_items: int = segment_lib.DEFAULT_PAGE_ITEMS,
+               filter_kind: str = "auto") -> "FlashStore":
+        os.makedirs(root, exist_ok=True)
+        if os.path.exists(os.path.join(root, MANIFEST)):
+            raise FileExistsError(f"store already exists at {root}")
+        manifest = {
+            "version": 1,
+            "vocab_size": vocab_size,
+            "docs_per_segment": docs_per_segment,
+            "page_items": page_items,
+            "filter_kind": filter_kind,
+            "next_segment_id": 0,
+            "segments": [],
+        }
+        store = cls(root, manifest)
+        store._write_manifest()
+        return store
+
+    @classmethod
+    def open(cls, root: str) -> "FlashStore":
+        with open(os.path.join(root, MANIFEST)) as f:
+            return cls(root, json.load(f))
+
+    def close(self):
+        for seg in self._open_segments.values():
+            seg.close()
+        self._open_segments.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _write_manifest(self):
+        tmp = os.path.join(self.root, MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        os.replace(tmp, os.path.join(self.root, MANIFEST))
+
+    # -- properties ----------------------------------------------------
+    @property
+    def entries(self) -> List[SegmentEntry]:
+        return [SegmentEntry(**e) for e in self.manifest["segments"]]
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.manifest["segments"])
+
+    @property
+    def n_docs(self) -> int:
+        return sum(e["n_docs"] for e in self.manifest["segments"])
+
+    @property
+    def max_segment_docs(self) -> int:
+        """Largest segment (slab padding target so every slab compiles to
+        one program shape — DESIGN.md §3.3)."""
+        return max((e["n_docs"] for e in self.manifest["segments"]),
+                   default=0)
+
+    @property
+    def vocab_size(self) -> int:
+        return self.manifest["vocab_size"]
+
+    # -- write path ----------------------------------------------------
+    def _write_one_segment(self, chunk) -> Dict:
+        """Write one segment file and return its manifest entry (the
+        manifest itself is NOT written — callers batch that)."""
+        sid = self.manifest["next_segment_id"]
+        name = f"seg-{sid:06d}{SEGMENT_SUFFIX}"
+        footer = segment_lib.write_segment(
+            os.path.join(self.root, name), chunk,
+            page_items=self.manifest["page_items"],
+            vocab_size=self.manifest["vocab_size"],
+            filter_kind=self.manifest["filter_kind"])
+        self.manifest["next_segment_id"] = sid + 1
+        return {"name": name, "n_docs": footer["n_docs"],
+                "n_items": footer["n_items"],
+                "doc_id_min": footer["doc_id_min"],
+                "doc_id_max": footer["doc_id_max"]}
+
+    def append_docs(self, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]]],
+                    docs_per_segment: Optional[int] = None) -> List[str]:
+        """Append documents, splitting into <= docs_per_segment segments.
+        Returns the new segment names."""
+        per = docs_per_segment or self.manifest["docs_per_segment"]
+        entries = [self._write_one_segment(docs[lo:lo + per])
+                   for lo in range(0, len(docs), per)]
+        self.manifest["segments"].extend(entries)
+        self._write_manifest()
+        return [e["name"] for e in entries]
+
+    def append_corpus(self, corpus: Corpus,
+                      docs_per_segment: Optional[int] = None) -> List[str]:
+        return self.append_docs(_corpus_docs(corpus), docs_per_segment)
+
+    def compact(self, docs_per_segment: Optional[int] = None) -> int:
+        """Rewrite all segments at full occupancy (merging small appends)
+        and drop orphan segment files. Streams one old segment at a time,
+        so host memory stays bounded at ~one segment regardless of store
+        size. Returns the new segment count."""
+        per = docs_per_segment or self.manifest["docs_per_segment"]
+        old_entries = list(self.manifest["segments"])
+        new_entries: List[Dict] = []
+        buf: List = []
+        for e in old_entries:
+            seg = self.segment(e["name"])
+            buf.extend(seg.docs())
+            self.release(e["name"])
+            while len(buf) >= per:
+                new_entries.append(self._write_one_segment(buf[:per]))
+                del buf[:per]
+        if buf:
+            new_entries.append(self._write_one_segment(buf))
+        self.close()
+        self.manifest["segments"] = new_entries
+        self.manifest["docs_per_segment"] = per
+        self._write_manifest()         # commit point: new segments live
+        live = {e["name"] for e in new_entries}
+        for fn in os.listdir(self.root):
+            if fn.endswith(SEGMENT_SUFFIX) and fn not in live:
+                os.unlink(os.path.join(self.root, fn))
+        return self.n_segments
+
+    # -- read path -----------------------------------------------------
+    def segment(self, name: str) -> segment_lib.Segment:
+        if name not in self._open_segments:
+            self._open_segments[name] = segment_lib.Segment(
+                os.path.join(self.root, name))
+        return self._open_segments[name]
+
+    def release(self, name: str):
+        """Close one segment's fd/mmap (readers drop handles as soon as a
+        segment is filtered out or decoded, so a search never holds more
+        than a few descriptors regardless of store size)."""
+        seg = self._open_segments.pop(name, None)
+        if seg is not None:
+            seg.close()
+
+    def segments(self) -> Iterable[segment_lib.Segment]:
+        return [self.segment(e["name"]) for e in self.manifest["segments"]]
+
+    def scan_corpus(self, nnz_pad: int, *, strict: bool = True) -> Corpus:
+        """Decode the whole store into one in-memory Corpus (tests and
+        small stores; the query path never needs this)."""
+        streams = [seg.stream() for seg in self.segments()]
+        if not streams:
+            return Corpus.empty(nnz_pad)
+        return from_stream(np.concatenate(streams), nnz_pad, strict=strict)

@@ -17,7 +17,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.distributed.compat import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, TrainConfig

@@ -32,7 +32,7 @@ exact = (gA["w"] + gB["w"]) / 2
 
 @jax.jit
 def run(g, e):
-    from jax import shard_map
+    from repro.distributed.compat import shard_map
     f = shard_map(lambda gg, ee: compression.compressed_mean_tree(
                       gg, ee, ctx, "pod"),
                   mesh=mesh, in_specs=(P("pod"), P()), out_specs=(P(), P()),

@@ -88,6 +88,28 @@ def test_streaming_equals_resident(setup):
                                np.sort(r_res.scores, 1), rtol=1e-4, atol=1e-5)
 
 
+def test_topk_exceeding_real_docs_never_leaks_padding():
+    """Regression: with top_k > n_docs the padding rows added by
+    pad_docs_to (doc_id -1, zero norm) used to be able to surface (and
+    top_k > the per-shard row count crashed lax.top_k outright). Now
+    every surplus slot is the (-1, -inf) no-result sentinel and all
+    finite-score entries are real documents."""
+    import dataclasses
+    cfg = dataclasses.replace(smoke(), top_k=8)
+    corpus = corpus_lib.synthesize(3, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=1)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    qi, qv = _queries(corpus, cfg, [0])
+    for r in (eng.search(qi, qv),
+              eng.search_streaming(qi, qv, iter([corpus.slice_rows(0, 2),
+                                                 corpus.slice_rows(2, 3)]))):
+        finite = np.isfinite(r.scores[0])
+        assert set(r.doc_ids[0][finite]) == {0, 1, 2}
+        assert (r.doc_ids[0][~finite] == -1).all()
+        assert np.isneginf(r.scores[0][~finite]).all()
+        assert r.doc_ids.shape == (1, cfg.top_k)
+
+
 def test_protein_and_subgraph_corpora():
     rng = np.random.default_rng(0)
     seqs = ["".join(rng.choice(list(corpus_lib.AMINO), 40)) for _ in range(20)]

@@ -1,0 +1,148 @@
+"""FlashSearchSession end-to-end: store-backed search must match the
+in-memory engine exactly, and the vocabulary filter must skip segments
+(the ISSUE acceptance criteria)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.storage import FlashSearchSession, FlashStore
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(500, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=3)
+    root = str(tmp_path_factory.mktemp("flash") / "store")
+    store = FlashStore.create(root, vocab_size=cfg.vocab_size,
+                              docs_per_segment=100)
+    store.append_corpus(corpus)
+    assert store.n_segments >= 4            # acceptance: spans >= 4 segments
+    sess = FlashSearchSession(store, cfg)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    return cfg, corpus, store, sess, eng
+
+
+def _queries(corpus, cfg, idxs):
+    qs = [corpus_lib.make_query(corpus, i, cfg.max_query_nnz) for i in idxs]
+    return np.stack([q[0] for q in qs]), np.stack([q[1] for q in qs])
+
+
+def test_flash_search_matches_resident_exactly(setup):
+    cfg, corpus, store, sess, eng = setup
+    qi, qv = _queries(corpus, cfg, [3, 250, 499])
+    r = sess.search(qi, qv)
+    ref = eng.search(qi, qv)
+    np.testing.assert_array_equal(r.doc_ids, ref.doc_ids)
+    np.testing.assert_allclose(r.scores, ref.scores, rtol=1e-5, atol=1e-6)
+    assert sess.last_stats.segments_total == store.n_segments
+    assert sess.last_stats.docs_scored == corpus.n_docs
+    assert sess.last_stats.pairs_truncated == 0
+
+
+def test_filter_disabled_matches_too(setup):
+    cfg, corpus, store, _, eng = setup
+    sess = FlashSearchSession(store, cfg, use_filter=False)
+    qi, qv = _queries(corpus, cfg, [42])
+    np.testing.assert_array_equal(sess.search(qi, qv).doc_ids,
+                                  eng.search(qi, qv).doc_ids)
+    assert sess.last_stats.segments_skipped == 0
+
+
+def test_sparse_query_skips_segments(tmp_path):
+    """Corpus clustered by vocabulary band: one segment per band. A query
+    confined to band 0 must skip every other segment via the (exact
+    bitmap) filter and still return the right documents."""
+    cfg = smoke()
+    n_bands, per_band, band_w = 5, 40, 100
+    rng = np.random.default_rng(7)
+    docs = []
+    for b in range(n_bands):
+        for i in range(per_band):
+            words = rng.choice(np.arange(b * band_w, (b + 1) * band_w),
+                               8, replace=False)
+            docs.append((b * per_band + i,
+                         sorted((int(w), int(rng.integers(1, 9)))
+                                for w in words)))
+    store = FlashStore.create(str(tmp_path / "bands"),
+                              vocab_size=cfg.vocab_size,
+                              docs_per_segment=per_band)
+    store.append_docs(docs)
+    assert store.n_segments == n_bands
+    sess = FlashSearchSession(store, cfg)
+
+    target = docs[5]
+    qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+    for j, (w, c) in enumerate(target[1]):
+        qi[0, j] = w
+        qv[0, j] = c
+    r = sess.search(qi, qv)
+    assert r.doc_ids[0, 0] == target[0]          # self-search wins
+    np.testing.assert_allclose(r.scores[0, 0], 1.0, rtol=1e-5)
+    st = sess.last_stats
+    assert st.segments_skipped >= 1              # acceptance criterion
+    assert st.segments_skipped == n_bands - 1    # bitmap filter is exact
+    assert st.segments_scored == 1
+    assert st.docs_scored == per_band
+    # skipped segments must not cost a full-store scan next time either
+    assert 0 < st.skip_rate < 1
+    sess.close()
+
+
+def test_all_segments_skipped_returns_empty(tmp_path):
+    cfg = smoke()
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size,
+                              docs_per_segment=8)
+    store.append_docs([(i, [(3, 1), (7, 2)]) for i in range(8)])
+    sess = FlashSearchSession(store, cfg)
+    qi = np.full((2, 4), -1, np.int32)
+    qv = np.zeros((2, 4), np.float32)
+    qi[:, 0] = 200                               # word absent from the store
+    qv[:, 0] = 1.0
+    r = sess.search(qi, qv)
+    assert r.doc_ids.shape == (2, cfg.top_k)
+    assert (r.doc_ids == -1).all()
+    assert np.isneginf(r.scores).all()
+    assert sess.last_stats.segments_skipped == 1
+    sess.close()
+
+
+def test_vocab_mismatch_rejected(tmp_path):
+    """A store written with a larger vocab than the engine config would
+    scatter word ids out of bounds (silently, under jit) — the session
+    must refuse it up front like the resident engine constructor does."""
+    cfg = smoke()                                 # vocab_size = 512
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=1024)
+    with pytest.raises(ValueError, match="vocab_size"):
+        FlashSearchSession(store, cfg)
+    store.close()
+
+
+def test_empty_store_search(tmp_path):
+    cfg = smoke()
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size)
+    sess = FlashSearchSession(store, cfg)
+    qi = np.array([[1, 2, -1, -1]], np.int32)
+    qv = np.array([[1.0, 1.0, 0.0, 0.0]], np.float32)
+    r = sess.search(qi, qv)
+    assert (r.doc_ids == -1).all()
+    sess.close()
+
+
+def test_truncation_reported_in_stats(tmp_path):
+    """Documents wider than cfg.nnz_pad surface as pairs_truncated."""
+    cfg = smoke()                                 # nnz_pad = 16
+    wide = [(0, [(w, 1) for w in range(30)]),
+            (1, [(w, 1) for w in range(5)])]
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size)
+    store.append_docs(wide)
+    sess = FlashSearchSession(store, cfg)
+    qi = np.array([[0, 1, 2, -1]], np.int32)
+    qv = np.array([[1.0, 1.0, 1.0, 0.0]], np.float32)
+    sess.search(qi, qv)
+    assert sess.last_stats.pairs_truncated == 30 - cfg.nnz_pad
+    sess.close()

@@ -1,0 +1,208 @@
+"""Storage tier units: filters, segment files, FlashStore, prefetcher."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import stream_format as sf
+from repro.storage import filter as filter_lib
+from repro.storage import segment as segment_lib
+from repro.storage.prefetch import Prefetcher
+from repro.storage.store import FlashStore
+
+
+def _rand_docs(n, vocab, rng, max_pairs=30, start_id=0):
+    return [(start_id + i,
+             sorted((int(w), int(rng.integers(1, 20))) for w in
+                    rng.choice(vocab, int(rng.integers(1, max_pairs)),
+                               replace=False)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# filters
+# ---------------------------------------------------------------------------
+def test_bitmap_filter_exact():
+    words = np.array([0, 3, 17, 511])
+    f = filter_lib.BitmapFilter.build(words, vocab_size=512)
+    assert f.contains(words).all()
+    absent = np.setdiff1d(np.arange(512), words)
+    assert not f.contains(absent).any()
+    assert not f.contains_any(absent)
+    assert f.contains_any([5, 17])
+    # negative / out-of-range ids never match
+    assert not f.contains([-1, 600]).any()
+
+
+def test_bitmap_filter_roundtrip():
+    f = filter_lib.BitmapFilter.build([2, 9], vocab_size=100)
+    g = filter_lib.from_meta(f.meta(), f.to_bytes())
+    np.testing.assert_array_equal(f.bits, g.bits)
+    assert g.contains_any([9]) and not g.contains_any([3])
+
+
+def test_bloom_filter_no_false_negatives_and_low_fp():
+    rng = np.random.default_rng(0)
+    words = rng.choice(1 << 19, 2000, replace=False)
+    f = filter_lib.BloomFilter.build(words, bits_per_key=10)
+    assert f.contains(words).all()          # Bloom never false-negatives
+    absent = np.setdiff1d(rng.choice(1 << 19, 20_000, replace=False), words)
+    fp = f.contains(absent).mean()
+    assert fp < 0.02, f"false positive rate {fp:.4f}"
+    g = filter_lib.from_meta(f.meta(), f.to_bytes())
+    np.testing.assert_array_equal(f.words, g.words)
+
+
+def test_build_filter_auto_selects():
+    assert isinstance(filter_lib.build_filter([1], vocab_size=512),
+                      filter_lib.BitmapFilter)
+    assert isinstance(filter_lib.build_filter([1], vocab_size=1 << 24),
+                      filter_lib.BloomFilter)
+    assert isinstance(filter_lib.build_filter([1], vocab_size=None),
+                      filter_lib.BloomFilter)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+def test_segment_roundtrip_and_pages(tmp_path):
+    rng = np.random.default_rng(1)
+    docs = _rand_docs(57, 500, rng)
+    path = str(tmp_path / "seg.rsps")
+    segment_lib.write_segment(path, docs, page_items=64, vocab_size=512)
+    with segment_lib.Segment(path) as seg:
+        assert seg.n_docs == 57
+        assert seg.doc_id_range == (0, 56)
+        assert sf.decode(seg.stream()) == docs
+        # pages tile the stream exactly and respect the size budget
+        rebuilt = np.concatenate(
+            [seg.page_stream(i) for i in range(seg.n_pages)])
+        np.testing.assert_array_equal(rebuilt, seg.stream())
+        assert all(p["n_items"] <= 64 for p in seg.footer["pages"])
+        # every page is independently decodable (doc-aligned splits)
+        per_page = [d for i in range(seg.n_pages)
+                    for d in sf.decode(seg.page_stream(i))]
+        assert per_page == docs
+        # filter covers exactly the segment's vocabulary
+        words = np.unique([w for _, ps in docs for w, _ in ps])
+        assert seg.vocab_filter.contains(words).all()
+        assert not seg.vocab_filter.contains_any(
+            np.setdiff1d(np.arange(512), words))
+
+
+def test_segment_oversized_doc_gets_own_page(tmp_path):
+    docs = [(0, [(w, 1) for w in range(100)]),   # 101 items > page budget
+            (1, [(5, 2)])]
+    path = str(tmp_path / "big.rsps")
+    segment_lib.write_segment(path, docs, page_items=32, vocab_size=512)
+    with segment_lib.Segment(path) as seg:
+        assert seg.n_pages == 2
+        assert seg.footer["pages"][0]["n_items"] == 101
+        assert sf.decode(seg.stream()) == docs
+
+
+def test_segment_rejects_corruption(tmp_path):
+    path = str(tmp_path / "seg.rsps")
+    segment_lib.write_segment(path, [(0, [(1, 1)])], vocab_size=16)
+    raw = open(path, "rb").read()
+    bad = str(tmp_path / "bad.rsps")
+    with open(bad, "wb") as f:
+        f.write(raw[:-4])                    # truncated footer magic
+    with pytest.raises(ValueError):
+        segment_lib.Segment(bad)
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+def test_store_append_open_scan(tmp_path):
+    rng = np.random.default_rng(2)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=512, docs_per_segment=20)
+    docs = _rand_docs(70, 500, rng)
+    store.append_docs(docs)
+    assert store.n_segments == 4             # 20+20+20+10
+    assert store.n_docs == 70
+    assert store.max_segment_docs == 20
+    store.close()
+    # reopen from disk and decode everything back
+    store2 = FlashStore.open(root)
+    assert store2.n_docs == 70
+    got = []
+    for seg in store2.segments():
+        got.extend(seg.docs())
+    assert got == docs
+    corpus = store2.scan_corpus(nnz_pad=32)
+    assert corpus.n_docs == 70
+    store2.close()
+
+
+def test_store_create_refuses_overwrite(tmp_path):
+    root = str(tmp_path / "store")
+    FlashStore.create(root, vocab_size=16).close()
+    with pytest.raises(FileExistsError):
+        FlashStore.create(root, vocab_size=16)
+
+
+def test_store_compact_merges_and_gcs(tmp_path):
+    rng = np.random.default_rng(3)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=512, docs_per_segment=8)
+    for lo in range(0, 30, 10):              # three small appends
+        store.append_docs(_rand_docs(10, 500, rng, start_id=lo))
+    assert store.n_segments == 6             # ceil(10/8) * 3
+    # plant an orphan from a hypothetical crashed append
+    orphan = os.path.join(root, "seg-999999.rsps")
+    open(orphan, "wb").write(b"junk")
+    before = {d for d, _ in
+              (doc for seg in store.segments() for doc in seg.docs())}
+    store.compact(docs_per_segment=16)
+    assert store.n_segments == 2             # 30 docs / 16
+    assert not os.path.exists(orphan)
+    after = [doc for seg in store.segments() for doc in seg.docs()]
+    assert {d for d, _ in after} == before
+    assert store.n_docs == 30
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+def test_prefetcher_preserves_order_and_overlaps():
+    loaded = []
+
+    def load(i):
+        loaded.append(i)
+        return i * 10
+
+    with Prefetcher(range(20), load, depth=2) as pf:
+        assert list(pf) == [i * 10 for i in range(20)]
+    assert loaded == list(range(20))
+
+
+def test_prefetcher_propagates_worker_exception():
+    def load(i):
+        if i == 3:
+            raise RuntimeError("disk on fire")
+        return i
+
+    pf = Prefetcher(range(10), load, depth=2)
+    got = []
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        for v in pf:
+            got.append(v)
+    assert got == [0, 1, 2]
+
+
+def test_prefetcher_close_stops_worker():
+    started = threading.Event()
+
+    def load(i):
+        started.set()
+        return i
+
+    pf = Prefetcher(range(1_000_000), load, depth=2)
+    started.wait(timeout=5)
+    pf.close()
+    assert not pf._worker.is_alive()

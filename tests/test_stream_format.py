@@ -1,6 +1,6 @@
 """Paper Fig. 8 stream format: roundtrip + bandwidth-saving claim."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import stream_format as sf
 
@@ -30,9 +30,11 @@ def test_roundtrip(docs):
 @given(docs=docs_strategy)
 def test_decode_to_ell_matches_decode(docs):
     stream = sf.encode(docs)
-    doc_ids, ids, vals, norms = sf.decode_to_ell(stream, nnz_pad=32)
+    doc_ids, ids, vals, norms, n_trunc = sf.decode_to_ell(stream, nnz_pad=32)
     back = dict(sf.decode(stream))
     assert list(doc_ids) == [d for d, _ in docs]
+    # docs_strategy caps docs at 30 pairs < nnz_pad: nothing may be dropped
+    assert n_trunc == 0
     for r, (d, _) in enumerate(docs):
         pairs = sorted(back[d])
         got = [(int(i), int(v)) for i, v in zip(ids[r], vals[r]) if i >= 0]
@@ -54,6 +56,11 @@ def test_bandwidth_saving_claim():
 
 
 def test_truncation_is_explicit():
-    docs = [(0, [(w, 1) for w in range(40)])]
-    _, ids, vals, _ = sf.decode_to_ell(sf.encode(docs), nnz_pad=16)
+    docs = [(0, [(w, 1) for w in range(40)]), (1, [(w, 1) for w in range(10)])]
+    _, ids, vals, _, n_trunc = sf.decode_to_ell(sf.encode(docs), nnz_pad=16)
     assert (ids[0] >= 0).sum() == 16
+    assert n_trunc == 40 - 16          # dropped pairs are reported, not silent
+    assert (ids[1] >= 0).sum() == 10   # shorter docs unaffected
+    # the no-truncation case reports zero
+    *_, none_trunc = sf.decode_to_ell(sf.encode(docs), nnz_pad=64)
+    assert none_trunc == 0

@@ -1,0 +1,144 @@
+"""top-k reduction primitives: local_topk padding semantics, the
+ppermute butterfly variant vs the all_gather variant on a real
+multi-device mesh, and cross-slab _merge_results dedup/ordering."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import topk as topk_lib
+from repro.core.engine import SearchResult, _merge_results
+
+
+# ---------------------------------------------------------------------------
+# local_topk: padding rows must never surface as results
+# ---------------------------------------------------------------------------
+def test_local_topk_masks_padding_rows():
+    scores = np.array([[0.9, 0.1],
+                       [0.5, 0.2],
+                       [0.99, 0.8]], np.float32)   # row 2 is padding
+    doc_ids = np.array([10, 11, -1], np.int32)
+    v, i = topk_lib.local_topk(jax.numpy.asarray(scores),
+                               jax.numpy.asarray(doc_ids), 3)
+    v, i = np.asarray(v), np.asarray(i)
+    # padding row outranked everything before the fix; now it is -inf/-1
+    np.testing.assert_array_equal(i[0], [10, 11, -1])
+    np.testing.assert_allclose(v[0, :2], [0.9, 0.5])
+    assert np.isneginf(v[0, 2]) and np.isneginf(v[1, 2])
+    np.testing.assert_array_equal(i[1], [11, 10, -1])
+
+
+def test_local_topk_k_exceeds_rows():
+    scores = np.array([[0.3], [0.7]], np.float32)    # [D=2, L=1]
+    doc_ids = np.array([4, 9], np.int32)
+    v, i = topk_lib.local_topk(jax.numpy.asarray(scores),
+                               jax.numpy.asarray(doc_ids), 5)
+    v, i = np.asarray(v), np.asarray(i)
+    assert v.shape == (1, 5) and i.shape == (1, 5)
+    np.testing.assert_array_equal(i[0], [9, 4, -1, -1, -1])
+    assert np.isneginf(v[0, 2:]).all()
+
+
+# ---------------------------------------------------------------------------
+# tree_topk_ppermute == tree_topk on an 8-device CPU mesh (subprocess so
+# the XLA device-count flag does not leak into other tests)
+# ---------------------------------------------------------------------------
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import topk as topk_lib
+from repro.distributed.compat import shard_map
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("data",))
+L, k, per = 3, 4, 16
+rng = np.random.default_rng(0)
+scores = rng.standard_normal((8 * per, L)).astype(np.float32)
+doc_ids = np.arange(8 * per, dtype=np.int32)
+
+def local(scores, doc_ids):
+    v, i = topk_lib.local_topk(scores, doc_ids, k)
+    vg, ig = topk_lib.tree_topk(v, i, k, "data")
+    vp, ip = topk_lib.tree_topk_ppermute(v, i, k, "data", 8)
+    return vg, ig, vp, ip
+
+f = shard_map(local, mesh=mesh,
+              in_specs=(P("data"), P("data")),
+              out_specs=(P(), P(), P(), P()),
+              check_vma=False)
+vg, ig, vp, ip = f(scores, doc_ids)
+# oracle: global top-k over all rows
+want_v, want_idx = [], []
+for l in range(L):
+    order = np.argsort(-scores[:, l], kind="stable")[:k]
+    want_idx.append(doc_ids[order]); want_v.append(scores[order, l])
+print(json.dumps({
+    "gather_v": np.asarray(vg).tolist(), "gather_i": np.asarray(ig).tolist(),
+    "pp_v": np.asarray(vp).tolist(), "pp_i": np.asarray(ip).tolist(),
+    "want_v": np.stack(want_v).tolist(), "want_i": np.stack(want_idx).tolist(),
+}))
+"""
+
+
+def test_tree_topk_ppermute_matches_gather_on_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    np.testing.assert_allclose(res["gather_v"], res["want_v"], rtol=1e-6)
+    np.testing.assert_allclose(res["pp_v"], res["want_v"], rtol=1e-6)
+    # values fully determine ids here (distinct random scores)
+    np.testing.assert_array_equal(res["gather_i"], res["want_i"])
+    np.testing.assert_array_equal(res["pp_i"], res["want_i"])
+
+
+# ---------------------------------------------------------------------------
+# cross-slab merge
+# ---------------------------------------------------------------------------
+def _res(ids, scores):
+    return SearchResult(np.asarray(ids, np.int64),
+                        np.asarray(scores, np.float32))
+
+
+def test_merge_results_orders_descending():
+    a = _res([[1, 2]], [[0.9, 0.5]])
+    b = _res([[3, 4]], [[0.7, 0.2]])
+    m = _merge_results(a, b, 3)
+    np.testing.assert_array_equal(m.doc_ids, [[1, 3, 2]])
+    np.testing.assert_allclose(m.scores, [[0.9, 0.7, 0.5]])
+
+
+def test_merge_results_dedups_keeping_best():
+    a = _res([[7, 2]], [[0.9, 0.5]])
+    b = _res([[7, 4]], [[0.8, 0.6]])     # 7 appears in both slabs
+    m = _merge_results(a, b, 3)
+    np.testing.assert_array_equal(m.doc_ids, [[7, 4, 2]])
+    np.testing.assert_allclose(m.scores, [[0.9, 0.6, 0.5]])
+
+
+def test_merge_results_fillers_never_displace():
+    ninf = -np.inf
+    a = _res([[5, -1, -1]], [[0.4, ninf, ninf]])
+    b = _res([[8, -1, -1]], [[0.6, ninf, ninf]])
+    m = _merge_results(a, b, 3)
+    np.testing.assert_array_equal(m.doc_ids, [[8, 5, -1]])
+    assert np.isneginf(m.scores[0, 2])
+
+
+def test_merge_results_stable_on_ties():
+    # equal scores: a's candidate (earlier slab) must come first
+    a = _res([[1]], [[0.5]])
+    b = _res([[2]], [[0.5]])
+    m = _merge_results(a, b, 2)
+    np.testing.assert_array_equal(m.doc_ids, [[1, 2]])

@@ -90,7 +90,7 @@ def test_int8_training_converges(tmp_path):
 
 
 def test_quantize_roundtrip_property():
-    from hypothesis import given, settings, strategies as st
+    from hypothesis_compat import given, settings, strategies as st
 
     @settings(max_examples=30, deadline=None)
     @given(seed=st.integers(0, 2**20),
