@@ -1,0 +1,147 @@
+"""Serving-layer benchmark: micro-batch coalescing throughput/latency
+sweep vs the one-query-at-a-time baseline (DESIGN.md §4).
+
+Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
+
+    serve/serial_qps           the no-coalescing floor (16 blocking
+                               clients behind a lock, L=1 per call)
+    serve/qps@batch=N          closed-loop QPS at max_batch=N
+    serve/p50_ms@batch=N       per-query median latency
+    serve/p99_ms@batch=N
+    serve/speedup@batch=8      coalesced / serial (acceptance: >= 2x)
+    serve/recompiles           engine programs traced across the whole
+                               sweep (acceptance: <= log2(max_batch)+1)
+
+The sweep warms every L-bucket program first, so rows measure steady
+state; the recompile row shows what the L-bucket cache held compilation
+to across every batch size served.
+
+Usage: PYTHONPATH=src python benchmarks/serve_bench.py [--docs 4000]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.serve import SearchService
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _run_clients(n_clients, n_requests, do_query):
+    lats = [[] for _ in range(n_clients)]
+
+    def client(tid):
+        rng = np.random.default_rng(1000 + tid)
+        for _ in range(n_requests):
+            t0 = time.perf_counter()
+            do_query(rng)
+            lats[tid].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return np.concatenate([np.asarray(l) for l in lats]), \
+        time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=4_000)
+    ap.add_argument("--vocab", type=int, default=20_000)
+    ap.add_argument("--nnz", type=int, default=60)
+    ap.add_argument("--nnz-pad", type=int, default=64)
+    ap.add_argument("--query-nnz", type=int, default=48)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="serve-bench", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.nnz, nnz_pad=args.nnz_pad,
+                       top_k=16)
+    corpus = corpus_lib.synthesize(args.docs, args.vocab, args.nnz,
+                                   args.nnz_pad, seed=0)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+
+    def draw(rng):
+        return corpus_lib.make_query(corpus, int(rng.integers(args.docs)),
+                                     args.query_nnz)
+
+    # warm every L bucket once so all rows are steady-state
+    wrng = np.random.default_rng(7)
+    L = 1
+    while L <= args.max_batch:
+        qs = [draw(wrng) for _ in range(L)]
+        eng.search(np.stack([q[0] for q in qs]),
+                   np.stack([q[1] for q in qs]))
+        L *= 2
+
+    # -- serial baseline: one L=1 call at a time ------------------------
+    lock = threading.Lock()
+
+    def serial_query(rng):
+        qi, qv = draw(rng)
+        with lock:
+            eng.search(qi[None], qv[None])
+
+    lats, wall = _run_clients(args.clients, args.requests, serial_query)
+    serial_qps = lats.size / wall
+    _row("serve/serial_qps", wall / lats.size * 1e6, f"{serial_qps:.1f}")
+
+    # -- coalesced sweep ------------------------------------------------
+    qps_at = {}
+    batch = 1
+    while batch <= args.max_batch:
+        with SearchService(eng, max_batch=batch, max_delay_ms=1.0) as svc:
+            def svc_query(rng):
+                qi, qv = draw(rng)
+                svc.submit(qi, qv).result()
+
+            lats, wall = _run_clients(args.clients, args.requests, svc_query)
+            qps = lats.size / wall
+            qps_at[batch] = qps
+            _row(f"serve/qps@batch={batch}", wall / lats.size * 1e6,
+                 f"{qps:.1f}")
+            _row(f"serve/p50_ms@batch={batch}", 0.0,
+                 f"{np.percentile(lats, 50) * 1e3:.2f}")
+            _row(f"serve/p99_ms@batch={batch}", 0.0,
+                 f"{np.percentile(lats, 99) * 1e3:.2f}")
+            _row(f"serve/occupancy@batch={batch}", 0.0,
+                 f"{svc.stats.mean_occupancy:.2f}")
+        batch *= 2
+
+    speedup = qps_at[args.max_batch] / serial_qps
+    _row(f"serve/speedup@batch={args.max_batch}", 0.0, f"{speedup:.2f}")
+    n_traces = eng.compile_stats["n_traces"]
+    bound = int(math.log2(args.max_batch)) + 1
+    _row("serve/recompiles", 0.0, f"{n_traces} (bound {bound})")
+    ok = speedup >= 2.0 and n_traces <= bound
+    print(f"serve/acceptance,{0.0:.1f},"
+          f"{'PASS' if ok else 'FAIL'} (speedup {speedup:.2f}x >= 2x, "
+          f"{n_traces} traces <= {bound})")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,14 @@ Streaming mode handles corpora larger than aggregate HBM: fixed-size
 resident slabs are scored while the next slab is transferred
 (double-buffered, epoch-tagged — the prefetch-predictor analogue at host
 scope), with top-k merged across slabs.
+
+Serving mode (DESIGN.md §4) feeds ``search`` micro-batches of varying L
+from the SearchService coalescer. To keep variable L cheap, query shapes
+are *bucketed*: L pads to the next power-of-two multiple of the model
+axis, and the merged id stream pads to a capacity proportional to that L
+bucket — so a session that serves batches of any size up to ``max_batch``
+compiles at most ``log2(max_batch) + 1`` programs instead of one per
+distinct shape. ``compile_stats`` reports the traces actually taken.
 """
 from __future__ import annotations
 
@@ -53,6 +61,10 @@ class DeviceSlab(NamedTuple):
 SlabLike = Union[Corpus, DeviceSlab]
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 class PatternSearchEngine:
     def __init__(self, corpus: Optional[Corpus], cfg: SearchConfig,
                  ctx: MeshCtx, backend: str = "jnp"):
@@ -81,6 +93,10 @@ class PatternSearchEngine:
                                       NamedSharding(ctx.mesh, P(ctx.dp_axes)))
         self.d_docids = jax.device_put(corpus.doc_ids.astype(np.int32),
                                        NamedSharding(ctx.mesh, P(ctx.dp_axes)))
+        # compile-cache bookkeeping: one program per (L-bucket, Q-capacity,
+        # n_docs) key; _trace_keys is appended at *trace* time inside the
+        # jitted body, so it counts real recompiles, not call shapes
+        self._trace_keys: list = []
         self._search_fn = self._build(ndev)
 
     # ------------------------------------------------------------------
@@ -103,9 +119,14 @@ class PatternSearchEngine:
             return v, i
 
         qcols_spec = P(None, tp)  # L value-columns over the model axis
+        trace_keys = self._trace_keys
 
         @jax.jit
         def search(ids, vals, norms, docids, q_ids, q_vals, q_norms):
+            # python side effect: runs once per trace (i.e. per compiled
+            # program), never on a jit cache hit
+            trace_keys.append((q_norms.shape[0], q_ids.shape[0],
+                               ids.shape[0]))
             f = shard_map(
                 local_score, mesh=ctx.mesh,
                 in_specs=(P(dp, None), P(dp, None), P(dp), P(dp),
@@ -117,20 +138,36 @@ class PatternSearchEngine:
         return search
 
     # ------------------------------------------------------------------
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
-        """q_ids/q_vals: [L, Qn] (pad < 0). L is padded to the model-axis
-        size (the paper's L query batch)."""
-        L_ = q_ids.shape[0]
+    def bucket_L(self, L: int) -> int:
+        """The L compile bucket: next power of two of ceil(L / tp), times
+        tp — so any batch size up to ``max_batch`` lands in one of
+        ``log2(max_batch) + 1`` program shapes (DESIGN.md §4)."""
         tp = self.ctx.tp_size
-        Lp = -(-L_ // tp) * tp
+        return _next_pow2(-(-L // tp)) * tp
+
+    def bucket_Q(self, q_items: int, Lp: int) -> int:
+        """Merged-stream capacity for an L bucket: ``Lp * block_query``
+        items, doubling (power-of-two blocks) only when the batch's merged
+        stream overflows it. Queries with nnz <= block_query therefore
+        never add a program shape beyond their L bucket's."""
+        cap = Lp * self.cfg.block_query
+        return _next_pow2(-(-max(q_items, 1) // cap)) * cap
+
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """q_ids/q_vals: [L, Qn] (pad < 0). L is padded to its compile
+        bucket (next power-of-two multiple of the model-axis size — the
+        paper's L query batch, bucketed so the serving layer's variable
+        batches reuse cached programs)."""
+        L_ = q_ids.shape[0]
+        Lp = self.bucket_L(L_)
         if Lp != L_:
             pad_i = np.full((Lp - L_, q_ids.shape[1]), -1, q_ids.dtype)
             pad_v = np.zeros((Lp - L_, q_vals.shape[1]), q_vals.dtype)
             q_ids = np.concatenate([q_ids, pad_i])
             q_vals = np.concatenate([q_vals, pad_v])
         mi, mv = kops.merge_queries(q_ids, q_vals)
-        # pad the merged stream to the query block
-        pad = -(-mi.size // self.cfg.block_query) * self.cfg.block_query
+        # pad the merged stream to the bucket's fixed capacity
+        pad = self.bucket_Q(mi.size, Lp)
         mi = np.pad(mi, (0, pad - mi.size), constant_values=-2)
         mv = np.pad(mv, ((0, pad - mv.shape[0]), (0, 0)))
         q_norms = np.sqrt((np.where(q_vals > 0, q_vals, 0) ** 2).sum(1))
@@ -168,6 +205,15 @@ class PatternSearchEngine:
                                                          self.cfg.top_k)
             cur = nxt
         return best
+
+    @property
+    def compile_stats(self) -> dict:
+        """Programs actually traced so far: ``n_traces`` plus the (Lp, Qp,
+        n_docs) key of each. The serving acceptance bound is
+        ``n_traces <= log2(max_batch) + 1`` for a session whose queries
+        stay within one Q capacity per L bucket."""
+        return {"n_traces": len(self._trace_keys),
+                "buckets": list(self._trace_keys)}
 
     def empty_result(self, n_queries: int) -> SearchResult:
         """The [L, k] no-result sentinel (id -1, score -inf)."""
@@ -209,23 +255,33 @@ def _merge_results(a: SearchResult, b: SearchResult, k: int) -> SearchResult:
     Deterministic: descending score, stable within ties (a's candidates
     win over b's). Duplicate doc ids keep only their best-scoring entry,
     and no-result fillers (id < 0) never displace real candidates — any
-    unfilled tail stays (-1, -inf)."""
-    ids = np.concatenate([a.doc_ids, b.doc_ids], axis=1)
-    sc = np.concatenate([a.scores, b.scores], axis=1)
-    L = ids.shape[0]
+    unfilled tail stays (-1, -inf).
+
+    Vectorized (this runs once per slab on the serving hot path; the
+    per-row Python loop it replaced was O(L*k*slabs) interpreter time —
+    tests/test_merge_equivalence.py holds it to the loop's exact output)."""
+    ids = np.concatenate([a.doc_ids, b.doc_ids], axis=1).astype(np.int64)
+    sc = np.concatenate([a.scores, b.scores], axis=1).astype(np.float32)
+    L, M = ids.shape
+    # rank every candidate by descending score; stable, so a's candidates
+    # win ties against b's and order within each input is preserved
+    order = np.argsort(-sc, axis=1, kind="stable")
+    rid = np.take_along_axis(ids, order, axis=1)
+    rsc = np.take_along_axis(sc, order, axis=1)
+    # keep a candidate iff it is valid (id >= 0) and the best-ranked
+    # occurrence of its doc id: stable-sorting the ranked ids groups
+    # duplicates while preserving rank order inside each group
+    by_id = np.argsort(rid, axis=1, kind="stable")
+    sid = np.take_along_axis(rid, by_id, axis=1)
+    first = np.ones((L, M), bool)
+    first[:, 1:] = sid[:, 1:] != sid[:, :-1]
+    keep = np.zeros((L, M), bool)
+    np.put_along_axis(keep, by_id, first & (sid >= 0), axis=1)
+    # compact the keepers leftward in rank order into the [L, k] output
+    pos = np.cumsum(keep, axis=1) - 1
     out_i = np.full((L, k), -1, np.int64)
     out_s = np.full((L, k), -np.inf, np.float32)
-    for row in range(L):
-        col = 0
-        seen = set()
-        for j in np.argsort(-sc[row], kind="stable"):
-            d = int(ids[row, j])
-            if d < 0 or d in seen:
-                continue
-            seen.add(d)
-            out_i[row, col] = d
-            out_s[row, col] = sc[row, j]
-            col += 1
-            if col == k:
-                break
+    rows, cols = np.nonzero(keep & (pos < k))
+    out_i[rows, pos[rows, cols]] = rid[rows, cols]
+    out_s[rows, pos[rows, cols]] = rsc[rows, cols]
     return SearchResult(out_i, out_s)

@@ -68,8 +68,11 @@ def correlate(doc_ids: Array, doc_vals: Array, q_ids: Array, q_vals: Array,
         qi = jnp.where(qi < 0, QUERY_PAD, qi)
         interpret = jax.default_backend() != "tpu"
         if backend == "pallas_packed":
-            # doc_ids here is the packed uint32 corpus (Fig. 8 in HBM)
-            dp = _pad_to(doc_ids, Dp, 0, 0xFFFFFFFF)
+            # doc_ids here is the packed uint32 corpus (Fig. 8 in HBM);
+            # the pad sentinel must be a uint32 scalar — a bare python
+            # 0xFFFFFFFF overflows jnp.pad's int32 weak-type parsing
+            # whenever D is not a block multiple
+            dp = _pad_to(doc_ids, Dp, 0, np.uint32(0xFFFFFFFF))
             out = sparse_match_packed(dp, qi, qv, block_docs=td,
                                       block_query=tq, interpret=interpret)
             return out[:D]

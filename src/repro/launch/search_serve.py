@@ -1,0 +1,161 @@
+"""Concurrent-serving launcher: closed-loop load generator against the
+micro-batching SearchService (DESIGN.md §4).
+
+N client threads each submit one query at a time and wait for its
+result (closed loop), so offered load scales with concurrency the way
+a fleet of blocking callers does. Reports per-query p50/p99 latency,
+aggregate QPS, batch occupancy and the engine's compile-cache traces.
+
+    PYTHONPATH=src python -m repro.launch.search_serve --n-docs 20000 \\
+        --clients 16 --requests 32 --max-batch 8 --max-delay-ms 2
+
+    # one-query-at-a-time baseline for the coalescing speedup:
+    PYTHONPATH=src python -m repro.launch.search_serve --serial \\
+        --n-docs 20000 --clients 16 --requests 32
+
+Add ``--store PATH`` to serve an existing FlashStore through a
+FlashSearchSession instead of a synthesized resident corpus.
+"""
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.serve import SearchService
+
+
+def run_clients(n_clients, n_requests, do_query):
+    """Closed loop: each thread issues its requests back-to-back.
+    Returns (per-query latencies sec, wall time sec)."""
+    lats = [[] for _ in range(n_clients)]
+    errors = []
+
+    def client(tid):
+        rng = np.random.default_rng(1000 + tid)
+        try:
+            for _ in range(n_requests):
+                t0 = time.perf_counter()
+                do_query(rng)
+                lats[tid].append(time.perf_counter() - t0)
+        except Exception as e:           # surface, don't hang the join
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return np.concatenate([np.asarray(l) for l in lats]), wall
+
+
+def report(tag, lats, wall):
+    n = lats.size
+    print(f"[{tag}] {n} queries in {wall:.2f}s -> {n / wall:.1f} QPS | "
+          f"latency p50 {np.percentile(lats, 50) * 1e3:.1f} ms  "
+          f"p99 {np.percentile(lats, 99) * 1e3:.1f} ms  "
+          f"mean {lats.mean() * 1e3:.1f} ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=20_000)
+    ap.add_argument("--vocab", type=int, default=50_000)
+    ap.add_argument("--avg-nnz", type=int, default=60)
+    ap.add_argument("--nnz-pad", type=int, default=64)
+    ap.add_argument("--query-nnz", type=int, default=48)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--backend", choices=["jnp", "pallas", "pallas_packed"],
+                    default="jnp")
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per client (closed loop)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--serial", action="store_true",
+                    help="bypass the coalescer: engine.search per query "
+                         "under a lock (the one-at-a-time baseline)")
+    ap.add_argument("--store", help="serve this FlashStore path through a "
+                                    "FlashSearchSession")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="serve", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.avg_nnz, nnz_pad=args.nnz_pad,
+                       top_k=args.top_k)
+    if args.store:
+        from repro.storage import FlashSearchSession, FlashStore
+        store = FlashStore.open(args.store)
+        searcher = FlashSearchSession(store, cfg, backend=args.backend)
+        corpus = store.scan_corpus(cfg.nnz_pad, strict=False)
+        print(f"[serve] store {args.store}: {store.n_docs} docs / "
+              f"{store.n_segments} segments")
+    else:
+        print(f"[serve] synthesizing {args.n_docs} docs "
+              f"(vocab {args.vocab}, ~{args.avg_nnz} nnz/doc)...")
+        corpus = corpus_lib.synthesize(args.n_docs, args.vocab, args.avg_nnz,
+                                       args.nnz_pad, seed=args.seed)
+        searcher = PatternSearchEngine(corpus, cfg, single_device_ctx(),
+                                       backend=args.backend)
+    engine = searcher if isinstance(searcher, PatternSearchEngine) \
+        else searcher.engine
+
+    def draw_query(rng):
+        qi, qv = corpus_lib.make_query(corpus, int(rng.integers(corpus.n_docs)),
+                                       args.query_nnz)
+        return qi, qv
+
+    def warm_buckets(max_l):
+        """Compile every L-bucket program up front so the measured window
+        is steady-state (one trace per power-of-two bucket)."""
+        rng = np.random.default_rng(args.seed)
+        L = 1
+        while L <= max_l:
+            qs = [draw_query(rng) for _ in range(L)]
+            searcher.search(np.stack([q[0] for q in qs]),
+                            np.stack([q[1] for q in qs]))
+            L *= 2
+
+    if args.serial:
+        lock = threading.Lock()          # engines serve one call at a time
+
+        def do_query(rng):
+            qi, qv = draw_query(rng)
+            with lock:
+                searcher.search(qi[None], qv[None])
+
+        warm_buckets(1)
+        lats, wall = run_clients(args.clients, args.requests, do_query)
+        report("serial", lats, wall)
+    else:
+        svc = SearchService(searcher, max_batch=args.max_batch,
+                            max_delay_ms=args.max_delay_ms)
+
+        def do_query(rng):
+            qi, qv = draw_query(rng)
+            svc.submit(qi, qv).result()
+
+        warm_buckets(args.max_batch)
+        lats, wall = run_clients(args.clients, args.requests, do_query)
+        report(f"coalesced x{args.max_batch}", lats, wall)
+        st = svc.stats
+        print(f"  batches {st.n_batches}  mean occupancy "
+              f"{st.mean_occupancy:.2f}  flushes {st.flushes}")
+        svc.close()
+    print(f"  engine traces: {engine.compile_stats['n_traces']} "
+          f"{engine.compile_stats['buckets']}")
+    if args.store:
+        searcher.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Serving layer: LM decode steps (step.py) and the sparse-search
+micro-batching service (DESIGN.md §4)."""
+from repro.serve.batcher import BatcherStats, MicroBatcher
+from repro.serve.search_service import SearchService
+
+__all__ = ["BatcherStats", "MicroBatcher", "SearchService"]

@@ -1,0 +1,178 @@
+"""Micro-batch coalescing scheduler (DESIGN.md §4.1).
+
+The paper's headline amortization is one corpus pass per L-query merged
+batch (Table 2); the serving-layer analogue is a scheduler that turns
+many concurrent single-query clients into those L-column batches. A
+single scheduler thread owns the pending batch and flushes it when
+
+  - it reaches ``max_batch`` requests (the engine's L), or
+  - the *oldest* pending request has waited ``max_delay_ms``
+
+whichever comes first — bounded batching delay under light load, full
+batches under heavy load. ``MicroBatcher`` is generic: it coalesces
+opaque request objects and hands each flushed batch (a list) to
+``run_batch``, which is responsible for completing the requests'
+futures. A ``run_batch`` exception fails only that batch's requests;
+the scheduler keeps serving.
+
+Invariants the stress tests pin down (tests/test_serve_stress.py):
+every submitted request lands in exactly one batch, batches preserve
+per-client submission order, ``close()`` drains pending requests, and
+``submit`` after close raises instead of dropping work silently.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+_SHUTDOWN = object()
+
+# recent batch sizes kept for inspection; bounded so a long-lived
+# service doesn't grow a list forever (means come from running totals)
+_OCCUPANCY_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    n_requests: int = 0
+    n_batches: int = 0
+    flushes: Optional[Dict[str, int]] = None     # reason -> count
+    occupancy: Optional[Deque[int]] = None       # recent batch sizes
+
+    def __post_init__(self):
+        self.flushes = self.flushes or {"full": 0, "timeout": 0, "drain": 0}
+        if self.occupancy is None:
+            self.occupancy = collections.deque(maxlen=_OCCUPANCY_WINDOW)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.n_requests / self.n_batches if self.n_batches else 0.0
+
+
+class MicroBatcher:
+    def __init__(self, run_batch: Callable[[List[Any]], None], *,
+                 max_batch: int = 8, max_delay_ms: float = 2.0,
+                 name: str = "micro-batcher"):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_delay_ms < 0:
+            raise ValueError("max_delay_ms must be >= 0")
+        self.max_batch = max_batch
+        self.max_delay = max_delay_ms / 1e3
+        self._run_batch = run_batch
+        self._q: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._lock = threading.Lock()
+        self.stats = BatcherStats()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Any) -> None:
+        """Enqueue one request for the next batch. Thread-safe. The
+        request is timestamped here, so the max_delay_ms bound is
+        measured from submission — time spent queued behind an
+        in-flight batch counts against the delay budget."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit() on a closed MicroBatcher")
+            self._q.put((request, time.monotonic()))
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop accepting requests, drain what is pending, join the
+        scheduler thread (by default without a timeout: returning while
+        a batch is still scoring would let the caller tear down
+        resources — stores, devices — out from under it). Idempotent."""
+        with self._lock:
+            if self._closed:
+                already = True
+            else:
+                already = False
+                self._closed = True
+                self._q.put((_SHUTDOWN, 0.0))
+        if not already:
+            self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    "MicroBatcher scheduler still running after "
+                    f"{timeout}s; resources must not be torn down yet")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+    def _flush(self, pending: List[Any], reason: str) -> None:
+        self.stats.n_batches += 1
+        self.stats.n_requests += len(pending)
+        self.stats.flushes[reason] += 1
+        self.stats.occupancy.append(len(pending))
+        try:
+            self._run_batch(pending)
+        except BaseException as e:
+            # run_batch is expected to fail its requests' futures itself;
+            # this is the backstop for errors it did not attribute
+            for r in pending:
+                fut = getattr(r, "future", None)
+                if fut is not None and not fut.done():
+                    fut.set_exception(e)
+
+    def _topup(self, pending: List[Any]) -> bool:
+        """Non-blocking: absorb whatever is already queued, up to
+        max_batch. An overdue flush must still coalesce the backlog that
+        accumulated behind the previous batch — those requests are here
+        *now*, so batching them delays nobody. True if shutdown was hit."""
+        while len(pending) < self.max_batch:
+            try:
+                item, _ = self._q.get_nowait()
+            except queue.Empty:
+                return False
+            if item is _SHUTDOWN:
+                return True
+            pending.append(item)
+        return False
+
+    def _loop(self) -> None:
+        pending: List[Any] = []
+        deadline = 0.0
+        while True:
+            if not pending:
+                item, t_sub = self._q.get()  # idle: block until work arrives
+                if item is _SHUTDOWN:
+                    return
+                pending.append(item)
+                # the delay budget started at submit time, not dequeue:
+                # a request that already waited behind a long batch
+                # flushes promptly instead of waiting a fresh max_delay
+                deadline = t_sub + self.max_delay
+            else:
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    shutdown = self._topup(pending)
+                    self._flush(pending, "full"
+                                if len(pending) >= self.max_batch
+                                else "timeout")
+                    pending = []
+                    if shutdown:
+                        return
+                    continue
+                try:
+                    item, t_sub = self._q.get(timeout=timeout)
+                except queue.Empty:
+                    self._flush(pending, "timeout")
+                    pending = []
+                    continue
+                if item is _SHUTDOWN:
+                    self._flush(pending, "drain")
+                    return
+                pending.append(item)
+            if len(pending) >= self.max_batch:
+                self._flush(pending, "full")
+                pending = []

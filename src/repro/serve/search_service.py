@@ -1,0 +1,115 @@
+"""SearchService — concurrent query serving with micro-batch coalescing
+(DESIGN.md §4).
+
+Many clients each hold one sparse query; the paper's engine wants one
+L-column merged batch per corpus pass. The service bridges the two:
+
+    client threads ── submit(q_ids, q_vals) -> Future ──┐
+                                                        ▼
+                                           MicroBatcher (§4.1)
+                                   flush on max_batch L or max_delay_ms
+                                                        ▼
+                            searcher.search([L, Qn] stacked batch)
+                      (PatternSearchEngine or FlashSearchSession)
+                                                        ▼
+                              demux row l -> client l's Future
+
+Results are bit-identical to calling ``searcher.search`` serially per
+query: stacking pads rows with the -1 sentinel that the merge path
+strips, scoring is column-independent, and the engine's L-bucketing
+(core/engine.py) makes every coalesced shape hit a cached program. One
+scheduler thread performs all scoring, so non-thread-safe searchers
+(e.g. FlashSearchSession.last_stats) are safe behind ``submit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future
+from typing import List
+
+import numpy as np
+
+from repro.core.engine import SearchResult
+from repro.serve.batcher import BatcherStats, MicroBatcher
+
+
+@dataclasses.dataclass
+class _Request:
+    q_ids: np.ndarray     # [Qn] int32, pad < 0
+    q_vals: np.ndarray    # [Qn] float32
+    future: Future
+
+
+class SearchService:
+    def __init__(self, searcher, *, max_batch: int = 8,
+                 max_delay_ms: float = 2.0):
+        """``searcher`` is anything with ``.search(q_ids [L, Qn],
+        q_vals [L, Qn]) -> SearchResult`` — the resident engine or a
+        flash session. ``max_batch`` is the engine's L; keep it at the
+        L-bucket granularity (a power of two times the model-axis size)
+        so full batches need no pad columns."""
+        self.searcher = searcher
+        self._batcher = MicroBatcher(
+            self._run_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
+            name="search-service")
+
+    # ------------------------------------------------------------------
+    def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
+        """Non-blocking: enqueue one query (1-D ``[Qn]`` ids/vals, pad
+        < 0) and return a Future resolving to its ``SearchResult`` row
+        (1-D ``[k]`` doc_ids / scores)."""
+        q_ids = np.array(q_ids, np.int32, copy=True).reshape(-1)
+        q_vals = np.array(q_vals, np.float32, copy=True).reshape(-1)
+        if q_ids.shape != q_vals.shape:
+            raise ValueError(
+                f"q_ids {q_ids.shape} and q_vals {q_vals.shape} differ")
+        fut: Future = Future()
+        self._batcher.submit(_Request(q_ids, q_vals, fut))
+        return fut
+
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """Blocking convenience wrapper: one query through the coalescer
+        (it may share its batch with concurrent submitters)."""
+        return self.submit(q_ids, q_vals).result()
+
+    @property
+    def stats(self) -> BatcherStats:
+        return self._batcher.stats
+
+    def close(self):
+        self._batcher.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------------
+    def _run_batch(self, reqs: List[_Request]) -> None:
+        """Scheduler-thread body: stack -> score -> demux. Runs entirely
+        on the batcher thread, so the searcher sees serialized calls."""
+        # claim every future first: a client that cancelled while queued
+        # is dropped here, and claiming makes later cancel() a no-op so
+        # the demux set_result below can never race an InvalidStateError
+        # (which would otherwise fail the whole batch's clients)
+        reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not reqs:
+            return
+        try:
+            Qn = max(max(r.q_ids.size for r in reqs), 1)
+            qi = np.full((len(reqs), Qn), -1, np.int32)
+            qv = np.zeros((len(reqs), Qn), np.float32)
+            for l, r in enumerate(reqs):
+                qi[l, :r.q_ids.size] = r.q_ids
+                qv[l, :r.q_vals.size] = r.q_vals
+            res = self.searcher.search(qi, qv)
+        except BaseException as e:
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            return
+        for l, r in enumerate(reqs):
+            r.future.set_result(SearchResult(
+                doc_ids=np.array(res.doc_ids[l]),
+                scores=np.array(res.scores[l])))

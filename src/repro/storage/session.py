@@ -16,6 +16,8 @@ filter pruned — the skip-rate is the storage tier's headline metric.
 from __future__ import annotations
 
 import dataclasses
+import threading
+from concurrent.futures import Future
 from typing import List, Optional
 
 import numpy as np
@@ -63,6 +65,9 @@ class FlashSearchSession:
         # one program shape for every slab: largest segment, mesh-aligned
         rows = self.ctx.dp_size
         self._slab_docs = -(-max(store.max_segment_docs, 1) // rows) * rows
+        self._service = None
+        self._service_lock = threading.Lock()
+        self._closed = False
 
     # ------------------------------------------------------------------
     def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
@@ -108,7 +113,32 @@ class FlashSearchSession:
         corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(self._slab_docs)
         return self.engine.put_slab(corpus)
 
+    def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
+        """The session's lazily-created SearchService (DESIGN.md §4):
+        one micro-batching scheduler whose flushed batches run
+        ``self.search`` — each coalesced batch costs one pass over the
+        store's surviving segments instead of one per client. The knobs
+        apply on first call; later calls return the same service."""
+        with self._service_lock:
+            if self._closed:
+                raise RuntimeError("FlashSearchSession is closed")
+            if self._service is None:
+                from repro.serve.search_service import SearchService
+                self._service = SearchService(
+                    self, max_batch=max_batch, max_delay_ms=max_delay_ms)
+            return self._service
+
+    def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
+        """Non-blocking single-query search: route one 1-D query through
+        the session's coalescing service and return its Future."""
+        return self.service().submit(q_ids, q_vals)
+
     def close(self):
+        with self._service_lock:
+            self._closed = True
+            if self._service is not None:
+                self._service.close()
+                self._service = None
         self.store.close()
 
     def __enter__(self):

@@ -1,0 +1,145 @@
+"""Differential property suite: every scoring path must agree.
+
+The repo has four ways to compute the correlation matrix [D, L]:
+
+  - ``kernels/ref.py`` (dense scatter/gather oracle, called directly)
+  - the ``jnp`` gather backend (``ops.correlate(backend="jnp")``)
+  - the Pallas ELL kernel (``backend="pallas"``, interpret=True on CPU)
+  - the Pallas packed-stream kernel (``backend="pallas_packed"``)
+
+One parametrized suite drives all of them over random ELL corpora with
+every adversarial sentinel the formats define: -1 doc padding, -2 query
+padding, duplicate ids (within docs and within the merged stream),
+empty documents and empty queries. Disagreement beyond 1e-5 is a
+scoring bug, not tolerance noise — counts are small integers.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.sparse_match_packed import pack
+
+BACKENDS = ["jnp", "pallas", "pallas_packed"]
+VOCAB = 256
+
+
+def _adversarial_case(seed):
+    """Random ELL docs + merged query stream, seeded so failures replay.
+
+    Deliberately hostile: some doc rows fully empty (-1), some rows with
+    duplicate ids, vals of zero on valid ids, -2 query padding scattered
+    *inside* the merged stream (not only at the tail), duplicate query
+    ids within one column, and sometimes an all-padding query column.
+    """
+    rng = np.random.default_rng(seed)
+    D = int(rng.integers(1, 33))
+    K = int(rng.integers(1, 17))
+    Qm = int(rng.integers(1, 49))
+    L = int(rng.integers(1, 5))
+
+    ids = np.full((D, K), -1, np.int32)
+    vals = np.zeros((D, K), np.float32)
+    for d in range(D):
+        if rng.random() < 0.15:
+            continue                               # empty document
+        k = int(rng.integers(1, K + 1))
+        row = rng.integers(0, VOCAB, k)
+        if k > 1 and rng.random() < 0.3:
+            row[0] = row[1]                        # duplicate id in a doc
+        ids[d, :k] = np.sort(row).astype(np.int32)
+        vals[d, :k] = rng.integers(0, 30, k)       # zero vals possible
+
+    mi = np.full(Qm, -2, np.int32)
+    mv = np.zeros((Qm, L), np.float32)
+    for j in range(Qm):
+        if rng.random() < 0.2:
+            continue                               # in-stream query pad
+        mi[j] = int(rng.integers(0, VOCAB))
+        col = int(rng.integers(0, L))
+        mv[j, col] = float(rng.integers(1, 30))
+    if L > 1 and rng.random() < 0.3:
+        mv[:, 0] = 0.0                             # empty query column
+    order = np.argsort(np.where(mi < 0, VOCAB + 1, mi), kind="stable")
+    return ids, vals, mi[order], mv[order]
+
+
+def _correlate(backend, ids, vals, mi, mv):
+    if backend == "ref":
+        return ref.sparse_match_ref(jnp.asarray(ids), jnp.asarray(vals),
+                                    jnp.asarray(mi), jnp.asarray(mv), VOCAB)
+    docs = pack(ids, vals) if backend == "pallas_packed" else ids
+    return ops.correlate(jnp.asarray(docs), jnp.asarray(vals),
+                         jnp.asarray(mi), jnp.asarray(mv), backend=backend,
+                         vocab_size=VOCAB, block_docs=8, block_query=8)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_backend_matches_ref_oracle(backend, seed):
+    ids, vals, mi, mv = _adversarial_case(seed)
+    got = np.asarray(_correlate(backend, ids, vals, mi, mv))
+    want = np.asarray(_correlate("ref", ids, vals, mi, mv))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_sentinels_contribute_nothing(backend):
+    """Fully-padded docs x fully-padded queries score exactly zero even
+    when the padded slots carry large values."""
+    ids = np.full((8, 8), -1, np.int32)
+    vals = np.full((8, 8), 1000.0, np.float32)
+    mi = np.full(8, -2, np.int32)
+    mv = np.full((8, 2), 1000.0, np.float32)
+    out = np.asarray(_correlate(backend, ids, vals, mi, mv))
+    assert out.shape == (8, 2)
+    np.testing.assert_array_equal(out, 0.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_duplicate_ids_accumulate_consistently(backend):
+    """A word id repeated in a doc row and in the merged stream must
+    multiply out identically everywhere (4 pairings of id 7)."""
+    ids = np.array([[7, 7, -1, -1]], np.int32)
+    vals = np.array([[2.0, 3.0, 0.0, 0.0]], np.float32)
+    mi = np.array([7, 7, -2, -2], np.int32)
+    mv = np.array([[1.0], [10.0], [5.0], [5.0]], np.float32)
+    out = np.asarray(_correlate(backend, ids, vals, mi, mv))
+    np.testing.assert_allclose(out, [[(2 + 3) * (1 + 10)]], rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_engine_merged_path_matches_per_query(seed):
+    """End to end through merge_queries: the L-column batch scores each
+    column exactly as an L=1 run of the same query (the paper's K*L
+    batching is exact; this is what makes serve-layer coalescing safe)."""
+    rng = np.random.default_rng(seed)
+    D, K, Qn, L = 16, 8, 8, int(rng.integers(2, 5))
+    ids = np.full((D, K), -1, np.int32)
+    vals = np.zeros((D, K), np.float32)
+    for d in range(D):
+        k = int(rng.integers(1, K + 1))
+        ids[d, :k] = np.sort(rng.choice(VOCAB, k, replace=False))
+        vals[d, :k] = rng.integers(1, 20, k)
+    qid = np.full((L, Qn), -1, np.int32)
+    qval = np.zeros((L, Qn), np.float32)
+    for l in range(L):
+        if rng.random() < 0.2:
+            continue                                # empty query
+        q = int(rng.integers(1, Qn + 1))
+        qid[l, :q] = np.sort(rng.choice(VOCAB, q, replace=False))
+        qval[l, :q] = rng.integers(1, 20, q)
+    mi, mv = ops.merge_queries(qid, qval)
+    if mi.size == 0:
+        mi, mv = np.array([-2], np.int32), np.zeros((1, L), np.float32)
+    batched = np.asarray(_correlate("ref", ids, vals, mi, mv))
+    for l in range(L):
+        mi1, mv1 = ops.merge_queries(qid[l:l + 1], qval[l:l + 1])
+        if mi1.size == 0:
+            mi1, mv1 = np.array([-2], np.int32), np.zeros((1, 1), np.float32)
+        single = np.asarray(_correlate("ref", ids, vals, mi1, mv1))
+        np.testing.assert_allclose(batched[:, l], single[:, 0],
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,107 @@
+"""_merge_results (vectorized, serving hot path) vs the original
+per-row Python loop: exact output equivalence plus the invariants the
+docstring promises (dedup, stable tie-breaking, -1/-inf fillers)."""
+import numpy as np
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.core.engine import SearchResult, _merge_results
+
+
+def _merge_results_loop(a, b, k):
+    """The pre-vectorization reference implementation, verbatim."""
+    ids = np.concatenate([a.doc_ids, b.doc_ids], axis=1)
+    sc = np.concatenate([a.scores, b.scores], axis=1)
+    L = ids.shape[0]
+    out_i = np.full((L, k), -1, np.int64)
+    out_s = np.full((L, k), -np.inf, np.float32)
+    for row in range(L):
+        col = 0
+        seen = set()
+        for j in np.argsort(-sc[row], kind="stable"):
+            d = int(ids[row, j])
+            if d < 0 or d in seen:
+                continue
+            seen.add(d)
+            out_i[row, col] = d
+            out_s[row, col] = sc[row, j]
+            col += 1
+            if col == k:
+                break
+    return SearchResult(out_i, out_s)
+
+
+def _random_result(rng, L, k, id_pool, tie_scores):
+    """Candidate sets with heavy duplication, ties, and -1/-inf filler
+    (including the adversarial valid-id-with--inf-score corner)."""
+    ids = rng.integers(-1, id_pool, (L, k)).astype(np.int64)
+    if tie_scores:
+        sc = rng.integers(0, 4, (L, k)).astype(np.float32)
+    else:
+        sc = rng.standard_normal((L, k)).astype(np.float32)
+    sc = np.where(ids < 0, -np.inf, sc).astype(np.float32)
+    drop = rng.random((L, k)) < 0.1
+    sc = np.where(drop, -np.inf, sc).astype(np.float32)  # -inf w/ valid id
+    return SearchResult(ids, sc)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**20), l=st.integers(1, 6), k=st.integers(1, 9),
+       pool=st.integers(1, 12), ties=st.sampled_from([True, False]))
+def test_vectorized_equals_loop(seed, l, k, pool, ties):
+    rng = np.random.default_rng(seed)
+    a = _random_result(rng, l, k, pool, ties)
+    b = _random_result(rng, l, k, pool, ties)
+    got = _merge_results(a, b, k)
+    want = _merge_results_loop(a, b, k)
+    np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
+    np.testing.assert_array_equal(got.scores, want.scores)
+    assert got.doc_ids.dtype == want.doc_ids.dtype
+    assert got.scores.dtype == want.scores.dtype
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**20), l=st.integers(1, 4), k=st.integers(1, 8))
+def test_merge_invariants(seed, l, k):
+    rng = np.random.default_rng(seed)
+    a = _random_result(rng, l, k, 8, True)
+    b = _random_result(rng, l, k, 8, True)
+    r = _merge_results(a, b, k)
+    for row in range(l):
+        ids, sc = r.doc_ids[row], r.scores[row]
+        real = ids >= 0
+        # dedup: every reported doc id appears once
+        assert len(set(ids[real].tolist())) == int(real.sum())
+        # descending scores over the real prefix, fillers strictly after
+        # (elementwise >=, not diff: -inf minus -inf is nan)
+        assert np.all(sc[real][:-1] >= sc[real][1:])
+        n_real = int(real.sum())
+        assert not real[n_real:].any()               # compacted prefix
+        np.testing.assert_array_equal(ids[~real], -1)
+        np.testing.assert_array_equal(sc[~real], -np.inf)
+        # no real candidate was displaced by filler: the merged row holds
+        # min(k, #unique valid ids) real entries (a valid id scored -inf
+        # still counts — it outranks the -1 filler, never a real score)
+        cand = np.concatenate([a.doc_ids[row], b.doc_ids[row]])
+        avail = set(cand[cand >= 0].tolist())
+        assert n_real == min(k, len(avail))
+
+
+def test_stable_tie_break_prefers_a_then_input_order():
+    """Equal scores: a's candidates come before b's, and within one input
+    earlier columns come first (argsort stability contract)."""
+    a = SearchResult(np.array([[1, 2]], np.int64),
+                     np.array([[5.0, 5.0]], np.float32))
+    b = SearchResult(np.array([[3, 4]], np.int64),
+                     np.array([[5.0, 5.0]], np.float32))
+    r = _merge_results(a, b, 4)
+    np.testing.assert_array_equal(r.doc_ids, [[1, 2, 3, 4]])
+
+
+def test_duplicate_keeps_best_scoring_entry():
+    a = SearchResult(np.array([[9, 7]], np.int64),
+                     np.array([[3.0, 1.0]], np.float32))
+    b = SearchResult(np.array([[7, 9]], np.int64),
+                     np.array([[2.0, 0.5]], np.float32))
+    r = _merge_results(a, b, 4)
+    np.testing.assert_array_equal(r.doc_ids, [[9, 7, -1, -1]])
+    np.testing.assert_array_equal(r.scores[0, :2], [3.0, 2.0])

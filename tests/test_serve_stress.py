@@ -1,0 +1,357 @@
+"""Concurrency stress suite for the serving layer and the prefetcher.
+
+Covers the adversarial paths the happy-path tests never hit: worker
+exceptions crossing thread boundaries, early abandonment, degenerate
+depth/batch settings, submit storms, and the acceptance criterion that
+coalesced results are bit-identical to serial per-query calls under any
+interleaving of 16 concurrent clients.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine, SearchResult
+from repro.distributed.meshctx import single_device_ctx
+from repro.serve import MicroBatcher, SearchService
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.prefetch import Prefetcher
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher under stress
+# ---------------------------------------------------------------------------
+def test_prefetcher_exception_on_first_item():
+    def load(i):
+        raise OSError("bad sector")
+
+    with pytest.raises(OSError, match="bad sector"):
+        next(iter(Prefetcher([1], load, depth=2)))
+
+
+def test_prefetcher_exception_with_full_queue():
+    """The worker dies while the consumer is slow (queue full): the
+    error must still surface, at the failing item's position."""
+    def load(i):
+        if i == 4:
+            raise RuntimeError("late failure")
+        return i
+
+    pf = Prefetcher(range(8), load, depth=1)
+    time.sleep(0.05)                       # let the worker hit backpressure
+    got = []
+    with pytest.raises(RuntimeError, match="late failure"):
+        for v in pf:
+            got.append(v)
+    assert got == [0, 1, 2, 3]
+    pf.close()
+    assert not pf._worker.is_alive()
+
+
+def test_prefetcher_depth1_degenerate_drains_fully():
+    with Prefetcher(range(50), lambda i: i, depth=1) as pf:
+        assert list(pf) == list(range(50))
+
+
+def test_prefetcher_abandonment_no_deadlock_no_leaked_segments(tmp_path):
+    """Abandon a store-backed stream mid-iteration: close() must return
+    promptly (no deadlock on the bounded queue) and every segment handle
+    the loader opened must be released again."""
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=64, docs_per_segment=4)
+    docs = [(i, [(i % 64, 1 + i % 5)]) for i in range(64)]
+    store.append_docs(docs)
+    names = [e.name for e in store.entries]
+    assert len(names) == 16
+
+    def load(name):
+        seg = store.segment(name)
+        stream = np.array(seg.stream())    # touch the data
+        store.release(name)
+        return stream
+
+    pf = Prefetcher(names, load, depth=2)
+    it = iter(pf)
+    next(it)
+    next(it)                               # abandon with most items pending
+    t0 = time.perf_counter()
+    pf.close()
+    assert time.perf_counter() - t0 < 5.0
+    assert not pf._worker.is_alive()
+    assert store._open_segments == {}      # nothing left open
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher
+# ---------------------------------------------------------------------------
+class _Req:
+    def __init__(self, tag):
+        self.tag = tag
+        import concurrent.futures
+        self.future = concurrent.futures.Future()
+
+
+def test_batcher_max_batch1_degenerate():
+    """max_batch=1: every request is its own batch, nothing waits on the
+    delay timer."""
+    batches = []
+
+    def run(reqs):
+        batches.append([r.tag for r in reqs])
+        for r in reqs:
+            r.future.set_result(r.tag)
+
+    with MicroBatcher(run, max_batch=1, max_delay_ms=10_000) as mb:
+        reqs = [_Req(i) for i in range(5)]
+        for r in reqs:
+            mb.submit(r)
+        assert [r.future.result(timeout=5) for r in reqs] == list(range(5))
+    assert batches == [[0], [1], [2], [3], [4]]
+    assert mb.stats.flushes["full"] == 5
+
+
+def test_batcher_timeout_flush_partial_batch():
+    done = threading.Event()
+
+    def run(reqs):
+        for r in reqs:
+            r.future.set_result(len(reqs))
+        done.set()
+
+    with MicroBatcher(run, max_batch=64, max_delay_ms=20) as mb:
+        r = _Req(0)
+        mb.submit(r)
+        assert r.future.result(timeout=5) == 1     # flushed alone, by timer
+        assert done.wait(timeout=5)
+    assert mb.stats.flushes["timeout"] == 1
+
+
+def test_batcher_submit_storm_every_future_exactly_once():
+    """16 threads x 32 submits: every future resolves exactly once, no
+    request is dropped or double-batched, order within a client holds."""
+    seen = []
+    lock = threading.Lock()
+
+    def run(reqs):
+        with lock:
+            seen.extend(r.tag for r in reqs)
+        for r in reqs:
+            r.future.set_result(r.tag)
+
+    mb = MicroBatcher(run, max_batch=8, max_delay_ms=1.0)
+    results = {}
+    rlock = threading.Lock()
+
+    def client(tid):
+        for i in range(32):
+            r = _Req((tid, i))
+            mb.submit(r)
+            got = r.future.result(timeout=30)
+            with rlock:
+                results[(tid, i)] = got
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mb.close()
+    assert len(results) == 16 * 32
+    assert all(results[k] == k for k in results)
+    assert sorted(seen) == sorted(results)          # exactly once, no extras
+    assert mb.stats.n_requests == 16 * 32
+    assert sum(mb.stats.occupancy) == 16 * 32
+
+
+def test_batcher_run_exception_fails_only_that_batch():
+    calls = []
+
+    def run(reqs):
+        calls.append(len(reqs))
+        if len(calls) == 1:
+            raise ValueError("boom")
+        for r in reqs:
+            r.future.set_result("ok")
+
+    with MicroBatcher(run, max_batch=2, max_delay_ms=5) as mb:
+        bad = [_Req(i) for i in range(2)]
+        for r in bad:
+            mb.submit(r)
+        for r in bad:
+            with pytest.raises(ValueError, match="boom"):
+                r.future.result(timeout=5)
+        good = _Req(9)
+        mb.submit(good)
+        assert good.future.result(timeout=5) == "ok"   # scheduler survived
+
+
+def test_batcher_close_drains_then_rejects():
+    def run(reqs):
+        for r in reqs:
+            r.future.set_result(r.tag)
+
+    mb = MicroBatcher(run, max_batch=100, max_delay_ms=60_000)
+    reqs = [_Req(i) for i in range(3)]
+    for r in reqs:
+        mb.submit(r)
+    mb.close()                              # must flush the pending 3
+    assert [r.future.result(timeout=5) for r in reqs] == [0, 1, 2]
+    assert mb.stats.flushes["drain"] == 1
+    with pytest.raises(RuntimeError):
+        mb.submit(_Req(4))
+    mb.close()                              # idempotent
+
+
+# ---------------------------------------------------------------------------
+# SearchService against the real engine
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(256, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=21)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    return cfg, corpus, eng
+
+
+def test_service_16_clients_bit_identical_to_serial(engine_setup):
+    """The acceptance criterion: any interleaving of 16 concurrent
+    clients returns exactly what serial engine.search returns per
+    query — same doc_ids, same scores, bit for bit."""
+    cfg, corpus, eng = engine_setup
+    rng = np.random.default_rng(0)
+    idxs = rng.integers(0, corpus.n_docs, 96)
+    serial = {}
+    for i in set(idxs.tolist()):
+        qi, qv = corpus_lib.make_query(corpus, i, 24)
+        serial[i] = eng.search(qi[None], qv[None])
+
+    failures = []
+    with SearchService(eng, max_batch=8, max_delay_ms=2.0) as svc:
+        def client(tid):
+            for i in idxs[tid::16]:
+                qi, qv = corpus_lib.make_query(corpus, int(i), 24)
+                r = svc.submit(qi, qv).result(timeout=60)
+                ref = serial[int(i)]
+                if not (np.array_equal(r.doc_ids, ref.doc_ids[0])
+                        and np.array_equal(r.scores, ref.scores[0])):
+                    failures.append(int(i))
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = svc.stats
+    assert failures == []
+    assert stats.n_requests == 96
+
+
+def test_service_compile_cache_bounded(engine_setup):
+    """Serving every batch size 1..max_batch compiles at most
+    log2(max_batch)+1 programs (the L-bucket cache acceptance bound).
+    Queries keep nnz <= block_query so Q capacity tracks the L bucket."""
+    cfg, corpus, _ = engine_setup
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    max_batch = 8
+    rng = np.random.default_rng(3)
+    for L in list(range(1, max_batch + 1)) * 2:
+        qs = [corpus_lib.make_query(corpus, int(rng.integers(corpus.n_docs)),
+                                    cfg.block_query)
+              for _ in range(L)]
+        eng.search(np.stack([q[0] for q in qs]),
+                   np.stack([q[1] for q in qs]))
+    import math
+    bound = int(math.log2(max_batch)) + 1
+    assert eng.compile_stats["n_traces"] <= bound, eng.compile_stats
+    # and the buckets really are the power-of-two L grid
+    ls = sorted({b[0] for b in eng.compile_stats["buckets"]})
+    assert ls == [1, 2, 4, 8]
+
+
+def test_service_searcher_exception_propagates(engine_setup):
+    _, _, eng = engine_setup
+
+    class Boom:
+        def search(self, qi, qv):
+            raise RuntimeError("engine down")
+
+    with SearchService(Boom(), max_batch=4, max_delay_ms=1) as svc:
+        fut = svc.submit(np.array([1, 2]), np.array([1.0, 1.0]))
+        with pytest.raises(RuntimeError, match="engine down"):
+            fut.result(timeout=10)
+
+
+def test_service_cancelled_future_does_not_poison_batch(engine_setup):
+    """A client cancelling its queued Future must not disturb the other
+    clients sharing its batch (demux claims futures before scoring)."""
+    cfg, corpus, eng = engine_setup
+    gate = threading.Event()
+
+    class Gated:
+        def search(self, qi, qv):
+            gate.wait(timeout=30)
+            return eng.search(qi, qv)
+
+    with SearchService(Gated(), max_batch=4, max_delay_ms=1.0) as svc:
+        qs = [corpus_lib.make_query(corpus, i, 24) for i in (1, 2, 3)]
+        # park the scheduler inside a dummy batch so the real submissions
+        # below are guaranteed still queued (PENDING) when we cancel
+        dummy = svc.submit(*corpus_lib.make_query(corpus, 0, 24))
+        time.sleep(0.2)                    # scheduler is now blocked in Gated
+        futs = [svc.submit(qi, qv) for qi, qv in qs]
+        assert futs[1].cancel()            # cancel while queued
+        gate.set()
+        dummy.result(timeout=60)
+        for i in (0, 2):
+            r = futs[i].result(timeout=60)
+            ref = eng.search(qs[i][0][None], qs[i][1][None])
+            np.testing.assert_array_equal(r.doc_ids, ref.doc_ids[0])
+        assert futs[1].cancelled()
+
+
+def test_service_rejects_mismatched_query():
+    class Never:
+        def search(self, qi, qv):
+            return SearchResult(np.full((qi.shape[0], 1), -1, np.int64),
+                                np.zeros((qi.shape[0], 1), np.float32))
+
+    with SearchService(Never(), max_batch=2, max_delay_ms=1) as svc:
+        with pytest.raises(ValueError):
+            svc.submit(np.array([1, 2, 3]), np.array([1.0]))
+
+
+# ---------------------------------------------------------------------------
+# FlashSearchSession.submit (storage-backed serving)
+# ---------------------------------------------------------------------------
+def test_flash_session_submit_matches_blocking_search(tmp_path):
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(120, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=9)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=cfg.vocab_size,
+                              docs_per_segment=40)
+    store.append_corpus(corpus)
+    with FlashSearchSession(store, cfg) as sess:
+        idxs = [3, 77, 119, 40]
+        serial = {}
+        for i in idxs:
+            qi, qv = corpus_lib.make_query(corpus, i, 24)
+            serial[i] = sess.search(qi[None], qv[None])
+        futs = []
+        for i in idxs:                     # concurrent, coalesced
+            qi, qv = corpus_lib.make_query(corpus, i, 24)
+            futs.append((i, sess.submit(qi, qv)))
+        for i, f in futs:
+            r = f.result(timeout=120)
+            np.testing.assert_array_equal(r.doc_ids, serial[i].doc_ids[0])
+            np.testing.assert_array_equal(r.scores, serial[i].scores[0])
+        assert sess.service().stats.n_requests == len(idxs)
+    # close() tore the service down: submit must now fail, not hang
+    with pytest.raises(RuntimeError):
+        sess.submit(np.array([1]), np.array([1.0]))
