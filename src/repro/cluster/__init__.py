@@ -1,0 +1,17 @@
+"""Sharded multi-slice cluster tier: partitioned FlashStores, replica
+failover, and scatter/gather top-k behind one serving surface
+(DESIGN.md §4)."""
+from repro.cluster.partition import (HashPartitioner, Partitioner,
+                                     RangePartitioner, from_spec,
+                                     make_partitioner)
+from repro.cluster.router import ClusterSearchError, ClusterStats, ShardRouter
+from repro.cluster.session import FlashClusterSession
+from repro.cluster.store import ShardedStore, build_sharded_store, rebalance
+
+__all__ = [
+    "HashPartitioner", "Partitioner", "RangePartitioner", "from_spec",
+    "make_partitioner",
+    "ClusterSearchError", "ClusterStats", "ShardRouter",
+    "FlashClusterSession",
+    "ShardedStore", "build_sharded_store", "rebalance",
+]

@@ -1,0 +1,228 @@
+"""ShardRouter — scatter/gather top-k over a ShardedStore
+(DESIGN.md §4.2–§4.3).
+
+One coalesced ``[L, Qn]`` query batch fans out to every shard on a
+thread pool; each shard is a full FlashSearchSession (its own vocab
+filters, prefetcher, and L-bucket compile cache — the per-slice
+accelerator of the paper, untouched), reporting only its ``[L, k]``
+candidates. The gather side folds shard candidates through the engine's
+``_merge_results`` in shard order, so the cluster result is bit-identical
+to a single-store scan of the union corpus: scoring is per-document,
+the merge is deterministic, and duplicate doc ids keep their
+best-scoring entry.
+
+Replicas are the fault layer (the fail-over mirror of
+``distributed/fault.py``'s requeue): each shard holds ``replicas``
+byte-wise independent copies; a query tries replica 0 and a replica
+that raises is retried on the next one within the same query — killing
+a replica mid-run degrades latency, never correctness. A failed
+replica is health-marked *down* (kept out of rotation) only once a
+sibling succeeds on the same query, which localizes the fault to the
+replica rather than the query. Only when every replica of a shard
+fails does the query raise ``ClusterSearchError`` — and then nothing
+is marked, so one malformed request cannot brick the cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.store import ShardedStore
+from repro.configs.paper_search import SearchConfig
+from repro.core.engine import SearchResult, _merge_results
+from repro.storage.session import FlashSearchSession, SearchStats
+
+log = logging.getLogger(__name__)
+
+
+class ClusterSearchError(RuntimeError):
+    """Every replica of one shard failed the query."""
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Aggregate of the per-shard SearchStats for the last query batch.
+    ``per_shard[s]`` is None until shard s has served a query.
+    ``failovers`` snapshots the router's *lifetime* count of replicas
+    taken out of rotation (confirmed failovers plus manual
+    ``mark_down`` calls), not a per-batch figure."""
+    per_shard: List[Optional[SearchStats]]
+    failovers: int = 0
+
+    def _sum(self, field: str) -> int:
+        return sum(getattr(st, field) for st in self.per_shard
+                   if st is not None)
+
+    @property
+    def segments_total(self) -> int:
+        return self._sum("segments_total")
+
+    @property
+    def segments_skipped(self) -> int:
+        return self._sum("segments_skipped")
+
+    @property
+    def segments_scored(self) -> int:
+        return self._sum("segments_scored")
+
+    @property
+    def docs_scored(self) -> int:
+        return self._sum("docs_scored")
+
+    @property
+    def pairs_truncated(self) -> int:
+        return self._sum("pairs_truncated")
+
+    @property
+    def skip_rate(self) -> float:
+        """Aggregate skip-rate across every shard's segments."""
+        total = self.segments_total
+        return self.segments_skipped / total if total else 0.0
+
+
+class ShardRouter:
+    """Not thread-safe for concurrent ``search`` calls (each shard
+    session is stateful); route concurrency through
+    ``FlashClusterSession.submit`` like the single-store session."""
+
+    def __init__(self, store: ShardedStore, cfg: SearchConfig, *,
+                 backend: str = "jnp", use_filter: bool = True,
+                 prefetch_depth: int = 2,
+                 max_workers: Optional[int] = None):
+        self.store = store
+        self.cfg = cfg
+        self.backend = backend
+        self.use_filter = use_filter
+        self.prefetch_depth = prefetch_depth
+        n, r = store.n_shards, store.replicas
+        self._sessions: List[List[Optional[FlashSearchSession]]] = \
+            [[None] * r for _ in range(n)]
+        self._down: List[List[bool]] = [[False] * r for _ in range(n)]
+        self._lock = threading.Lock()    # session creation + health marks
+        # default concurrency adapts to the host: concurrent jax CPU
+        # dispatch *loses* to serial below ~4 cores (client contention),
+        # so small hosts get one worker (serialized shards, still correct)
+        # and many-core hosts fan out up to one thread per shard
+        workers = max_workers or min(n, max(1, (os.cpu_count() or 2) // 2))
+        self._pool = ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="shard-router")
+        self.failovers = 0
+        self.last_stats = ClusterStats([None] * n)
+
+    # -- replica health ------------------------------------------------
+    def _session(self, shard: int, replica: int) -> FlashSearchSession:
+        with self._lock:
+            if self._sessions[shard][replica] is None:
+                self._sessions[shard][replica] = FlashSearchSession(
+                    self.store.store(shard, replica), self.cfg,
+                    backend=self.backend, use_filter=self.use_filter,
+                    prefetch_depth=self.prefetch_depth)
+            return self._sessions[shard][replica]
+
+    def mark_down(self, shard: int, replica: int):
+        """Health-mark a replica out of rotation (also called by the
+        failover path). A downed replica is never retried until
+        ``reset_health``."""
+        with self._lock:
+            if not self._down[shard][replica]:
+                self._down[shard][replica] = True
+                self.failovers += 1
+
+    def reset_health(self):
+        with self._lock:
+            for row in self._down:
+                row[:] = [False] * len(row)
+
+    def health(self) -> List[List[bool]]:
+        """``health()[s][r]`` — True while the replica is in rotation."""
+        with self._lock:
+            return [[not d for d in row] for row in self._down]
+
+    # -- scatter/gather ------------------------------------------------
+    def _search_shard(self, shard: int, q_ids: np.ndarray,
+                      q_vals: np.ndarray
+                      ) -> Tuple[SearchResult, SearchStats]:
+        """Pool-thread body: primary replica first, fail over in replica
+        order. A failed attempt contributes nothing to the merge (its
+        candidates are discarded whole), so retried shards can never
+        duplicate documents.
+
+        A replica is health-marked down only when a *sibling* replica
+        then succeeds on the same query — that localizes the fault to
+        the replica. When every replica fails, the error almost
+        certainly travels with the query (bad shape, poisoned input),
+        so no marks are recorded and the next query gets every replica
+        back: one malformed request must never brick the cluster."""
+        last: Optional[Exception] = None
+        failed: list = []
+        for rep in range(self.store.replicas):
+            if self._down[shard][rep]:
+                continue
+            try:
+                sess = self._session(shard, rep)
+                res = sess.search(q_ids, q_vals)
+            except Exception as e:
+                last = e
+                log.warning("shard %d replica %d failed (%s); failing over",
+                            shard, rep, e)
+                failed.append(rep)
+                continue
+            for r in failed:
+                self.mark_down(shard, r)
+            return res, dataclasses.replace(sess.last_stats)
+        raise ClusterSearchError(
+            f"shard {shard}: all {self.store.replicas} replicas failed"
+        ) from last
+
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """q_ids/q_vals ``[L, Qn]`` (pad < 0) -> global ``[L, k]`` top-k
+        over every shard. Shards run concurrently; the merge folds in
+        shard order, so results are deterministic regardless of which
+        shard finishes first."""
+        n = self.store.n_shards
+        stats = ClusterStats([None] * n)
+        futs = [self._pool.submit(self._search_shard, s, q_ids, q_vals)
+                for s in range(n)]
+        best: Optional[SearchResult] = None
+        err: Optional[BaseException] = None
+        for s, fut in enumerate(futs):
+            try:
+                res, st = fut.result()
+            except BaseException as e:
+                err = err or e
+                continue
+            stats.per_shard[s] = st
+            best = res if best is None else _merge_results(
+                best, res, self.cfg.top_k)
+        stats.failovers = self.failovers
+        self.last_stats = stats
+        if err is not None:
+            raise err
+        assert best is not None          # n_shards >= 1
+        return best
+
+    # -- introspection -------------------------------------------------
+    def compile_counts(self) -> List[List[int]]:
+        """Engine traces per *opened* (shard, replica) session — the
+        per-shard L-bucket bound (DESIGN.md §5.2) applies to each."""
+        with self._lock:
+            return [[s.engine.compile_stats["n_traces"]
+                     for s in row if s is not None]
+                    for row in self._sessions]
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+        with self._lock:
+            for row in self._sessions:
+                for sess in row:
+                    if sess is not None:
+                        sess.close()
+            self._sessions = [[None] * self.store.replicas
+                              for _ in range(self.store.n_shards)]
+        self.store.close()

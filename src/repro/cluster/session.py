@@ -1,0 +1,67 @@
+"""FlashClusterSession — FlashSearchSession's serving surface over an
+N-shard cluster (DESIGN.md §4).
+
+Drop-in at the serving layer: ``search`` / ``submit`` / ``service`` have
+the single-store session's exact signatures, so `SearchService`,
+`repro.launch.search_serve`, and the benchmarks drive a cluster the
+same way they drive one FlashStore. One coalesced batch costs one
+scatter/gather pass: every shard prunes, prefetches, and scores its own
+slice concurrently, and only ``[L, k]`` candidates per shard reach the
+merge — the paper's "only documentIDs with high scores are reported",
+at cluster scope.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.cluster.router import ClusterStats, ShardRouter
+from repro.cluster.store import ShardedStore
+from repro.configs.paper_search import SearchConfig
+from repro.core.engine import SearchResult
+from repro.serve.session_surface import ServingSessionMixin
+
+
+class FlashClusterSession(ServingSessionMixin):
+    def __init__(self, store: Union[str, ShardedStore], cfg: SearchConfig,
+                 *, backend: str = "jnp", use_filter: bool = True,
+                 prefetch_depth: int = 2,
+                 max_workers: Optional[int] = None):
+        if isinstance(store, str):
+            store = ShardedStore.open(store)
+        if store.vocab_size > cfg.vocab_size:
+            # same invariant the engine and single-store session enforce
+            raise ValueError(
+                f"cluster vocab_size {store.vocab_size} exceeds "
+                f"cfg.vocab_size {cfg.vocab_size}")
+        self.store = store
+        self.cfg = cfg
+        self.router = ShardRouter(
+            store, cfg, backend=backend, use_filter=use_filter,
+            prefetch_depth=prefetch_depth, max_workers=max_workers)
+        self._init_serving()
+
+    # ------------------------------------------------------------------
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over every
+        shard (scatter/gather; see ShardRouter.search)."""
+        return self.router.search(q_ids, q_vals)
+
+    @property
+    def last_stats(self) -> ClusterStats:
+        return self.router.last_stats
+
+    @property
+    def compile_stats(self) -> dict:
+        """Aggregated engine traces: total plus the per-shard worst case
+        (each shard session carries its own §5.2 L-bucket bound)."""
+        counts = self.router.compile_counts()
+        flat = [c for row in counts for c in row]
+        return {"n_traces": sum(flat),
+                "per_shard": [max(row, default=0) for row in counts]}
+
+    def _close_resources(self):
+        # service/submit/close lifecycle comes from ServingSessionMixin
+        # (the same surface FlashSearchSession exposes, by construction)
+        self.router.close()

@@ -1,5 +1,5 @@
 """Concurrent-serving launcher: closed-loop load generator against the
-micro-batching SearchService (DESIGN.md §4).
+micro-batching SearchService (DESIGN.md §5).
 
 N client threads each submit one query at a time and wait for its
 result (closed loop), so offered load scales with concurrency the way
@@ -14,7 +14,9 @@ aggregate QPS, batch occupancy and the engine's compile-cache traces.
         --n-docs 20000 --clients 16 --requests 32
 
 Add ``--store PATH`` to serve an existing FlashStore through a
-FlashSearchSession instead of a synthesized resident corpus.
+FlashSearchSession, or ``--cluster PATH`` to serve a sharded store
+(DESIGN.md §4) through a FlashClusterSession, instead of a synthesized
+resident corpus.
 """
 import argparse
 import threading
@@ -84,8 +86,11 @@ def main():
     ap.add_argument("--serial", action="store_true",
                     help="bypass the coalescer: engine.search per query "
                          "under a lock (the one-at-a-time baseline)")
-    ap.add_argument("--store", help="serve this FlashStore path through a "
-                                    "FlashSearchSession")
+    tgt = ap.add_mutually_exclusive_group()
+    tgt.add_argument("--store", help="serve this FlashStore path through a "
+                                     "FlashSearchSession")
+    tgt.add_argument("--cluster", help="serve this sharded-store path "
+                                       "through a FlashClusterSession")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -99,6 +104,13 @@ def main():
         corpus = store.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] store {args.store}: {store.n_docs} docs / "
               f"{store.n_segments} segments")
+    elif args.cluster:
+        from repro.cluster import FlashClusterSession, ShardedStore
+        cstore = ShardedStore.open(args.cluster)
+        searcher = FlashClusterSession(cstore, cfg, backend=args.backend)
+        corpus = cstore.scan_corpus(cfg.nnz_pad, strict=False)
+        print(f"[serve] cluster {args.cluster}: {cstore.n_shards} shards x "
+              f"{cstore.replicas} replicas, {cstore.n_docs} docs")
     else:
         print(f"[serve] synthesizing {args.n_docs} docs "
               f"(vocab {args.vocab}, ~{args.avg_nnz} nnz/doc)...")
@@ -107,7 +119,7 @@ def main():
         searcher = PatternSearchEngine(corpus, cfg, single_device_ctx(),
                                        backend=args.backend)
     engine = searcher if isinstance(searcher, PatternSearchEngine) \
-        else searcher.engine
+        else getattr(searcher, "engine", None)
 
     def draw_query(rng):
         qi, qv = corpus_lib.make_query(corpus, int(rng.integers(corpus.n_docs)),
@@ -151,9 +163,20 @@ def main():
         print(f"  batches {st.n_batches}  mean occupancy "
               f"{st.mean_occupancy:.2f}  flushes {st.flushes}")
         svc.close()
-    print(f"  engine traces: {engine.compile_stats['n_traces']} "
-          f"{engine.compile_stats['buckets']}")
-    if args.store:
+    if engine is not None:
+        print(f"  engine traces: {engine.compile_stats['n_traces']} "
+              f"{engine.compile_stats['buckets']}")
+    else:                                # cluster: one engine per shard
+        cs = searcher.compile_stats
+        agg = searcher.last_stats
+        print(f"  engine traces: {cs['n_traces']} total, "
+              f"per-shard max {cs['per_shard']}")
+        down = sum(not ok for row in searcher.router.health() for ok in row)
+        print(f"  last batch: skip rate {agg.skip_rate:.2f} "
+              f"({agg.segments_skipped}/{agg.segments_total} segments)")
+        print(f"  router lifetime: {searcher.router.failovers} replicas "
+              f"failed over, {down} out of rotation")
+    if args.store or args.cluster:
         searcher.close()
 
 

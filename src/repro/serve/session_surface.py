@@ -1,0 +1,61 @@
+"""Shared serving surface for storage-backed search sessions
+(DESIGN.md §5.3).
+
+FlashSearchSession (one store) and FlashClusterSession (N shards)
+promise the same ``service`` / ``submit`` / ``close`` surface; this
+mixin is that surface, so the two cannot drift. Host classes implement
+``search(q_ids [L, Qn], q_vals [L, Qn]) -> SearchResult`` and
+``_close_resources()`` and call ``_init_serving()`` from ``__init__``.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+
+import numpy as np
+
+
+class ServingSessionMixin:
+    def _init_serving(self):
+        self._service = None
+        self._service_lock = threading.Lock()
+        self._closed = False
+
+    def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
+        """The session's lazily-created SearchService (DESIGN.md §5):
+        one micro-batching scheduler whose flushed batches run
+        ``self.search`` — each coalesced batch costs one pass over the
+        backing store(s) instead of one per client. The knobs apply on
+        first call; later calls return the same service."""
+        with self._service_lock:
+            if self._closed:
+                raise RuntimeError(f"{type(self).__name__} is closed")
+            if self._service is None:
+                from repro.serve.search_service import SearchService
+                self._service = SearchService(
+                    self, max_batch=max_batch, max_delay_ms=max_delay_ms)
+            return self._service
+
+    def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
+        """Non-blocking single-query search: route one 1-D query through
+        the session's coalescing service and return its Future. Also the
+        thread-safe entry point — the scheduler serializes scoring, so
+        non-thread-safe session internals are never raced."""
+        return self.service().submit(q_ids, q_vals)
+
+    def close(self):
+        with self._service_lock:
+            self._closed = True
+            if self._service is not None:
+                self._service.close()
+                self._service = None
+        self._close_resources()
+
+    def _close_resources(self):
+        raise NotImplementedError
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

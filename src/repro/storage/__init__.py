@@ -3,12 +3,13 @@ and async prefetch (DESIGN.md §3)."""
 from repro.storage.filter import (BitmapFilter, BloomFilter, build_filter,
                                   from_meta)
 from repro.storage.prefetch import Prefetcher
-from repro.storage.segment import Segment, write_segment
+from repro.storage.segment import Segment, read_footer, write_segment
 from repro.storage.session import FlashSearchSession, SearchStats
-from repro.storage.store import FlashStore
+from repro.storage.store import (FlashStore, StoreFormatError, StoreStats)
 
 __all__ = [
     "BitmapFilter", "BloomFilter", "build_filter", "from_meta",
-    "Prefetcher", "Segment", "write_segment",
+    "Prefetcher", "Segment", "read_footer", "write_segment",
     "FlashSearchSession", "SearchStats", "FlashStore",
+    "StoreFormatError", "StoreStats",
 ]

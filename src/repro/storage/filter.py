@@ -31,6 +31,21 @@ def _as_word_ids(word_ids) -> np.ndarray:
     return np.unique(ids[ids >= 0])
 
 
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """The splitmix64 finalizer (avalanche so sequential ids spread).
+
+    STABLE CONTRACT: these exact constants are baked into persisted
+    formats — Bloom filter bit positions inside segment files and the
+    cluster tier's hash partition assignments under CLUSTER.json.
+    Changing them requires a format-version bump on both."""
+    x = np.asarray(x, np.uint64)
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15))
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
 class BitmapFilter:
     """Exact one-bit-per-word membership bitmap."""
 
@@ -77,15 +92,7 @@ class BloomFilter:
         self.n_bits = n_bits
         self.n_hashes = n_hashes
 
-    @staticmethod
-    def _mix(x: np.ndarray) -> np.ndarray:
-        # splitmix64 finalizer — avalanche so sequential ids spread
-        x = np.asarray(x, np.uint64)
-        with np.errstate(over="ignore"):
-            x = (x + np.uint64(0x9E3779B97F4A7C15))
-            x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-            x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-        return x ^ (x >> np.uint64(31))
+    _mix = staticmethod(splitmix64)
 
     def _bit_positions(self, ids: np.ndarray) -> np.ndarray:
         """[n] ids -> [n, n_hashes] bit indices (Kirsch–Mitzenmacher)."""

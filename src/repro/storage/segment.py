@@ -119,6 +119,27 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
     return footer
 
 
+def read_footer(path: str) -> Dict:
+    """Read a segment's footer JSON with plain seeks — no mmap, no page
+    data touched. This is the cheap path store-wide stats and rebalance
+    planning use to inspect cold segments."""
+    with open(path, "rb") as f:
+        f.seek(0, os.SEEK_END)
+        size = f.tell()
+        tail = 8 + len(FOOTER_MAGIC)
+        if size < len(MAGIC) + tail:
+            raise ValueError(f"{path}: too small to be a segment file")
+        f.seek(size - tail)
+        trailer = f.read(tail)
+        if trailer[8:] != FOOTER_MAGIC:
+            raise ValueError(f"{path}: bad footer magic (truncated write?)")
+        (footer_off,) = struct.unpack("<Q", trailer[:8])
+        if not len(MAGIC) <= footer_off <= size - tail:
+            raise ValueError(f"{path}: footer offset {footer_off} out of range")
+        f.seek(footer_off)
+        return json.loads(f.read(size - tail - footer_off))
+
+
 class Segment:
     """Memory-mapped reader over one segment file."""
 

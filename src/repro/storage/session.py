@@ -16,9 +16,7 @@ filter pruned — the skip-rate is the storage tier's headline metric.
 from __future__ import annotations
 
 import dataclasses
-import threading
-from concurrent.futures import Future
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -27,6 +25,7 @@ from repro.core import stream_format
 from repro.core.corpus import Corpus
 from repro.core.engine import DeviceSlab, PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import MeshCtx, single_device_ctx
+from repro.serve.session_surface import ServingSessionMixin
 from repro.storage.prefetch import Prefetcher
 from repro.storage.store import FlashStore
 
@@ -45,7 +44,7 @@ class SearchStats:
                 if self.segments_total else 0.0)
 
 
-class FlashSearchSession:
+class FlashSearchSession(ServingSessionMixin):
     def __init__(self, store: FlashStore, cfg: SearchConfig,
                  ctx: Optional[MeshCtx] = None, backend: str = "jnp",
                  use_filter: bool = True, prefetch_depth: int = 2):
@@ -65,9 +64,7 @@ class FlashSearchSession:
         # one program shape for every slab: largest segment, mesh-aligned
         rows = self.ctx.dp_size
         self._slab_docs = -(-max(store.max_segment_docs, 1) // rows) * rows
-        self._service = None
-        self._service_lock = threading.Lock()
-        self._closed = False
+        self._init_serving()
 
     # ------------------------------------------------------------------
     def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
@@ -113,36 +110,6 @@ class FlashSearchSession:
         corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(self._slab_docs)
         return self.engine.put_slab(corpus)
 
-    def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
-        """The session's lazily-created SearchService (DESIGN.md §4):
-        one micro-batching scheduler whose flushed batches run
-        ``self.search`` — each coalesced batch costs one pass over the
-        store's surviving segments instead of one per client. The knobs
-        apply on first call; later calls return the same service."""
-        with self._service_lock:
-            if self._closed:
-                raise RuntimeError("FlashSearchSession is closed")
-            if self._service is None:
-                from repro.serve.search_service import SearchService
-                self._service = SearchService(
-                    self, max_batch=max_batch, max_delay_ms=max_delay_ms)
-            return self._service
-
-    def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
-        """Non-blocking single-query search: route one 1-D query through
-        the session's coalescing service and return its Future."""
-        return self.service().submit(q_ids, q_vals)
-
-    def close(self):
-        with self._service_lock:
-            self._closed = True
-            if self._service is not None:
-                self._service.close()
-                self._service = None
+    def _close_resources(self):
+        # service/submit/close lifecycle comes from ServingSessionMixin
         self.store.close()
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -28,6 +29,59 @@ from repro.storage import segment as segment_lib
 
 MANIFEST = "MANIFEST.json"
 SEGMENT_SUFFIX = ".rsps"
+STORE_MAGIC = "rsps-store"
+SUPPORTED_VERSIONS = (1,)
+_REQUIRED_KEYS = ("version", "vocab_size", "docs_per_segment", "page_items",
+                  "filter_kind", "next_segment_id", "segments")
+
+log = logging.getLogger(__name__)
+
+
+class StoreFormatError(ValueError):
+    """The directory is not a readable FlashStore of a supported version:
+    missing or garbled manifest, foreign magic, or an unknown config
+    version. The message always names the offending path, so a router
+    opening N stores can report which shard directory is bad."""
+
+
+def load_validated_manifest(path: str, *, magic: str,
+                            versions: Tuple[int, ...],
+                            required: Tuple[str, ...], kind: str) -> Dict:
+    """Read + validate a JSON manifest, raising StoreFormatError (always
+    naming ``path``) on anything that is not a ``kind`` manifest of a
+    supported version. Shared by FlashStore and ShardedStore so the two
+    validation paths cannot drift. Manifests written before the magic
+    key existed (version-1, all required keys present) are accepted."""
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise StoreFormatError(
+            f"{path}: no manifest — {os.path.dirname(path) or '.'!r} "
+            f"is not a {kind}") from None
+    except json.JSONDecodeError as e:
+        raise StoreFormatError(
+            f"{path}: manifest is not valid JSON ({e})") from None
+    if not isinstance(manifest, dict):
+        raise StoreFormatError(
+            f"{path}: manifest is {type(manifest).__name__}, not an "
+            f"object (stale or foreign directory)")
+    got = manifest.get("magic")
+    if got is not None and got != magic:
+        raise StoreFormatError(
+            f"{path}: manifest magic {got!r} != {magic!r} "
+            f"(stale or foreign directory)")
+    if manifest.get("version") not in versions:
+        raise StoreFormatError(
+            f"{path}: unsupported {kind} version "
+            f"{manifest.get('version')!r} (supported: {list(versions)}; "
+            f"stale or foreign directory?)")
+    missing = [k for k in required if k not in manifest]
+    if missing:
+        raise StoreFormatError(
+            f"{path}: manifest missing keys {missing} "
+            f"(stale or foreign directory?)")
+    return manifest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +91,17 @@ class SegmentEntry:
     n_items: int
     doc_id_min: int
     doc_id_max: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStats:
+    """Cheap store summary (manifest + segment footers via plain seeks —
+    no page mmap). The cluster tier's rebalance planner reads these."""
+    n_segments: int
+    n_docs: int
+    n_items: int
+    n_bytes: int
+    filter_kind: str
 
 
 def _corpus_docs(corpus: Corpus) -> List[Tuple[int, List[Tuple[int, int]]]]:
@@ -68,6 +133,7 @@ class FlashStore:
         if os.path.exists(os.path.join(root, MANIFEST)):
             raise FileExistsError(f"store already exists at {root}")
         manifest = {
+            "magic": STORE_MAGIC,
             "version": 1,
             "vocab_size": vocab_size,
             "docs_per_segment": docs_per_segment,
@@ -82,8 +148,10 @@ class FlashStore:
 
     @classmethod
     def open(cls, root: str) -> "FlashStore":
-        with open(os.path.join(root, MANIFEST)) as f:
-            return cls(root, json.load(f))
+        return cls(root, load_validated_manifest(
+            os.path.join(root, MANIFEST), magic=STORE_MAGIC,
+            versions=SUPPORTED_VERSIONS, required=_REQUIRED_KEYS,
+            kind="FlashStore"))
 
     def close(self):
         for seg in self._open_segments.values():
@@ -125,6 +193,30 @@ class FlashStore:
     @property
     def vocab_size(self) -> int:
         return self.manifest["vocab_size"]
+
+    def stats(self) -> StoreStats:
+        """Store summary from the manifest plus per-segment footers read
+        with plain seeks — nothing is mmapped, so this is cheap even on a
+        cold store. ``filter_kind`` is the kind actually written to the
+        segments (the manifest may say ``auto``)."""
+        entries = self.manifest["segments"]
+        n_bytes = 0
+        kinds = set()
+        for e in entries:
+            path = os.path.join(self.root, e["name"])
+            n_bytes += os.path.getsize(path)
+            kinds.add(
+                segment_lib.read_footer(path)["filter"]["meta"]["kind"])
+        if len(kinds) == 1:
+            kind = kinds.pop()
+        elif kinds:
+            kind = "mixed"
+        else:
+            kind = self.manifest["filter_kind"]
+        return StoreStats(n_segments=len(entries),
+                          n_docs=sum(e["n_docs"] for e in entries),
+                          n_items=sum(e["n_items"] for e in entries),
+                          n_bytes=n_bytes, filter_kind=kind)
 
     # -- write path ----------------------------------------------------
     def _write_one_segment(self, chunk) -> Dict:
@@ -181,8 +273,16 @@ class FlashStore:
         self.manifest["docs_per_segment"] = per
         self._write_manifest()         # commit point: new segments live
         live = {e["name"] for e in new_entries}
+        replaced = {e["name"] for e in old_entries}
         for fn in os.listdir(self.root):
             if fn.endswith(SEGMENT_SUFFIX) and fn not in live:
+                if fn not in replaced:
+                    # never referenced by any manifest: a crashed append
+                    log.warning("compact(%s): removing orphan segment %s",
+                                self.root, fn)
+                else:
+                    log.info("compact(%s): removing replaced segment %s",
+                             self.root, fn)
                 os.unlink(os.path.join(self.root, fn))
         return self.n_segments
 

@@ -1,0 +1,298 @@
+"""Cluster partition/layout invariants: every doc id lands in exactly
+one shard (both policies), build/rebalance preserve the corpus, and the
+store-format validation satellites (DESIGN.md §4.1)."""
+import json
+import logging
+import os
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.cluster import (HashPartitioner, RangePartitioner,
+                           ShardedStore, build_sharded_store, from_spec,
+                           make_partitioner, rebalance)
+from repro.storage import FlashStore, StoreFormatError
+
+
+def _docs(n, vocab=500, seed=0, start_id=0, stride=1):
+    rng = np.random.default_rng(seed)
+    return [(start_id + i * stride,
+             sorted((int(w), int(rng.integers(1, 20))) for w in
+                    rng.choice(vocab, int(rng.integers(1, 12)),
+                               replace=False)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=30)
+@given(ids=st.lists(st.integers(0, 1 << 40), min_size=0, max_size=50),
+       n_shards=st.integers(1, 7),
+       policy=st.sampled_from(["hash", "range"]))
+def test_every_id_lands_in_exactly_one_shard(ids, n_shards, policy):
+    """shard_of is a total function into [0, n_shards) and deterministic
+    — the 'exactly one shard' invariant for both policies."""
+    part = make_partitioner(policy, n_shards, doc_ids=ids)
+    assert part.n_shards == n_shards
+    arr = np.asarray(ids, np.int64)
+    a = part.shard_of(arr)
+    assert a.shape == arr.shape
+    if arr.size:
+        assert a.min() >= 0 and a.max() < n_shards
+    # deterministic: same ids -> same shards, element-wise and rebuilt
+    np.testing.assert_array_equal(a, part.shard_of(arr))
+    np.testing.assert_array_equal(a, from_spec(part.spec()).shard_of(arr))
+    for i, d in enumerate(ids):
+        assert int(part.shard_of([d])[0]) == int(a[i])
+
+
+@settings(max_examples=20)
+@given(ids=st.lists(st.integers(0, 10_000), min_size=2, max_size=60,
+                    unique_by=lambda x: x),
+       n_shards=st.integers(1, 6))
+def test_range_partitioner_is_order_preserving(ids, n_shards):
+    part = RangePartitioner.fit(ids, n_shards)
+    s = part.shard_of(np.sort(np.asarray(ids, np.int64)))
+    assert (np.diff(s) >= 0).all()          # monotone in doc id
+    assert s.min() >= 0 and s.max() < n_shards
+
+
+def test_hash_partitioner_balances_sequential_ids():
+    part = HashPartitioner(8)
+    counts = np.bincount(part.shard_of(np.arange(8000)), minlength=8)
+    assert counts.min() > 0.5 * counts.mean()   # avalanche, not id % 8
+
+
+def test_partitioner_rejects_negative_and_bad_policy():
+    with pytest.raises(ValueError):
+        HashPartitioner(4).shard_of([-1])
+    with pytest.raises(ValueError):
+        make_partitioner("mod", 4)
+    with pytest.raises(ValueError):
+        make_partitioner("range", 4)            # needs doc_ids
+    with pytest.raises(ValueError):
+        HashPartitioner(0)
+    with pytest.raises(ValueError):
+        RangePartitioner([5, 3])                # not ascending
+
+
+# ---------------------------------------------------------------------------
+# build / rebalance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["hash", "range"])
+def test_build_partitions_docs_disjointly(tmp_path, policy):
+    docs = _docs(120, seed=1, stride=3)
+    all_ids = {d for d, _ in docs}
+    cl = build_sharded_store(str(tmp_path / policy), docs, n_shards=5,
+                             replicas=2, policy=policy, vocab_size=512,
+                             docs_per_segment=16)
+    seen = []
+    for s in range(cl.n_shards):
+        # scan via segment decode to keep doc payloads too
+        shard_docs = []
+        store = cl.store(s, 0)
+        for e in store.entries:
+            shard_docs.extend(store.segment(e.name).docs())
+        ids0 = [d for d, _ in shard_docs]
+        assert len(ids0) == len(set(ids0))
+        seen.extend(ids0)
+        # replica 1 is an identical copy
+        rep1 = []
+        store1 = cl.store(s, 1)
+        for e in store1.entries:
+            rep1.extend(store1.segment(e.name).docs())
+        assert rep1 == shard_docs
+        # placement agrees with the manifest's partitioner
+        if ids0:
+            np.testing.assert_array_equal(
+                cl.partitioner.shard_of(np.asarray(ids0)), s)
+    assert sorted(seen) == sorted(all_ids)      # exactly-once placement
+    cl.close()
+
+
+def test_build_with_empty_shards_ok(tmp_path):
+    docs = _docs(3, seed=2)
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=6,
+                             policy="hash", vocab_size=512)
+    per_shard = [s["n_docs"] for s in cl.manifest["shards"]]
+    assert sum(per_shard) == 3 and 0 in per_shard
+    assert cl.n_docs == 3
+    cl.close()
+
+
+def test_rebalance_preserves_corpus_and_swaps_generation(tmp_path):
+    root = str(tmp_path / "c")
+    docs = _docs(90, seed=3)
+    cl = build_sharded_store(root, docs, n_shards=3, replicas=1,
+                             policy="hash", vocab_size=512,
+                             docs_per_segment=8)
+    before = sorted(d for st_ in [cl] for s in range(cl.n_shards)
+                    for d, _ in _shard_docs(cl, s))
+    plan = cl.stats()
+    assert sum(st_.n_docs for st_ in plan) == 90
+    cl.close()
+
+    cl2 = rebalance(root, n_shards=5, policy="range", replicas=2)
+    assert cl2.generation == 1
+    assert cl2.n_shards == 5 and cl2.replicas == 2
+    assert not os.path.exists(os.path.join(root, "gen-000"))
+    after = sorted(d for s in range(cl2.n_shards)
+                   for d, _ in _shard_docs(cl2, s))
+    assert after == before
+    # range policy: shards hold contiguous, ordered id ranges
+    prev_max = -1
+    for s in range(cl2.n_shards):
+        ids = [d for d, _ in _shard_docs(cl2, s)]
+        if not ids:
+            continue
+        assert min(ids) > prev_max
+        prev_max = max(ids)
+    cl2.close()
+
+
+def _shard_docs(cl, s):
+    store = cl.store(s, 0)
+    out = []
+    for e in store.entries:
+        out.extend(store.segment(e.name).docs())
+        store.release(e.name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# format validation satellites (FlashStore + ShardedStore)
+# ---------------------------------------------------------------------------
+def test_flashstore_open_rejects_non_store(tmp_path):
+    with pytest.raises(StoreFormatError, match="MANIFEST.json"):
+        FlashStore.open(str(tmp_path))
+
+
+def test_flashstore_open_rejects_foreign_manifest(tmp_path):
+    p = tmp_path / "MANIFEST.json"
+    p.write_text(json.dumps({"hello": "world"}))
+    with pytest.raises(StoreFormatError, match="foreign"):
+        FlashStore.open(str(tmp_path))
+    assert str(p.parent) in str(_raises(FlashStore.open, str(tmp_path)))
+
+
+def test_flashstore_open_rejects_garbled_and_stale(tmp_path):
+    (tmp_path / "MANIFEST.json").write_text("{not json")
+    with pytest.raises(StoreFormatError, match="not valid JSON"):
+        FlashStore.open(str(tmp_path))
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=64)
+    store.manifest["version"] = 99
+    store._write_manifest()
+    with pytest.raises(StoreFormatError, match="version"):
+        FlashStore.open(str(tmp_path / "s"))
+    store.manifest["version"] = 1
+    del store.manifest["docs_per_segment"]
+    store._write_manifest()
+    with pytest.raises(StoreFormatError, match="missing keys"):
+        FlashStore.open(str(tmp_path / "s"))
+
+
+def test_flashstore_open_accepts_pre_magic_manifest(tmp_path):
+    """Stores written before the magic key existed (version 1, all
+    required keys) must still open — data on disk stays readable."""
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=64)
+    store.append_docs([(0, [(1, 2)])])
+    del store.manifest["magic"]
+    store._write_manifest()
+    store.close()
+    reopened = FlashStore.open(str(tmp_path / "s"))
+    assert reopened.n_docs == 1
+    reopened.close()
+
+
+def test_crashed_rebalance_leftovers_are_cleared(tmp_path):
+    """Stale gen-NNN trees from a crash on either side of a previous
+    rebalance's manifest swap must not break or bloat the next one."""
+    root = str(tmp_path / "c")
+    cl = build_sharded_store(root, _docs(30, seed=6), n_shards=2,
+                             vocab_size=512, docs_per_segment=8)
+    # pre-commit crash: gen-001 partially written, manifest still gen 0
+    FlashStore.create(os.path.join(root, "gen-001", "shard-00", "rep-0"),
+                      vocab_size=512)
+    # post-commit crash of some older attempt: unreferenced gen tree
+    FlashStore.create(os.path.join(root, "gen-899", "shard-00", "rep-0"),
+                      vocab_size=512)
+    cl.rebalance(n_shards=3)
+    assert cl.generation == 1 and cl.n_shards == 3
+    assert sum(s["n_docs"] for s in cl.manifest["shards"]) == 30
+    assert not os.path.exists(os.path.join(root, "gen-899"))
+    assert sorted(fn for fn in os.listdir(root)
+                  if fn.startswith("gen-")) == ["gen-001"]
+    cl.close()
+
+
+def test_sharded_store_open_validates(tmp_path):
+    with pytest.raises(StoreFormatError, match="CLUSTER.json"):
+        ShardedStore.open(str(tmp_path))
+    (tmp_path / "CLUSTER.json").write_text(json.dumps({"magic": "nope"}))
+    with pytest.raises(StoreFormatError, match="foreign"):
+        ShardedStore.open(str(tmp_path))
+    cl = build_sharded_store(str(tmp_path / "c"), _docs(5), n_shards=2,
+                             vocab_size=512)
+    cl.manifest["version"] = 7
+    from repro.cluster.store import _write_manifest
+    _write_manifest(cl.root, cl.manifest)
+    with pytest.raises(StoreFormatError, match="version"):
+        ShardedStore.open(cl.root)
+    cl.close()
+
+
+def _raises(fn, *args):
+    try:
+        fn(*args)
+    except Exception as e:
+        return e
+    raise AssertionError("did not raise")
+
+
+# ---------------------------------------------------------------------------
+# stats / compact satellites
+# ---------------------------------------------------------------------------
+def test_store_stats_without_mmap(tmp_path):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=10)
+    docs = _docs(25, seed=4)
+    store.append_docs(docs)
+    st_ = store.stats()
+    assert st_.n_segments == 3
+    assert st_.n_docs == 25
+    assert st_.filter_kind == "bitmap"          # auto resolved to actual
+    assert st_.n_bytes == sum(
+        os.path.getsize(os.path.join(store.root, e["name"]))
+        for e in store.manifest["segments"])
+    assert st_.n_items == sum(e["n_items"]
+                              for e in store.manifest["segments"])
+    assert not store._open_segments              # nothing was mmapped
+    store.close()
+
+
+def test_empty_store_stats(tmp_path):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512)
+    st_ = store.stats()
+    assert st_.n_segments == 0 and st_.n_docs == 0 and st_.n_bytes == 0
+    store.close()
+
+
+def test_compact_logs_orphans(tmp_path, caplog):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=8)
+    store.append_docs(_docs(12, seed=5))
+    orphan = os.path.join(store.root, "seg-999999.rsps")
+    real = os.path.join(store.root, store.manifest["segments"][0]["name"])
+    with open(orphan, "wb") as f, open(real, "rb") as g:
+        f.write(g.read())                       # crashed-append leftover
+    with caplog.at_level(logging.INFO, logger="repro.storage.store"):
+        store.compact()
+    assert not os.path.exists(orphan)
+    assert any("orphan" in r.message and "seg-999999.rsps" in r.message
+               for r in caplog.records)
+    # compacted store still reads back whole
+    assert store.stats().n_docs == 12
+    store.close()

@@ -1,0 +1,302 @@
+"""Cluster scatter/gather correctness: bit-equivalence to a single-store
+scan of the union corpus, adversarial shard layouts, replica failover,
+and the per-shard compile-cache bound (DESIGN.md §4)."""
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterSearchError, FlashClusterSession,
+                           build_sharded_store)
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+
+def _union_session(tmp, docs, cfg, docs_per_segment=64, name="union"):
+    store = FlashStore.create(str(tmp / name), vocab_size=cfg.vocab_size,
+                              docs_per_segment=docs_per_segment)
+    if docs:
+        store.append_docs(docs)
+    return FlashSearchSession(store, cfg)
+
+
+def _query_rows(pairs_list, qn):
+    qi = np.full((len(pairs_list), qn), -1, np.int32)
+    qv = np.zeros((len(pairs_list), qn), np.float32)
+    for l, pairs in enumerate(pairs_list):
+        for j, (w, c) in enumerate(pairs):
+            qi[l, j] = w
+            qv[l, j] = c
+    return qi, qv
+
+
+def _assert_same(r, ref):
+    np.testing.assert_array_equal(r.doc_ids, ref.doc_ids)
+    np.testing.assert_array_equal(r.scores, ref.scores)
+
+
+# ---------------------------------------------------------------------------
+# the ISSUE acceptance shape: 4 shards x 2 replicas vs the union store
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(400, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=5)
+    docs = _corpus_docs(corpus)
+    tmp = tmp_path_factory.mktemp("cluster")
+    union = _union_session(tmp, docs, cfg)
+    cl = build_sharded_store(str(tmp / "c4x2"), docs, n_shards=4,
+                             replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=32)
+    sess = FlashClusterSession(cl, cfg)
+    yield cfg, corpus, union, sess
+    sess.close()
+    union.close()
+
+
+def _queries(corpus, cfg, idxs):
+    qs = [corpus_lib.make_query(corpus, i, cfg.max_query_nnz) for i in idxs]
+    return np.stack([q[0] for q in qs]), np.stack([q[1] for q in qs])
+
+
+def test_cluster_matches_union_store_exactly(setup):
+    cfg, corpus, union, sess = setup
+    qi, qv = _queries(corpus, cfg, [3, 111, 250, 399])
+    _assert_same(sess.search(qi, qv), union.search(qi, qv))
+    st = sess.last_stats
+    assert st.docs_scored == corpus.n_docs       # every doc in some shard
+    assert all(s is not None for s in st.per_shard)
+    assert st.failovers == 0
+
+
+def test_cluster_range_policy_matches_too(setup, tmp_path):
+    cfg, corpus, union, _ = setup
+    cl = build_sharded_store(str(tmp_path / "range"),
+                             _corpus_docs(corpus), n_shards=3,
+                             policy="range", vocab_size=cfg.vocab_size,
+                             docs_per_segment=32)
+    with FlashClusterSession(cl, cfg) as sess:
+        qi, qv = _queries(corpus, cfg, [42, 200])
+        _assert_same(sess.search(qi, qv), union.search(qi, qv))
+
+
+def test_concurrent_submits_match_serial_rows(setup):
+    """16 clients through the cluster's coalescing service: every Future
+    resolves to exactly the union store's serial row."""
+    cfg, corpus, union, sess = setup
+    idxs = [7 * i % 400 for i in range(16)]
+    refs = {}
+    for i in idxs:
+        qi, qv = _queries(corpus, cfg, [i])
+        refs[i] = union.search(qi, qv)
+    svc = sess.service(max_batch=8, max_delay_ms=5.0)
+    errs = []
+
+    def client(i):
+        try:
+            q = corpus_lib.make_query(corpus, i, cfg.max_query_nnz)
+            r = svc.submit(q[0], q[1]).result(timeout=120)
+            np.testing.assert_array_equal(r.doc_ids, refs[i].doc_ids[0])
+            np.testing.assert_array_equal(r.scores, refs[i].scores[0])
+        except Exception as e:                    # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in idxs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+
+
+def test_per_shard_compile_counts_within_bucket_bound(setup):
+    """After serving every batch size up to max_batch, each shard's
+    engine holds to the §5.2 bound: <= log2(max_batch) + 1 programs."""
+    cfg, corpus, union, sess = setup
+    rng = np.random.default_rng(0)
+    L = 1
+    while L <= 8:
+        qi, qv = _queries(corpus, cfg,
+                          [int(rng.integers(400)) for _ in range(L)])
+        sess.search(qi, qv)
+        L *= 2
+    assert all(c <= 4 for c in sess.compile_stats["per_shard"])  # log2(8)+1
+
+
+# ---------------------------------------------------------------------------
+# adversarial layouts (distinct scores by construction)
+# ---------------------------------------------------------------------------
+def _graded_docs(n):
+    """doc i = {word 0: 1, word i+1: i+2} -> query {0} scores strictly
+    decrease with i: equivalence is tie-free even at the top-k tail."""
+    return [(i, [(0, 1), (i + 1, i + 2)]) for i in range(n)]
+
+
+def test_all_shards_skipped_returns_sentinel(tmp_path):
+    cfg = smoke()
+    docs = _graded_docs(24)
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=4,
+                             policy="hash", vocab_size=cfg.vocab_size,
+                             docs_per_segment=4)
+    with FlashClusterSession(cl, cfg) as sess:
+        qi, qv = _query_rows([[(200, 1)], [(300, 2)]], 4)  # absent words
+        r = sess.search(qi, qv)
+        assert r.doc_ids.shape == (2, cfg.top_k)
+        assert (r.doc_ids == -1).all()
+        assert np.isneginf(r.scores).all()
+        st = sess.last_stats
+        assert st.skip_rate == 1.0
+        assert st.segments_scored == 0 and st.docs_scored == 0
+
+
+def test_empty_shards_and_k_gt_shard_rows(tmp_path):
+    """6 docs over 4 range shards (some empty, every shard smaller than
+    top_k=4): cluster == union, -1 tail included."""
+    cfg = smoke()
+    docs = _graded_docs(6)
+    union = _union_session(tmp_path, docs, cfg, docs_per_segment=2)
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=4,
+                             policy="range", vocab_size=cfg.vocab_size,
+                             docs_per_segment=2)
+    assert 0 in [s["n_docs"] for s in cl.manifest["shards"]] or \
+        max(s["n_docs"] for s in cl.manifest["shards"]) < cfg.top_k
+    with FlashClusterSession(cl, cfg) as sess:
+        qi, qv = _query_rows([[(0, 1)]], 4)
+        r, ref = sess.search(qi, qv), union.search(qi, qv)
+        _assert_same(r, ref)
+        np.testing.assert_array_equal(r.doc_ids[0],
+                                      [0, 1, 2, 3])       # graded order
+    # k exceeds every doc: tail is the -1 / -inf sentinel
+    cl2 = build_sharded_store(str(tmp_path / "c2"), _graded_docs(2),
+                              n_shards=4, policy="hash",
+                              vocab_size=cfg.vocab_size)
+    with FlashClusterSession(cl2, cfg) as sess:
+        r = sess.search(*_query_rows([[(0, 1)]], 4))
+        assert (r.doc_ids[0, 2:] == -1).all()
+        assert np.isneginf(r.scores[0, 2:]).all()
+    union.close()
+
+
+def test_dup_doc_id_across_shards_keeps_higher_score(tmp_path):
+    """A doc id present in two shards (adversarial hand-append) must
+    surface once, with its best score — _merge_results' dedup at the
+    gather stage."""
+    cfg = smoke()
+    cl = build_sharded_store(str(tmp_path / "c"), _graded_docs(8),
+                             n_shards=2, policy="range",
+                             vocab_size=cfg.vocab_size, docs_per_segment=4)
+    # id 100 in both shards: shard 0's copy scores lower (extra word),
+    # shard 1's copy is a perfect match for the probe query
+    cl.store(0, 0).append_docs([(100, [(50, 3), (60, 4)])])
+    cl.store(1, 0).append_docs([(100, [(50, 3)])])
+    with FlashClusterSession(cl, cfg) as sess:
+        r = sess.search(*_query_rows([[(50, 3)]], 4))
+        assert r.doc_ids[0, 0] == 100
+        np.testing.assert_allclose(r.scores[0, 0], 1.0, rtol=1e-6)
+        assert (r.doc_ids[0] == 100).sum() == 1      # deduped
+        assert (r.doc_ids[0, 1:] == -1).all()        # nothing else matches
+
+
+# ---------------------------------------------------------------------------
+# replica failover
+# ---------------------------------------------------------------------------
+def test_kill_one_replica_mid_run_degrades_nothing(tmp_path):
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(200, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=9)
+    docs = _corpus_docs(corpus)
+    union = _union_session(tmp_path, docs, cfg)
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=4,
+                             replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=16)
+    sess = FlashClusterSession(cl, cfg)
+    qi, qv = _queries(corpus, cfg, [1, 99, 150])
+    _assert_same(sess.search(qi, qv), union.search(qi, qv))   # warm, healthy
+
+    # kill shard 2's primary replica mid-run: delete its directory, so the
+    # next touch fails the way a dead slice would
+    shutil.rmtree(sess.router._session(2, 0).store.root)
+    sess.router._sessions[2][0] = _Exploding(sess.router._sessions[2][0])
+
+    _assert_same(sess.search(qi, qv), union.search(qi, qv))   # failed over
+    assert sess.router.health()[2] == [False, True]
+    assert sess.last_stats.failovers == 1
+    _assert_same(sess.search(qi, qv), union.search(qi, qv))
+    assert sess.router.failovers == 1        # dead replica never retried
+    sess.close()
+    union.close()
+
+
+class _Exploding:
+    """Stands in for a session whose backing replica died."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def search(self, *a, **k):
+        raise OSError("replica storage gone")
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_all_replicas_down_raises_cluster_error(tmp_path):
+    cfg = smoke()
+    cl = build_sharded_store(str(tmp_path / "c"), _graded_docs(12),
+                             n_shards=2, replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=4)
+    sess = FlashClusterSession(cl, cfg)
+    qi, qv = _query_rows([[(0, 1)]], 4)
+    sess.search(qi, qv)                          # open every primary
+    for r in range(2):
+        sess.router._sessions[0][r] = _Exploding(
+            sess.router._session(0, r))
+    with pytest.raises(ClusterSearchError, match="shard 0"):
+        sess.search(qi, qv)
+    # every replica failed -> the fault travels with the query, so no
+    # replica is health-marked: one bad request must not brick the shard
+    assert sess.router.health()[0] == [True, True]
+    assert sess.router.failovers == 0
+    sess.close()
+
+
+def test_malformed_query_does_not_poison_health(tmp_path):
+    """A query that fails identically on every replica raises without
+    health marks; the next well-formed query is served normally."""
+    cfg = smoke()
+    cl = build_sharded_store(str(tmp_path / "c"), _graded_docs(12),
+                             n_shards=2, replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=4)
+    sess = FlashClusterSession(cl, cfg)
+    bad_qi = np.full((1, 4), -1, np.int32)       # ids/vals width mismatch
+    bad_qi[0, 0] = 0
+    bad_qv = np.ones((1, 3), np.float32)
+    with pytest.raises(ClusterSearchError):
+        sess.search(bad_qi, bad_qv)
+    assert all(h == [True, True] for h in sess.router.health())
+    qi, qv = _query_rows([[(0, 1)]], 4)
+    assert sess.search(qi, qv).doc_ids[0, 0] == 0   # still serving
+    sess.close()
+
+
+def test_cluster_session_rejects_vocab_mismatch(tmp_path):
+    cfg = smoke()                                 # vocab_size = 512
+    cl = build_sharded_store(str(tmp_path / "c"), _graded_docs(4),
+                             n_shards=2, vocab_size=1024)
+    with pytest.raises(ValueError, match="vocab_size"):
+        FlashClusterSession(cl, cfg)
+    cl.close()
+
+
+def test_submit_after_close_raises(tmp_path):
+    cfg = smoke()
+    cl = build_sharded_store(str(tmp_path / "c"), _graded_docs(4),
+                             n_shards=2, vocab_size=cfg.vocab_size)
+    sess = FlashClusterSession(cl, cfg)
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.submit(np.array([0], np.int32), np.array([1.0], np.float32))
