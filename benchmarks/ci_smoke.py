@@ -1,0 +1,104 @@
+"""CI perf-smoke driver: run the storage, serving, and ingest benchmarks
+in a tiny configuration, collect their CSV rows, and write them to a
+single ``BENCH_ci.json`` that CI uploads as a workflow artifact
+(DESIGN.md §10).
+
+The point is the *trajectory*: every CI run leaves one machine-readable
+snapshot of the perf counters, so a regression shows up as a step in
+the artifact series long before anyone reruns the full benchmarks. On
+shared CI runners absolute numbers are noise, so this driver fails only
+when a benchmark crashes — acceptance gates (speedup floors, recompile
+bounds) stay in the benchmarks themselves for real hardware
+(``serve_bench`` runs here with ``--no-gate``).
+
+Usage: PYTHONPATH=src python benchmarks/ci_smoke.py [--out BENCH_ci.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# tiny configurations: the goal is rows-in-minutes on a 2-core runner,
+# not statistically meaningful numbers
+TINY = [
+    ("storage", "storage_bench.py",
+     ["--docs", "3000", "--docs-per-segment", "300", "--vocab", "20000",
+      "--topics", "10", "--repeats", "1"]),
+    ("serve", "serve_bench.py",
+     ["--docs", "1500", "--vocab", "10000", "--clients", "4",
+      "--requests", "8", "--max-batch", "4", "--no-gate"]),
+    ("ingest", "ingest_bench.py",
+     ["--docs", "2000", "--append-docs", "600", "--docs-per-segment",
+      "250", "--seal-docs", "100", "--vocab", "10000", "--repeats", "5"]),
+]
+
+
+def _parse_rows(stdout: str):
+    """``name,us_per_call,derived`` lines -> row dicts (anything else on
+    stdout is commentary and skipped)."""
+    rows = []
+    for line in stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) != 3 or "/" not in parts[0]:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": parts[2]})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ci.json")
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(BENCH_DIR, "..", "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    report = {
+        "schema": "repro-bench-v1",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "host": {"platform": platform.platform(),
+                 "python": platform.python_version(),
+                 "cpus": os.cpu_count()},
+        "benches": {},
+    }
+    failed = []
+    for tag, script, argv in TINY:
+        cmd = [sys.executable, os.path.join(BENCH_DIR, script)] + argv
+        t0 = time.perf_counter()
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        wall = time.perf_counter() - t0
+        rows = _parse_rows(proc.stdout)
+        report["benches"][tag] = {
+            "cmd": " ".join(cmd[1:]),
+            "returncode": proc.returncode,
+            "wall_s": round(wall, 2),
+            "rows": rows,
+        }
+        status = "ok" if proc.returncode == 0 else "CRASH"
+        print(f"[{tag}] {status} in {wall:.1f}s, {len(rows)} rows")
+        if proc.returncode != 0:
+            failed.append(tag)
+            sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-4000:])
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out} "
+          f"({sum(len(b['rows']) for b in report['benches'].values())} rows)")
+    if failed:
+        sys.exit(f"benchmark crash in: {', '.join(failed)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Ingestion-tier benchmark: write-path throughput and the cost of
+searching under live writes (DESIGN.md §10).
+
+Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
+
+    ingest/appends_per_sec       WAL + memtable append rate (no fsync)
+    ingest/seal_ms               memtable -> delta segment commit
+    ingest/compact_ms            tail fold of the accumulated deltas
+    ingest/search_static_ms      query latency, quiesced store
+    ingest/search_live_ms        query latency with a writer thread
+                                 appending flat out (snapshot capture +
+                                 memtable scoring overhead included)
+    ingest/search_live_overhead  live / static latency ratio
+
+Usage: PYTHONPATH=src python benchmarks/ingest_bench.py [--docs 20000]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.storage import FlashSearchSession, FlashStore
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _docs(n, vocab, nnz, rng, start_id=0):
+    return [(start_id + i,
+             sorted((int(w), int(rng.integers(1, 30))) for w in
+                    rng.choice(vocab, nnz, replace=False)))
+            for i in range(n)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000,
+                    help="base corpus size (appends add --append-docs)")
+    ap.add_argument("--append-docs", type=int, default=4_000)
+    ap.add_argument("--docs-per-segment", type=int, default=1_000)
+    ap.add_argument("--seal-docs", type=int, default=500)
+    ap.add_argument("--vocab", type=int, default=50_000)
+    ap.add_argument("--nnz", type=int, default=60)
+    ap.add_argument("--repeats", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="ingest-bench", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.nnz, nnz_pad=64, top_k=16,
+                       block_docs=128, block_query=512)
+    rng = np.random.default_rng(0)
+    base = _docs(args.docs, args.vocab, args.nnz, rng)
+    extra = _docs(args.append_docs, args.vocab, args.nnz, rng,
+                  start_id=args.docs)
+
+    root = os.path.join(tempfile.mkdtemp(), "store")
+    store = FlashStore.create(root, vocab_size=args.vocab,
+                              docs_per_segment=args.docs_per_segment)
+    store.append_docs(base)
+    sess = FlashSearchSession(store, cfg)
+    pipe = sess.enable_ingest(seal_docs=args.seal_docs,
+                              fold_min_segments=4, auto_compact=False)
+
+    # -- append throughput (seals included, amortized) ------------------
+    t0 = time.perf_counter()
+    for d, p in extra:
+        sess.append(d, p)
+    dt = time.perf_counter() - t0
+    _row("ingest/appends_per_sec", dt * 1e6 / len(extra),
+         f"{len(extra) / dt:.0f}")
+
+    # -- seal + compact latency ----------------------------------------
+    sess.append(*_docs(1, args.vocab, args.nnz, rng,
+                       start_id=args.docs + len(extra))[0])
+    t0 = time.perf_counter()
+    pipe.seal()
+    _row("ingest/seal_ms", 0.0, f"{(time.perf_counter() - t0) * 1e3:.2f}")
+    t0 = time.perf_counter()
+    folded = pipe.compact_once()
+    _row("ingest/compact_ms", 0.0,
+         f"{(time.perf_counter() - t0) * 1e3:.2f} ({folded} folded)")
+
+    # -- search latency: quiesced vs under live appends ----------------
+    probe = base[len(base) // 2]
+    qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+    for j, (w, c) in enumerate(probe[1][:cfg.max_query_nnz]):
+        qi[0, j] = w
+        qv[0, j] = c
+    sess.search(qi, qv)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(args.repeats):
+        sess.search(qi, qv)
+    static = (time.perf_counter() - t0) / args.repeats
+    _row("ingest/search_static_ms", static * 1e6, f"{static * 1e3:.2f}")
+
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        churn = _docs(2_000, args.vocab, args.nnz, rng, start_id=10**7)
+        while not stop.is_set():
+            sess.append(*churn[i % len(churn)])
+            i += 1
+
+    t = threading.Thread(target=writer, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    for _ in range(args.repeats):
+        sess.search(qi, qv)
+    live = (time.perf_counter() - t0) / args.repeats
+    stop.set()
+    t.join(timeout=10)
+    _row("ingest/search_live_ms", live * 1e6, f"{live * 1e3:.2f}")
+    _row("ingest/search_live_overhead", 0.0, f"{live / static:.2f}x")
+
+    sess.close()
+    shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

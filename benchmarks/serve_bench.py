@@ -1,5 +1,5 @@
 """Serving-layer benchmark: micro-batch coalescing throughput/latency
-sweep vs the one-query-at-a-time baseline (DESIGN.md §5).
+sweep vs the one-query-at-a-time baseline (DESIGN.md §6).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
 
@@ -74,6 +74,12 @@ def main():
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report the acceptance row but never exit "
+                         "nonzero on it (CI perf-smoke runs on tiny "
+                         "shared runners where the speedup gate is "
+                         "noise; there the bench should fail only on "
+                         "crash)")
     args = ap.parse_args()
 
     cfg = SearchConfig(name="serve-bench", vocab_size=args.vocab,
@@ -139,7 +145,7 @@ def main():
     print(f"serve/acceptance,{0.0:.1f},"
           f"{'PASS' if ok else 'FAIL'} (speedup {speedup:.2f}x >= 2x, "
           f"{n_traces} traces <= {bound})")
-    if not ok:
+    if not ok and not args.no_gate:
         sys.exit(1)
 
 

@@ -1,5 +1,5 @@
 """Storage-tier benchmark: segments/sec through the flash path and
-vocabulary-filter skip-rate vs query sparsity (DESIGN.md §9).
+vocabulary-filter skip-rate vs query sparsity (DESIGN.md §10).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
 

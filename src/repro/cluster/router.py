@@ -80,6 +80,10 @@ class ClusterStats:
         return self._sum("pairs_truncated")
 
     @property
+    def memtable_docs(self) -> int:
+        return self._sum("memtable_docs")
+
+    @property
     def skip_rate(self) -> float:
         """Aggregate skip-rate across every shard's segments."""
         total = self.segments_total
@@ -114,16 +118,132 @@ class ShardRouter:
             max_workers=workers, thread_name_prefix="shard-router")
         self.failovers = 0
         self.last_stats = ClusterStats([None] * n)
+        self._ingest_knobs: Optional[dict] = None
+        self._part_cache: Optional[Tuple[int, object]] = None
+        self._gen = store.generation
+
+    # -- generation reconcile ------------------------------------------
+    def _reconcile_generation(self):
+        """An in-process ``ShardedStore.rebalance`` leaves every cached
+        session pointing at directories the rebalance just deleted (and
+        possibly the wrong shard count). Entry points call this first:
+        when the manifest generation has moved, cached sessions are
+        closed and the session/health arrays resized to the live
+        topology, so searches and appends address the new generation.
+        Not safe concurrently *with* the rebalance itself — quiesce
+        traffic (and ``flush_ingest``) before rebalancing, as documented
+        there."""
+        if self._gen == self.store.generation:
+            return
+        stale: List[FlashSearchSession] = []
+        with self._lock:
+            # only the array swap happens under the lock — closing a
+            # session can block on its compactor join, and concurrent
+            # queries must not stall behind that
+            if self._gen != self.store.generation:
+                stale = [s for row in self._sessions for s in row
+                         if s is not None]
+                n, r = self.store.n_shards, self.store.replicas
+                self._sessions = [[None] * r for _ in range(n)]
+                self._down = [[False] * r for _ in range(n)]
+                self.last_stats = ClusterStats([None] * n)
+                self._gen = self.store.generation
+        for sess in stale:
+            sess.close()
+        if stale:
+            log.info("router(%s): generation %d live; %d stale session(s) "
+                     "closed", self.store.root, self._gen, len(stale))
 
     # -- replica health ------------------------------------------------
     def _session(self, shard: int, replica: int) -> FlashSearchSession:
         with self._lock:
             if self._sessions[shard][replica] is None:
-                self._sessions[shard][replica] = FlashSearchSession(
+                sess = FlashSearchSession(
                     self.store.store(shard, replica), self.cfg,
                     backend=self.backend, use_filter=self.use_filter,
                     prefetch_depth=self.prefetch_depth)
+                if self._ingest_knobs is not None:
+                    sess.enable_ingest(**self._ingest_knobs)
+                self._sessions[shard][replica] = sess
             return self._sessions[shard][replica]
+
+    # -- live ingestion (DESIGN.md §5.3) -------------------------------
+    def enable_ingest(self, **knobs):
+        """Arm every shard session (existing and future) with a write
+        path; each replica directory gets its own WAL + memtable +
+        compactor, keeping replicas byte-wise independent."""
+        with self._lock:
+            self._ingest_knobs = knobs
+            open_sessions = [s for row in self._sessions for s in row
+                             if s is not None]
+        for sess in open_sessions:
+            sess.enable_ingest(**knobs)
+
+    def _partitioner(self):
+        """The live partitioner, re-read when the manifest generation
+        moves — so appends issued after an in-process ``rebalance`` land
+        on the *new* generation's owner shard."""
+        gen = self.store.generation
+        if self._part_cache is None or self._part_cache[0] != gen:
+            self._part_cache = (gen, self.store.partitioner)
+        return self._part_cache[1]
+
+    def append(self, doc_id: int, pairs) -> int:
+        """Route one document to its owner shard (pure function of the
+        doc id, same policy the build used) and append it to every
+        *in-rotation* replica, keeping those content-identical.
+
+        A replica whose append fails while a sibling's succeeded is now
+        content-divergent, so it is health-marked down — out of both
+        read and write rotation until ``reset_health`` (which, as with
+        read failover, is only correct after the replica directory has
+        been repaired or rebuilt; §11). If every replica fails the error
+        travels with the document and nothing is marked, mirroring the
+        read path's poisoned-query rule. Returns the owner shard."""
+        if self._ingest_knobs is None:
+            raise RuntimeError(
+                "append() needs enable_ingest() first — the cluster is "
+                "read-only until a write path is attached")
+        self._reconcile_generation()
+        shard = int(self._partitioner().shard_of(
+            np.asarray([doc_id], np.int64))[0])
+        failed: List[Tuple[int, Exception]] = []
+        wrote = 0
+        for rep in range(self.store.replicas):
+            if self._down[shard][rep]:
+                continue
+            try:
+                self._session(shard, rep).append(doc_id, pairs)
+                wrote += 1
+            except Exception as e:
+                log.warning("shard %d replica %d append failed (%s)",
+                            shard, rep, e)
+                failed.append((rep, e))
+        if failed:
+            if wrote:        # divergence: the failed copies are stale
+                for rep, _ in failed:
+                    self.mark_down(shard, rep)
+            raise failed[0][1]
+        if not wrote:
+            raise ClusterSearchError(
+                f"shard {shard}: no replica in rotation to append to")
+        return shard
+
+    def flush_ingest(self) -> int:
+        """Seal every open shard session's memtable (call before a
+        rebalance: rebalance streams segments, not WAL tails)."""
+        return sum(s.flush_ingest() for s in self._open_sessions())
+
+    def ingest_pipelines(self) -> List:
+        """The live IngestPipelines of every opened replica session
+        (introspection: the launcher aggregates their seal/fold stats)."""
+        return [s.ingest for s in self._open_sessions()
+                if s.ingest is not None]
+
+    def _open_sessions(self) -> List[FlashSearchSession]:
+        with self._lock:
+            return [s for row in self._sessions for s in row
+                    if s is not None]
 
     def mark_down(self, shard: int, replica: int):
         """Health-mark a replica out of rotation (also called by the
@@ -185,6 +305,7 @@ class ShardRouter:
         over every shard. Shards run concurrently; the merge folds in
         shard order, so results are deterministic regardless of which
         shard finishes first."""
+        self._reconcile_generation()
         n = self.store.n_shards
         stats = ClusterStats([None] * n)
         futs = [self._pool.submit(self._search_shard, s, q_ids, q_vals)
@@ -210,7 +331,7 @@ class ShardRouter:
     # -- introspection -------------------------------------------------
     def compile_counts(self) -> List[List[int]]:
         """Engine traces per *opened* (shard, replica) session — the
-        per-shard L-bucket bound (DESIGN.md §5.2) applies to each."""
+        per-shard L-bucket bound (DESIGN.md §6.2) applies to each."""
         with self._lock:
             return [[s.engine.compile_stats["n_traces"]
                      for s in row if s is not None]

@@ -48,6 +48,27 @@ class FlashClusterSession(ServingSessionMixin):
         shard (scatter/gather; see ShardRouter.search)."""
         return self.router.search(q_ids, q_vals)
 
+    # -- live ingestion (DESIGN.md §5.3) -------------------------------
+    def enable_ingest(self, **knobs) -> "FlashClusterSession":
+        """Attach a write path to every shard replica (each gets its own
+        WAL + memtable + compactor). ``knobs`` are
+        ``repro.ingest.IngestConfig`` fields."""
+        self.router.enable_ingest(**knobs)
+        return self
+
+    def append(self, doc_id: int, pairs) -> int:
+        """Append one document to the shard that owns its id (per the
+        live partition spec — rebalance-aware) on every replica; it is
+        searchable by the next query. Returns the owner shard. Per-shard
+        snapshot consistency is the single-store guarantee; a scatter
+        batch captures each shard's snapshot independently."""
+        return self.router.append(doc_id, pairs)
+
+    def flush_ingest(self) -> int:
+        """Seal every shard memtable into delta segments (do this before
+        ``ShardedStore.rebalance``, which streams segments)."""
+        return self.router.flush_ingest()
+
     @property
     def last_stats(self) -> ClusterStats:
         return self.router.last_stats
@@ -55,7 +76,7 @@ class FlashClusterSession(ServingSessionMixin):
     @property
     def compile_stats(self) -> dict:
         """Aggregated engine traces: total plus the per-shard worst case
-        (each shard session carries its own §5.2 L-bucket bound)."""
+        (each shard session carries its own §6.2 L-bucket bound)."""
         counts = self.router.compile_counts()
         flat = [c for row in counts for c in row]
         return {"n_traces": sum(flat),

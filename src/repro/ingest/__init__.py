@@ -1,0 +1,12 @@
+"""Live ingestion tier: WAL-backed appends, memtable + delta segments,
+and online compaction under serving (DESIGN.md §5)."""
+from repro.ingest.memtable import MemTable
+from repro.ingest.pipeline import (IngestConfig, IngestPipeline,
+                                   IngestStats, Snapshot, WAL_NAME)
+from repro.ingest.wal import WriteAheadLog
+
+__all__ = [
+    "MemTable",
+    "IngestConfig", "IngestPipeline", "IngestStats", "Snapshot", "WAL_NAME",
+    "WriteAheadLog",
+]

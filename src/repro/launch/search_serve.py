@@ -1,5 +1,5 @@
 """Concurrent-serving launcher: closed-loop load generator against the
-micro-batching SearchService (DESIGN.md §5).
+micro-batching SearchService (DESIGN.md §6).
 
 N client threads each submit one query at a time and wait for its
 result (closed loop), so offered load scales with concurrency the way
@@ -16,7 +16,11 @@ aggregate QPS, batch occupancy and the engine's compile-cache traces.
 Add ``--store PATH`` to serve an existing FlashStore through a
 FlashSearchSession, or ``--cluster PATH`` to serve a sharded store
 (DESIGN.md §4) through a FlashClusterSession, instead of a synthesized
-resident corpus.
+resident corpus. With either, ``--ingest N`` additionally runs a
+closed-loop writer thread that appends N fresh documents through the
+live-ingestion tier (WAL -> memtable -> delta segments, DESIGN.md §5)
+*while* the query clients run — the serving-under-writes scenario —
+and reports appends/sec plus seal/compaction counts.
 """
 import argparse
 import threading
@@ -91,8 +95,17 @@ def main():
                                      "FlashSearchSession")
     tgt.add_argument("--cluster", help="serve this sharded-store path "
                                        "through a FlashClusterSession")
+    ap.add_argument("--ingest", type=int, default=0, metavar="N",
+                    help="append N synthesized documents through the "
+                         "live write path while the clients run "
+                         "(requires --store or --cluster)")
+    ap.add_argument("--seal-docs", type=int, default=256,
+                    help="memtable seal threshold for --ingest")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.ingest and not (args.store or args.cluster):
+        ap.error("--ingest needs --store or --cluster (the resident "
+                 "engine has no write path)")
 
     cfg = SearchConfig(name="serve", vocab_size=args.vocab,
                        avg_nnz_per_doc=args.avg_nnz, nnz_pad=args.nnz_pad,
@@ -126,6 +139,35 @@ def main():
                                        args.query_nnz)
         return qi, qv
 
+    writer_state = {"done": 0, "wall": 0.0}
+    writer_thread = None
+    if args.ingest:
+        searcher.enable_ingest(seal_docs=args.seal_docs)
+        # sample from the *store's* vocab, not the CLI default — the
+        # session allows store.vocab_size < cfg.vocab_size, and appends
+        # reject word ids beyond the store's range
+        vocab = searcher.store.vocab_size
+        next_id = int(corpus.doc_ids.max()) + 1 if corpus.n_docs else 0
+
+        def writer():
+            # closed loop: one append at a time, back-to-back, racing
+            # the query clients — every search snapshots mid-stream
+            rng = np.random.default_rng(args.seed + 7)
+            nnz = min(args.avg_nnz, vocab)
+            t0 = time.perf_counter()
+            try:
+                for i in range(args.ingest):
+                    pairs = [(int(w), int(rng.integers(1, 30))) for w in
+                             rng.choice(vocab, nnz, replace=False)]
+                    searcher.append(next_id + i, pairs)
+                    writer_state["done"] = i + 1
+            except Exception as e:           # surfaced after join, like
+                writer_state["error"] = e    # the query clients' errors
+            finally:
+                writer_state["wall"] = time.perf_counter() - t0
+
+        writer_thread = threading.Thread(target=writer, name="ingest-writer")
+
     def warm_buckets(max_l):
         """Compile every L-bucket program up front so the measured window
         is steady-state (one trace per power-of-two bucket)."""
@@ -146,6 +188,8 @@ def main():
                 searcher.search(qi[None], qv[None])
 
         warm_buckets(1)
+        if writer_thread is not None:
+            writer_thread.start()
         lats, wall = run_clients(args.clients, args.requests, do_query)
         report("serial", lats, wall)
     else:
@@ -157,6 +201,8 @@ def main():
             svc.submit(qi, qv).result()
 
         warm_buckets(args.max_batch)
+        if writer_thread is not None:
+            writer_thread.start()
         lats, wall = run_clients(args.clients, args.requests, do_query)
         report(f"coalesced x{args.max_batch}", lats, wall)
         st = svc.stats
@@ -176,6 +222,24 @@ def main():
               f"({agg.segments_skipped}/{agg.segments_total} segments)")
         print(f"  router lifetime: {searcher.router.failovers} replicas "
               f"failed over, {down} out of rotation")
+    if writer_thread is not None:
+        writer_thread.join()                 # let a slow writer finish
+        if "error" in writer_state:
+            raise writer_state["error"]
+        done, w_wall = writer_state["done"], writer_state["wall"]
+        print(f"  ingest: {done} docs appended in {w_wall:.2f}s "
+              f"-> {done / max(w_wall, 1e-9):.0f} appends/s under load")
+        pipes = [searcher.ingest] if args.store \
+            else searcher.router.ingest_pipelines()
+        seals = sum(p.stats.seals for p in pipes)
+        folds = sum(p.stats.compactions for p in pipes)
+        print(f"  ingest: {seals} seal(s), {folds} background fold(s); "
+              f"memtable tail {sum(len(p.memtable) for p in pipes)} docs")
+        qi, qv = corpus_lib.make_query(corpus, 0, args.query_nnz)
+        searcher.search(qi[None], qv[None])  # post-run sanity pass
+        st = searcher.last_stats
+        print(f"  post-ingest store: {st.docs_scored} docs scored "
+              f"(snapshot incl. memtable)")
     if args.store or args.cluster:
         searcher.close()
 

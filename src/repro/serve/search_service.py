@@ -1,12 +1,12 @@
 """SearchService — concurrent query serving with micro-batch coalescing
-(DESIGN.md §5).
+(DESIGN.md §6).
 
 Many clients each hold one sparse query; the paper's engine wants one
 L-column merged batch per corpus pass. The service bridges the two:
 
     client threads ── submit(q_ids, q_vals) -> Future ──┐
                                                         ▼
-                                           MicroBatcher (§5.1)
+                                           MicroBatcher (§6.1)
                                    flush on max_batch L or max_delay_ms
                                                         ▼
                             searcher.search([L, Qn] stacked batch)

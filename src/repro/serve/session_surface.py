@@ -1,5 +1,5 @@
 """Shared serving surface for storage-backed search sessions
-(DESIGN.md §5.3).
+(DESIGN.md §6.3).
 
 FlashSearchSession (one store) and FlashClusterSession (N shards)
 promise the same ``service`` / ``submit`` / ``close`` surface; this
@@ -22,7 +22,7 @@ class ServingSessionMixin:
         self._closed = False
 
     def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
-        """The session's lazily-created SearchService (DESIGN.md §5):
+        """The session's lazily-created SearchService (DESIGN.md §6):
         one micro-batching scheduler whose flushed batches run
         ``self.search`` — each coalesced batch costs one pass over the
         backing store(s) instead of one per client. The knobs apply on

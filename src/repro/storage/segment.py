@@ -62,10 +62,13 @@ def _page_splits(stream: np.ndarray, hdr_pos: np.ndarray,
 def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]]],
                   *, page_items: int = DEFAULT_PAGE_ITEMS,
                   vocab_size: Optional[int] = None,
-                  filter_kind: str = "auto") -> Dict:
+                  filter_kind: str = "auto", fsync: bool = False) -> Dict:
     """Encode ``docs`` ([(doc_id, [(word, count), ...])]) into a segment
     file at ``path``. Returns the footer dict (the manifest keeps a
-    subset). Writes to ``path + '.tmp'`` and atomically renames."""
+    subset). Writes to ``path + '.tmp'`` and atomically renames.
+    ``fsync=True`` flushes the data to disk before the rename — required
+    when a durable manifest will reference this file (a manifest that
+    survives power loss must never point at torn pages)."""
     stream = stream_format.encode(docs)
     hdr_pos = np.flatnonzero((stream & stream_format.HEADER_BIT) != 0)
     splits = _page_splits(stream, hdr_pos, page_items)
@@ -115,6 +118,9 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
         f.write(footer_raw)
         f.write(struct.pack("<Q", footer_off))
         f.write(FOOTER_MAGIC)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     os.replace(tmp, path)
     return footer
 

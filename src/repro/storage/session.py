@@ -12,11 +12,19 @@ Every surviving segment becomes one fixed-shape DeviceSlab (padded to the
 store's largest segment rounded up to the mesh rows) so the whole stream
 reuses a single compiled program. ``last_stats`` reports how much the
 filter pruned — the skip-rate is the storage tier's headline metric.
+
+With ``enable_ingest()`` the session also becomes a *live* writer
+surface (DESIGN.md §5): ``append`` routes documents through a
+write-ahead log + memtable, and every search scores an atomic snapshot
+— the manifest segments, sealed deltas, and memtable captured at the
+moment the query (or its coalesced batch) starts scoring — so results
+are bit-identical to a from-scratch store holding the same documents,
+and background seals/compactions never perturb an in-flight query.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +45,8 @@ class SearchStats:
     segments_scored: int = 0
     docs_scored: int = 0
     pairs_truncated: int = 0
+    memtable_docs: int = 0     # of docs_scored, how many came from the
+                               # live memtable (0 without ingest)
 
     @property
     def skip_rate(self) -> float:
@@ -61,50 +71,125 @@ class FlashSearchSession(ServingSessionMixin):
                 f"cfg.vocab_size {cfg.vocab_size}")
         self.engine = PatternSearchEngine(None, cfg, self.ctx, backend)
         self.last_stats = SearchStats()
+        self._ingest = None
         # one program shape for every slab: largest segment, mesh-aligned
         rows = self.ctx.dp_size
         self._slab_docs = -(-max(store.max_segment_docs, 1) // rows) * rows
         self._init_serving()
 
+    # -- live ingestion (DESIGN.md §5) ---------------------------------
+    def enable_ingest(self, **knobs) -> "IngestPipeline":
+        """Attach a write path (WAL + memtable + background compactor)
+        to this session's store and replay any WAL tail a crash left
+        behind. ``knobs`` are ``repro.ingest.IngestConfig`` fields.
+        Idempotent; returns the pipeline."""
+        from repro.ingest import IngestConfig, IngestPipeline
+        if self._ingest is None:
+            self._ingest = IngestPipeline(self.store, IngestConfig(**knobs))
+        return self._ingest
+
+    @property
+    def ingest(self) -> Optional["IngestPipeline"]:
+        return self._ingest
+
+    def append(self, doc_id: int, pairs: Sequence[Tuple[int, int]]) -> int:
+        """Durably append one document ([(word, count), ...]) to the live
+        store; it is searchable by the next query. Requires
+        ``enable_ingest()``. Returns the WAL sequence number."""
+        if self._ingest is None:
+            raise RuntimeError(
+                "append() needs enable_ingest() first — the session is "
+                "read-only until a write path is attached")
+        return self._ingest.append(doc_id, pairs)
+
+    def flush_ingest(self) -> int:
+        """Seal the memtable into delta segments now (0 without ingest)."""
+        return self._ingest.seal() if self._ingest is not None else 0
+
     # ------------------------------------------------------------------
     def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
-        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over the store."""
-        stats = SearchStats(segments_total=self.store.n_segments)
+        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over the store
+        (plus, with ingest enabled, the sealed deltas and memtable of an
+        atomic snapshot taken now)."""
+        if self._ingest is None:
+            return self._search_view(self.store, None, q_ids, q_vals)
+        snap = self._ingest.capture()
+        try:
+            return self._search_view(snap, snap, q_ids, q_vals)
+        finally:
+            snap.close()
+
+    def _search_view(self, view, snap, q_ids: np.ndarray,
+                     q_vals: np.ndarray) -> SearchResult:
+        """Score one segment view. ``view`` duck-types the segment
+        surface (``entries`` / ``segment`` / ``release`` — a FlashStore
+        or an ingest Snapshot); ``snap`` carries the memtable when the
+        view is a snapshot."""
+        entries = view.entries
+        stats = SearchStats(segments_total=len(entries))
         # segments appended since construction may have grown the slab shape
         rows = self.ctx.dp_size
-        self._slab_docs = -(-max(self.store.max_segment_docs, 1)
-                            // rows) * rows
+        self._slab_docs = -(-max(view.max_segment_docs, 1) // rows) * rows
         q_words = np.unique(q_ids[q_ids >= 0])
         survivors = []
-        # one segment open at a time: a skipped segment costs its footer +
-        # filter pages and the handle is dropped immediately
-        for entry in self.store.entries:
-            seg = self.store.segment(entry.name)
+        # one segment handle held at a time on both paths: a skipped
+        # segment costs its footer + filter pages, a survivor is
+        # reopened lazily by the prefetch loader (snapshot entries stay
+        # openable — the pipeline defers GC while the snapshot lives)
+        for entry in entries:
+            seg = view.segment(entry.name)
             if (self.use_filter and q_words.size
                     and not seg.vocab_filter.contains_any(q_words)):
                 stats.segments_skipped += 1
-                self.store.release(entry.name)
+                view.release(entry.name)
                 continue
             survivors.append(entry.name)
-            self.store.release(entry.name)
+            view.release(entry.name)
         stats.segments_scored = len(survivors)
+        mem_corpus, mem_trunc = (snap.memtable_corpus(self.cfg.nnz_pad)
+                                 if snap is not None else (None, 0))
         self.last_stats = stats
-        if not survivors:
+        if not survivors and mem_corpus is None:
             return self.engine.empty_result(q_ids.shape[0])
-        with Prefetcher(survivors, self._load_slab,
-                        depth=self.prefetch_depth) as slabs:
+        mem_slab = None
+        if mem_corpus is not None:
+            stats.memtable_docs = mem_corpus.n_docs
+            stats.docs_scored += mem_corpus.n_docs
+            stats.pairs_truncated += mem_trunc
+            # reuse the segment program shape whenever the memtable fits;
+            # a memtable that outgrows it (seal_docs > largest segment)
+            # pads to the next *doubling* so interleaved append/search
+            # compiles O(log) shapes, not one per append
+            pad = self._slab_docs
+            while pad < mem_corpus.n_docs:
+                pad *= 2
+            mem_slab = mem_corpus.pad_docs_to(pad)
+        pf = Prefetcher(survivors, lambda name: self._load_slab(view, name),
+                        depth=self.prefetch_depth) if survivors else None
+        try:
+            slabs = self._chain_slabs(pf, mem_slab)
             result = self.engine.search_streaming(q_ids, q_vals, slabs)
+        finally:
+            if pf is not None:
+                pf.close()
         return result
 
+    @staticmethod
+    def _chain_slabs(pf, mem_slab):
+        if pf is not None:
+            yield from pf
+        if mem_slab is not None:
+            yield mem_slab
+
     # ------------------------------------------------------------------
-    def _load_slab(self, name: str) -> DeviceSlab:
+    def _load_slab(self, view, name: str) -> DeviceSlab:
         """Prefetch-thread body: mmap read -> ELL decode -> device upload.
         The segment handle is released once decoded, so at most
         ``prefetch_depth`` segments are open during the scoring stream."""
-        seg = self.store.segment(name)
+        seg = view.segment(name)
         doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
             seg.stream(), self.cfg.nnz_pad)
-        self.store.release(name)
+        view.release(name)
         self.last_stats.docs_scored += int(doc_ids.size)
         self.last_stats.pairs_truncated += n_trunc
         corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(self._slab_docs)
@@ -112,4 +197,7 @@ class FlashSearchSession(ServingSessionMixin):
 
     def _close_resources(self):
         # service/submit/close lifecycle comes from ServingSessionMixin
+        if self._ingest is not None:
+            self._ingest.close()
+            self._ingest = None
         self.store.close()

@@ -37,6 +37,19 @@ _REQUIRED_KEYS = ("version", "vocab_size", "docs_per_segment", "page_items",
 log = logging.getLogger(__name__)
 
 
+def fsync_dir(path: str):
+    """fsync a directory so a just-renamed or just-unlinked dirent is
+    durable. A crash after ``os.replace(manifest)`` but before the
+    directory metadata reaches disk could resurrect the *old* manifest —
+    whose segment list references files a post-swap GC already deleted,
+    or re-references segments the swap replaced."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class StoreFormatError(ValueError):
     """The directory is not a readable FlashStore of a supported version:
     missing or garbled manifest, foreign magic, or an unknown config
@@ -164,11 +177,26 @@ class FlashStore:
     def __exit__(self, *exc):
         self.close()
 
-    def _write_manifest(self):
+    def _write_manifest(self, durable: bool = False,
+                        manifest: Optional[Dict] = None):
+        """Swap MANIFEST.json atomically. ``durable=True`` additionally
+        fsyncs the tmp file before the rename and the directory after it
+        — required wherever the swap is a commit point whose loss would
+        resurrect deleted state (compaction GC, ingest seals). Passing
+        ``manifest`` writes that dict *without* touching ``self.manifest``
+        — the ingest tier commits to disk first and swaps the in-memory
+        state after, so a crash at the commit point leaves the live
+        object behind disk (safe) rather than ahead of it."""
         tmp = os.path.join(self.root, MANIFEST + ".tmp")
         with open(tmp, "w") as f:
-            json.dump(self.manifest, f, indent=1)
+            json.dump(self.manifest if manifest is None else manifest,
+                      f, indent=1)
+            if durable:
+                f.flush()
+                os.fsync(f.fileno())
         os.replace(tmp, os.path.join(self.root, MANIFEST))
+        if durable:
+            fsync_dir(self.root)
 
     # -- properties ----------------------------------------------------
     @property
@@ -219,21 +247,36 @@ class FlashStore:
                           n_bytes=n_bytes, filter_kind=kind)
 
     # -- write path ----------------------------------------------------
-    def _write_one_segment(self, chunk) -> Dict:
-        """Write one segment file and return its manifest entry (the
-        manifest itself is NOT written — callers batch that)."""
+    def _reserve_segment_name(self) -> str:
+        """Claim the next segment id (mutates the in-memory manifest;
+        persisted with the next manifest write). Split from the file
+        write so the ingest tier can take ids under its state lock while
+        writing segment data with no lock held."""
         sid = self.manifest["next_segment_id"]
-        name = f"seg-{sid:06d}{SEGMENT_SUFFIX}"
+        self.manifest["next_segment_id"] = sid + 1
+        return f"seg-{sid:06d}{SEGMENT_SUFFIX}"
+
+    def _write_segment_file(self, name: str, chunk,
+                            durable: bool = False) -> Dict:
+        """Write one segment file (atomic tmp+rename) and return its
+        manifest entry. Neither the segment list nor the manifest file
+        is touched — callers commit. ``durable=True`` fsyncs the data
+        first: mandatory when the committing manifest write will itself
+        be durable, else power loss yields a durable manifest naming a
+        torn segment."""
         footer = segment_lib.write_segment(
             os.path.join(self.root, name), chunk,
             page_items=self.manifest["page_items"],
             vocab_size=self.manifest["vocab_size"],
-            filter_kind=self.manifest["filter_kind"])
-        self.manifest["next_segment_id"] = sid + 1
+            filter_kind=self.manifest["filter_kind"], fsync=durable)
         return {"name": name, "n_docs": footer["n_docs"],
                 "n_items": footer["n_items"],
                 "doc_id_min": footer["doc_id_min"],
                 "doc_id_max": footer["doc_id_max"]}
+
+    def _write_one_segment(self, chunk, durable: bool = False) -> Dict:
+        return self._write_segment_file(self._reserve_segment_name(), chunk,
+                                        durable)
 
     def append_docs(self, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]]],
                     docs_per_segment: Optional[int] = None) -> List[str]:
@@ -264,14 +307,21 @@ class FlashStore:
             buf.extend(seg.docs())
             self.release(e["name"])
             while len(buf) >= per:
-                new_entries.append(self._write_one_segment(buf[:per]))
+                # durable: compaction deletes the originals below, so the
+                # rewrites must be on disk before the fsynced manifest
+                # (and the GC) makes them the only copy
+                new_entries.append(self._write_one_segment(buf[:per],
+                                                           durable=True))
                 del buf[:per]
         if buf:
-            new_entries.append(self._write_one_segment(buf))
+            new_entries.append(self._write_one_segment(buf, durable=True))
         self.close()
         self.manifest["segments"] = new_entries
         self.manifest["docs_per_segment"] = per
-        self._write_manifest()         # commit point: new segments live
+        # commit point: durable swap (fsync file + directory) — without
+        # the directory fsync a crash here could resurrect the old
+        # manifest after the loop below has GC'd the segments it names
+        self._write_manifest(durable=True)
         live = {e["name"] for e in new_entries}
         replaced = {e["name"] for e in old_entries}
         for fn in os.listdir(self.root):

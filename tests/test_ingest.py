@@ -1,0 +1,573 @@
+"""Live ingestion tier: WAL durability, memtable/seal/compaction
+mechanics, snapshot consistency under concurrent writers, and the
+differential contract — a live session's results are bit-identical to a
+from-scratch store over the same documents (DESIGN.md §5)."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.ingest import IngestConfig, IngestPipeline, WAL_NAME, WriteAheadLog
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+
+def _docs(n, vocab=500, seed=0, start_id=0):
+    rng = np.random.default_rng(seed)
+    return [(start_id + i,
+             sorted((int(w), int(rng.integers(1, 20))) for w in
+                    rng.choice(vocab, int(rng.integers(1, 12)),
+                               replace=False)))
+            for i in range(n)]
+
+
+def _fresh_session(tmp, docs, cfg, per=16, name="ref"):
+    store = FlashStore.create(str(tmp / name), vocab_size=cfg.vocab_size,
+                              docs_per_segment=per)
+    if docs:
+        store.append_docs(docs)
+    return FlashSearchSession(store, cfg)
+
+
+def _query(cfg, pairs):
+    qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+    for j, (w, c) in enumerate(pairs[:cfg.max_query_nnz]):
+        qi[0, j] = w
+        qv[0, j] = c
+    return qi, qv
+
+
+def _assert_same(r, ref):
+    np.testing.assert_array_equal(r.doc_ids, ref.doc_ids)
+    np.testing.assert_array_equal(r.scores, ref.scores)
+
+
+# ---------------------------------------------------------------------------
+# WriteAheadLog
+# ---------------------------------------------------------------------------
+def test_wal_append_reopen_replays(tmp_path):
+    path = str(tmp_path / "wal.log")
+    docs = _docs(5)
+    with WriteAheadLog(path) as wal:
+        seqs = [wal.append(d) for d in docs]
+    assert seqs == [1, 2, 3, 4, 5]
+    with WriteAheadLog(path) as wal:
+        assert wal.records() == list(zip(seqs, docs))
+        assert wal.last_seq == 5
+        assert wal.records(after_seq=3) == list(zip(seqs, docs))[3:]
+
+
+def test_wal_truncates_torn_tail(tmp_path):
+    path = str(tmp_path / "wal.log")
+    docs = _docs(4)
+    with WriteAheadLog(path) as wal:
+        for d in docs:
+            wal.append(d)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 3)                 # tear the last record
+    with WriteAheadLog(path) as wal:         # repairs in place
+        assert [d for _, d in wal.records()] == docs[:3]
+        wal.append(docs[3])                  # and accepts new appends
+    with WriteAheadLog(path) as wal:
+        assert [d for _, d in wal.records()] == docs
+
+
+def test_wal_rejects_corrupt_record_body(tmp_path):
+    path = str(tmp_path / "wal.log")
+    docs = _docs(3)
+    with WriteAheadLog(path) as wal:
+        for d in docs:
+            wal.append(d)
+        good_one = wal._f.tell()
+    # flip a byte inside record 2's payload: CRC must reject it and
+    # everything after it
+    with open(path, "r+b") as f:
+        f.seek(-5, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-5, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with WriteAheadLog(path) as wal:
+        assert [d for _, d in wal.records()] == docs[:2]
+    assert os.path.getsize(path) < good_one
+
+
+def test_wal_torn_header_rewrites_fresh(tmp_path):
+    """Crash between creating wal.log and the magic reaching disk: the
+    torn header is repaired like a torn tail, never a permanent error."""
+    path = str(tmp_path / "wal.log")
+    with open(path, "wb") as f:
+        f.write(b"RSP")                      # partial magic
+    with WriteAheadLog(path) as wal:
+        assert wal.n_records == 0
+        wal.append(_docs(1)[0])
+    with WriteAheadLog(path) as wal:
+        assert wal.n_records == 1
+
+
+def test_wal_foreign_file_refused(tmp_path):
+    """A full header that reads differently is a foreign file — refuse
+    to clobber it instead of 'repairing' someone else's data."""
+    path = str(tmp_path / "wal.log")
+    with open(path, "wb") as f:
+        f.write(b"NOTAWAL!" + b"x" * 32)
+    with pytest.raises(ValueError, match="magic"):
+        WriteAheadLog(path)
+
+
+def test_wal_reset_discards_and_seq_survives(tmp_path):
+    path = str(tmp_path / "wal.log")
+    with WriteAheadLog(path) as wal:
+        for d in _docs(3):
+            wal.append(d)
+        wal.reset()
+        assert wal.n_records == 0
+        assert wal.append(_docs(1, start_id=99)[0]) == 4   # seq keeps counting
+
+
+# ---------------------------------------------------------------------------
+# pipeline mechanics: seal, recovery windows, compaction
+# ---------------------------------------------------------------------------
+def test_seal_threshold_creates_delta_segments_and_resets_wal(tmp_path):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=32)
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=4,
+                                              auto_compact=False))
+    for d, p in _docs(10):
+        pipe.append(d, p)
+    assert store.n_segments == 2             # two seals of 4
+    assert store.n_docs == 8
+    assert len(pipe.memtable) == 2           # undurable tail
+    assert pipe.wal.n_records == 2           # WAL reset at each seal
+    assert store.manifest["ingest_seq"] == 8
+    assert pipe.seal() == 2                  # manual flush
+    assert store.n_docs == 10 and pipe.wal.n_records == 0
+    pipe.close()
+
+
+def test_reopen_replays_only_unsealed_records(tmp_path):
+    """Crash between manifest swap and WAL reset must not duplicate:
+    replay skips records at or below the manifest's ingest_seq."""
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=32)
+    docs = _docs(6)
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=4,
+                                              auto_compact=False))
+    for d, p in docs:
+        pipe.append(d, p)
+    # simulate the crash window: rebuild a WAL that still holds every
+    # record (as if reset() never ran after the seal at seq 4)
+    pipe.wal.close()
+    os.unlink(os.path.join(store.root, WAL_NAME))
+    with WriteAheadLog(os.path.join(store.root, WAL_NAME)) as wal:
+        for d in docs:
+            wal.append(d)
+    store2 = FlashStore.open(store.root)
+    pipe2 = IngestPipeline(store2, IngestConfig(seal_docs=100,
+                                                auto_compact=False))
+    assert pipe2.stats.replayed == 2         # seqs 5, 6 only
+    assert pipe2.memtable.docs() == docs[4:]
+    pipe2.close()
+
+
+def test_reopen_after_clean_seal_starts_sequence_above_watermark(tmp_path):
+    """An empty WAL plus ingest_seq=N in the manifest must hand out
+    sequence numbers above N, or the next replay would skip new docs."""
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=32)
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=2,
+                                              auto_compact=False))
+    for d, p in _docs(4):
+        pipe.append(d, p)
+    pipe.close()                             # WAL empty, ingest_seq == 4
+    store2 = FlashStore.open(store.root)
+    pipe2 = IngestPipeline(store2, IngestConfig(seal_docs=100,
+                                                auto_compact=False))
+    seq = pipe2.append(*_docs(1, start_id=50)[0])
+    assert seq == 5
+    pipe2.close()
+    store3 = FlashStore.open(store.root)
+    pipe3 = IngestPipeline(store3, IngestConfig(seal_docs=100,
+                                                auto_compact=False))
+    assert pipe3.stats.replayed == 1
+    pipe3.close()
+
+
+def test_crash_before_manifest_leaves_orphan_and_wal_recovers(tmp_path):
+    """Seal dying after the segment write but before the manifest swap:
+    the WAL still holds the docs, and compaction GCs the orphan file."""
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=32)
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=100,
+                                              auto_compact=False))
+    docs = _docs(5)
+    for d, p in docs:
+        pipe.append(d, p)
+    orig = store._write_manifest
+
+    def boom(durable=False, manifest=None):
+        raise OSError("simulated crash at the commit point")
+
+    store._write_manifest = boom
+    with pytest.raises(OSError):
+        pipe.seal()
+    store._write_manifest = orig
+    pipe.wal.close()
+    orphans = [f for f in os.listdir(store.root) if f.endswith(".rsps")]
+    assert orphans and store.n_segments == 0   # file exists, uncommitted
+    assert len(pipe.memtable) == 5             # in-memory state unrolled-back
+    store2 = FlashStore.open(store.root)
+    assert store2.n_segments == 0
+    pipe2 = IngestPipeline(store2, IngestConfig(seal_docs=100,
+                                                auto_compact=False))
+    assert [d for d in pipe2.memtable.docs()] == docs   # WAL replay
+    store2.compact()                          # GCs the orphan
+    assert not [f for f in os.listdir(store2.root) if f.endswith(".rsps")]
+    pipe2.close()
+
+
+def test_append_after_close_raises(tmp_path):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=32)
+    pipe = IngestPipeline(store, IngestConfig(auto_compact=False))
+    pipe.append(*_docs(1)[0])
+    pipe.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        pipe.append(*_docs(1, start_id=9)[0])
+    pipe.close()                             # idempotent
+
+
+def test_capture_is_lazy_and_memtable_build_is_cached(tmp_path):
+    """A capture costs no file descriptors (segments open lazily, like
+    the cold read path), and an unchanged memtable's ELL build is
+    reused across snapshots instead of re-encoding per query."""
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=4)
+    store.append_docs(_docs(8))
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=100,
+                                              auto_compact=False))
+    for d, p in _docs(3, start_id=50):
+        pipe.append(d, p)
+    snap = pipe.capture()
+    assert len(snap.entries) == 2 and snap._segments == {}   # no fds yet
+    c1, _ = snap.memtable_corpus(16)
+    snap2 = pipe.capture()
+    c2, _ = snap2.memtable_corpus(16)
+    assert c2 is c1                          # cache hit: same build
+    snap.close()
+    snap2.close()
+    pipe.append(*_docs(1, start_id=99)[0])   # mutation invalidates
+    snap3 = pipe.capture()
+    c3, _ = snap3.memtable_corpus(16)
+    assert c3 is not c1 and c3.n_docs == 4
+    snap3.close()
+    pipe.close()
+
+
+def test_compactor_folds_tail_run_only(tmp_path):
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=512,
+                              docs_per_segment=8)
+    store.append_docs(_docs(16))             # two full base segments
+    base = [e.name for e in store.entries]
+    pipe = IngestPipeline(store, IngestConfig(seal_docs=2,
+                                              fold_min_segments=3,
+                                              auto_compact=False))
+    for d, p in _docs(6, start_id=100):      # three 2-doc deltas
+        pipe.append(d, p)
+    assert store.n_segments == 5
+    assert pipe.compact_once() == 3          # folds only the delta run
+    assert [e.name for e in store.entries][:2] == base   # base untouched
+    assert store.n_segments == 3             # 2 base + 1 folded (6 docs)
+    assert store.n_docs == 22
+    assert pipe.compact_once() == 0          # idempotent: nothing to fold
+    # replaced delta files are GC'd from disk
+    on_disk = {f for f in os.listdir(store.root) if f.endswith(".rsps")}
+    assert on_disk == {e.name for e in store.entries}
+    pipe.close()
+
+
+def test_snapshot_survives_compaction_gc(tmp_path):
+    """A snapshot captured before a fold still scores the *old* files:
+    the compactor parks replaced files in the graveyard while the
+    snapshot is registered, and they are unlinked only when the last
+    snapshot closes — readers are never perturbed (DESIGN.md §5.2)."""
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(60, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=3)
+    docs = _corpus_docs(corpus)
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size,
+                              docs_per_segment=16)
+    sess = FlashSearchSession(store, cfg)
+    pipe = sess.enable_ingest(seal_docs=8, fold_min_segments=2,
+                              auto_compact=False)
+    for d, p in docs:
+        sess.append(d, p)
+    snap = pipe.capture()
+    old_names = [e.name for e in snap.entries]
+    assert pipe.compact_once() > 0
+    assert [e.name for e in store.entries] != old_names
+    replaced = set(old_names) - {e.name for e in store.entries}
+    for name in replaced:                     # deferred GC: still on disk
+        assert os.path.exists(os.path.join(store.root, name))
+    qi, qv = corpus_lib.make_query(corpus, 33, cfg.max_query_nnz)
+    ref = _fresh_session(tmp_path, docs, cfg)
+    try:
+        r = sess._search_view(snap, snap, qi[None], qv[None])
+        _assert_same(r, ref.search(qi[None], qv[None]))
+        _assert_same(sess.search(qi[None], qv[None]),
+                     ref.search(qi[None], qv[None]))
+    finally:
+        snap.close()
+        ref.close()
+    for name in replaced:                     # last close drained the GC
+        assert not os.path.exists(os.path.join(store.root, name))
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# session surface + differential contract
+# ---------------------------------------------------------------------------
+def test_growing_memtable_compiles_log_many_shapes(tmp_path):
+    """A memtable that outgrows the largest segment pads to doublings of
+    the slab shape: interleaved append/search must trace O(log) engine
+    programs, not one per append (the §6.2 bound must survive live
+    writes)."""
+    cfg = smoke()
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size,
+                              docs_per_segment=8)
+    store.append_docs(_docs(8, vocab=cfg.vocab_size))
+    with FlashSearchSession(store, cfg) as sess:
+        sess.enable_ingest(seal_docs=512, auto_compact=False)
+        qi = np.full((1, cfg.max_query_nnz), -1, np.int32)
+        qv = np.zeros((1, cfg.max_query_nnz), np.float32)
+        qi[0, 0], qv[0, 0] = 1, 1.0
+        for i, (d, p) in enumerate(_docs(40, vocab=cfg.vocab_size,
+                                         start_id=100)):
+            sess.append(d, p)
+            sess.search(qi, qv)
+        # slab 8 docs -> memtable pads 8/16/32/64: <= 4 doc shapes for
+        # the single L bucket (one trace each), not ~40
+        assert sess.engine.compile_stats["n_traces"] <= 4
+
+
+def test_append_requires_enable_ingest(tmp_path):
+    cfg = smoke()
+    store = FlashStore.create(str(tmp_path / "s"),
+                              vocab_size=cfg.vocab_size)
+    with FlashSearchSession(store, cfg) as sess:
+        with pytest.raises(RuntimeError, match="enable_ingest"):
+            sess.append(0, [(1, 1)])
+        assert sess.flush_ingest() == 0
+        pipe = sess.enable_ingest(auto_compact=False)
+        assert sess.enable_ingest() is pipe     # idempotent
+
+
+def test_append_validates_vocab_range(tmp_path):
+    cfg = smoke()
+    store = FlashStore.create(str(tmp_path / "s"),
+                              vocab_size=cfg.vocab_size)
+    with FlashSearchSession(store, cfg) as sess:
+        sess.enable_ingest(auto_compact=False)
+        with pytest.raises(ValueError, match="vocab_size"):
+            sess.append(0, [(cfg.vocab_size, 1)])
+
+
+def test_live_session_matches_fresh_store_every_phase(tmp_path):
+    """The headline differential: after appends land in (a) memtable,
+    (b) sealed deltas, (c) compacted segments, search results stay
+    bit-identical to a from-scratch store over the same doc set."""
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(90, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=4)
+    docs = _corpus_docs(corpus)
+    store = FlashStore.create(str(tmp_path / "live"),
+                              vocab_size=cfg.vocab_size, docs_per_segment=16)
+    store.append_docs(docs[:40])
+    sess = FlashSearchSession(store, cfg)
+    sess.enable_ingest(seal_docs=8, fold_min_segments=3, auto_compact=False)
+    qi, qv = corpus_lib.make_query(corpus, 70, cfg.max_query_nnz)
+
+    def check(n, tag):
+        ref = _fresh_session(tmp_path, docs[:n], cfg, name=f"ref{n}{tag}")
+        try:
+            _assert_same(sess.search(qi[None], qv[None]),
+                         ref.search(qi[None], qv[None]))
+        finally:
+            ref.close()
+
+    for i, (d, p) in enumerate(docs[40:], start=41):
+        sess.append(d, p)
+        if i in (43, 56, 90):                # memtable / post-seal points
+            check(i, "a")
+    assert sess.last_stats.memtable_docs == len(sess.ingest.memtable.docs())
+    sess.ingest.compact_once()
+    check(90, "b")
+    sess.close()
+
+
+def test_search_under_concurrent_appends_is_prefix_consistent(tmp_path):
+    """Queries racing a writer: every search sees an atomic prefix of
+    the append stream (doc counts monotone, never torn mid-seal), and
+    the final result is bit-identical to a fresh store."""
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(120, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=5)
+    docs = _corpus_docs(corpus)
+    store = FlashStore.create(str(tmp_path / "live"),
+                              vocab_size=cfg.vocab_size, docs_per_segment=16)
+    sess = FlashSearchSession(store, cfg)
+    sess.enable_ingest(seal_docs=8, fold_min_segments=3,
+                       compact_poll_s=0.01)   # auto-compactor on
+    qi, qv = corpus_lib.make_query(corpus, 60, cfg.max_query_nnz)
+    sess.search(qi[None], qv[None])           # compile before the race
+    stop = threading.Event()
+    errs = []
+
+    def writer():
+        try:
+            for d, p in docs:
+                sess.append(d, p)
+        except Exception as e:                # pragma: no cover
+            errs.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    counts = []
+    while not stop.is_set():
+        sess.search(qi[None], qv[None])
+        counts.append(sess.last_stats.docs_scored)
+    t.join()
+    assert not errs
+    assert counts == sorted(counts)           # prefix-consistent snapshots
+    ref = _fresh_session(tmp_path, docs, cfg)
+    try:
+        _assert_same(sess.search(qi[None], qv[None]),
+                     ref.search(qi[None], qv[None]))
+    finally:
+        ref.close()
+        sess.close()
+
+
+def test_cluster_append_routes_to_owner_and_matches_union(tmp_path):
+    """Cluster appends: every doc lands on its partitioner-owned shard,
+    on every replica, and scatter/gather results stay bit-identical to a
+    fresh union store over built + appended docs."""
+    from repro.cluster import FlashClusterSession, build_sharded_store
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(100, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=7)
+    docs = _corpus_docs(corpus)
+    cl = build_sharded_store(str(tmp_path / "cl"), docs[:60], n_shards=3,
+                             replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=16)
+    sess = FlashClusterSession(cl, cfg)
+    with pytest.raises(RuntimeError, match="enable_ingest"):
+        sess.append(*docs[60])
+    sess.enable_ingest(seal_docs=4, fold_min_segments=3, auto_compact=False)
+    part = cl.partitioner
+    for d, p in docs[60:]:
+        shard = sess.append(d, p)
+        assert shard == int(part.shard_of(np.asarray([d], np.int64))[0])
+    # replicas stay content-identical: both hold the same appended docs
+    sess.flush_ingest()
+    for s in range(cl.n_shards):
+        d0 = sorted(cl.store(s, 0).scan_corpus(cfg.nnz_pad).doc_ids)
+        d1 = sorted(cl.store(s, 1).scan_corpus(cfg.nnz_pad).doc_ids)
+        assert d0 == d1
+    ref = _fresh_session(tmp_path, docs, cfg)
+    qi, qv = corpus_lib.make_query(corpus, 80, cfg.max_query_nnz)
+    try:
+        _assert_same(sess.search(qi[None], qv[None]),
+                     ref.search(qi[None], qv[None]))
+        assert sess.last_stats.docs_scored == len(docs)
+    finally:
+        ref.close()
+        sess.close()
+
+
+def test_cluster_append_marks_diverged_replica_down(tmp_path):
+    """A replica whose append fails while a sibling's succeeded is
+    content-divergent: it leaves rotation (reads and writes) and the
+    error surfaces; later appends proceed on the healthy replica."""
+    from repro.cluster import FlashClusterSession, build_sharded_store
+    cfg = smoke()
+    docs = _docs(30, vocab=cfg.vocab_size)
+    cl = build_sharded_store(str(tmp_path / "cl"), docs[:20], n_shards=2,
+                             replicas=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=8)
+    sess = FlashClusterSession(cl, cfg)
+    sess.enable_ingest(seal_docs=4, auto_compact=False)
+    d, p = docs[20]
+    shard = int(cl.partitioner.shard_of(np.asarray([d], np.int64))[0])
+    bad = sess.router._session(shard, 1)
+    orig_append = bad.append
+    bad.append = lambda *a, **k: (_ for _ in ()).throw(OSError("disk full"))
+    with pytest.raises(OSError, match="disk full"):
+        sess.append(d, p)
+    assert sess.router.health()[shard] == [True, False]
+    bad.append = orig_append
+    # the doc landed on replica 0 only; later appends skip the downed
+    # replica and the shard keeps accepting writes
+    assert sess.append(*docs[21]) in (0, 1)
+    sess.close()
+
+
+def test_cluster_append_is_rebalance_aware(tmp_path):
+    """After an in-process rebalance to a new shard count/policy, appends
+    route by the *new* partition spec (fresh generation's owner shard)."""
+    from repro.cluster import FlashClusterSession, build_sharded_store
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(80, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=8)
+    docs = _corpus_docs(corpus)
+    root = str(tmp_path / "cl")
+    cl = build_sharded_store(root, docs[:40], n_shards=2, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=16)
+    sess = FlashClusterSession(cl, cfg)
+    sess.enable_ingest(seal_docs=4, auto_compact=False)
+    for d, p in docs[40:60]:
+        sess.append(d, p)
+    # seal the live tail, then rebalance in place with the session OPEN:
+    # the router notices the generation moved, closes the stale shard
+    # sessions (their gen-000 directories are gone) and rebuilds against
+    # the new topology — appends route by the new spec, searches serve on
+    sess.flush_ingest()
+    cl.rebalance(n_shards=3, policy="range")
+    part = cl.partitioner
+    assert part.spec()["policy"] == "range"
+    for d, p in docs[60:]:
+        assert sess.append(d, p) == int(
+            part.shard_of(np.asarray([d], np.int64))[0])
+    assert sess.router.health() == [[True]] * 3   # arrays resized to 3
+    ref = _fresh_session(tmp_path, docs, cfg)
+    qi, qv = corpus_lib.make_query(corpus, 70, cfg.max_query_nnz)
+    try:
+        _assert_same(sess.search(qi[None], qv[None]),
+                     ref.search(qi[None], qv[None]))
+    finally:
+        ref.close()
+        sess.close()
+
+
+def test_submit_service_sees_appended_docs(tmp_path):
+    """The coalescing serving surface composes with ingest: a submitted
+    query's batch snapshot includes previously appended docs."""
+    cfg = smoke()
+    corpus = corpus_lib.synthesize(30, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=6)
+    docs = _corpus_docs(corpus)
+    store = FlashStore.create(str(tmp_path / "s"),
+                              vocab_size=cfg.vocab_size, docs_per_segment=8)
+    with FlashSearchSession(store, cfg) as sess:
+        sess.enable_ingest(seal_docs=64, auto_compact=False)
+        for d, p in docs:
+            sess.append(d, p)
+        qi, qv = corpus_lib.make_query(corpus, 17, cfg.max_query_nnz)
+        r = sess.submit(qi, qv).result(timeout=60)
+        assert int(r.doc_ids[0]) == 17        # self-search from memtable

@@ -1,0 +1,102 @@
+"""Property test (ISSUE acceptance): ANY interleaving of append / seal /
+compact / search — with or without a simulated crash + WAL replay in the
+middle — yields search results bit-identical to a from-scratch store
+built over the same document set (DESIGN.md §5).
+
+Runs under real hypothesis when installed (CI) and under the
+``tests/hypothesis_compat`` random-sampling fallback otherwise. No
+pytest fixtures inside the ``@given`` test (hypothesis's
+function-scoped-fixture health check); temp dirs are managed inline.
+"""
+import shutil
+import tempfile
+
+import numpy as np
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+# a fixed pool: op sequences index into it, so every drawn example is
+# deterministic and shrinkable
+_CORPUS = corpus_lib.synthesize(120, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                CFG.nnz_pad, seed=42)
+_POOL = _corpus_docs(_CORPUS)
+
+# "append" dominates so sequences actually grow state between the
+# structural ops; "crash" closes without sealing and reopens through WAL
+# replay; "search" is the differential checkpoint
+_OP = st.sampled_from(["append", "append", "append", "append", "append",
+                       "append", "seal", "compact", "search", "crash"])
+_MAX_CHECKS = 3          # fresh reference stores are the expensive part
+
+
+def _live_session(root, created):
+    store = FlashStore.create(root, vocab_size=CFG.vocab_size,
+                              docs_per_segment=8) if not created \
+        else FlashStore.open(root)
+    sess = FlashSearchSession(store, CFG)
+    sess.enable_ingest(seal_docs=6, fold_min_segments=2, auto_compact=False)
+    return sess
+
+
+def _reference_result(tmp, docs, qi, qv, tag):
+    store = FlashStore.create(f"{tmp}/ref-{tag}", vocab_size=CFG.vocab_size,
+                              docs_per_segment=8)
+    if docs:
+        store.append_docs(docs)
+    with FlashSearchSession(store, CFG) as ref:
+        return ref.search(qi, qv)
+
+
+@settings(max_examples=8, deadline=None)
+@given(ops=st.lists(_OP, min_size=4, max_size=28))
+def test_any_interleaving_matches_fresh_store(ops):
+    tmp = tempfile.mkdtemp(prefix="ingest-prop-")
+    sess = None
+    try:
+        root = f"{tmp}/live"
+        sess = _live_session(root, created=False)
+        appended = []
+        checks = 0
+        nxt = iter(_POOL)
+        for op in ops + ["search"]:          # always verify the end state
+            if op == "append":
+                d, p = next(nxt)
+                sess.append(d, p)
+                appended.append((d, p))
+            elif op == "seal":
+                sess.flush_ingest()
+            elif op == "compact":
+                sess.ingest.compact_once()
+            elif op == "crash":
+                # no seal, no clean shutdown: the WAL tail is the only
+                # record of memtable docs; reopen must replay it
+                sess.ingest.close(seal=False)
+                sess.store.close()
+                sess = _live_session(root, created=True)
+            elif op == "search" and checks < _MAX_CHECKS:
+                checks += 1
+                probe = appended[-1] if appended else _POOL[0]
+                qi = np.full((1, CFG.max_query_nnz), -1, np.int32)
+                qv = np.zeros((1, CFG.max_query_nnz), np.float32)
+                for j, (w, c) in enumerate(probe[1][:CFG.max_query_nnz]):
+                    qi[0, j] = w
+                    qv[0, j] = c
+                got = sess.search(qi, qv)
+                want = _reference_result(tmp, appended, qi, qv, checks)
+                np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
+                np.testing.assert_array_equal(got.scores, want.scores)
+            if op == "search":
+                # conservation invariant, crash or not: durable segments
+                # plus the memtable hold exactly the appended set
+                assert sess.store.n_docs + len(sess.ingest.memtable) \
+                    == len(appended)
+    finally:
+        if sess is not None:
+            sess.close()
+        shutil.rmtree(tmp, ignore_errors=True)

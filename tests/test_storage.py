@@ -166,6 +166,94 @@ def test_store_compact_merges_and_gcs(tmp_path):
     store.close()
 
 
+def test_compact_fsyncs_directory_after_manifest_swap(tmp_path, monkeypatch):
+    """The manifest swap is only durable once the directory entry is
+    flushed: compact() must fsync the store dir *after* os.replace, or a
+    crash could resurrect the old manifest — which names segments the
+    GC below already deleted."""
+    from repro.storage import store as store_mod
+    rng = np.random.default_rng(7)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=512, docs_per_segment=8)
+    store.append_docs(_rand_docs(10, 500, rng))
+    events = []
+    real_replace, real_fsync_dir = os.replace, store_mod.fsync_dir
+    monkeypatch.setattr(
+        os, "replace",
+        lambda src, dst: (events.append(("replace", dst))
+                          if dst.endswith("MANIFEST.json") else None,
+                          real_replace(src, dst))[-1])
+    monkeypatch.setattr(
+        store_mod, "fsync_dir",
+        lambda path: (events.append(("fsync_dir", path)),
+                      real_fsync_dir(path))[-1])
+    store.compact()
+    replace_at = [i for i, (kind, _) in enumerate(events)
+                  if kind == "replace"]
+    fsync_at = [i for i, (kind, path) in enumerate(events)
+                if kind == "fsync_dir" and path == root]
+    assert replace_at and fsync_at
+    assert fsync_at[-1] > replace_at[-1]     # dirent flushed after the swap
+    store.close()
+
+
+def test_compact_fsyncs_segment_data_before_manifest(tmp_path, monkeypatch):
+    """A durable manifest must never reference unsynced segment data:
+    compact's rewrites fsync their file before the manifest swap."""
+    rng = np.random.default_rng(9)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=512, docs_per_segment=8)
+    store.append_docs(_rand_docs(20, 500, rng))
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (synced.append(fd), real_fsync(fd))[-1])
+    store.compact(docs_per_segment=16)
+    # 2 rewritten segments + the manifest tmp file, before the dir fsync
+    assert len(synced) >= 3
+    store.close()
+
+
+def test_compact_crash_between_swap_and_gc_recovers(tmp_path, monkeypatch):
+    """Crash injection at compact's commit point (the directory fsync,
+    right after the manifest rename): the new manifest is live, the
+    replaced segment files are still on disk, and the next compact GCs
+    them without losing a document — the sibling of the crashed-rebalance
+    test in test_cluster_partition.py."""
+    from repro.storage import store as store_mod
+    rng = np.random.default_rng(8)
+    root = str(tmp_path / "store")
+    store = FlashStore.create(root, vocab_size=512, docs_per_segment=8)
+    for lo in range(0, 30, 10):
+        store.append_docs(_rand_docs(10, 500, rng, start_id=lo))
+    before = {d for seg in store.segments() for d, _ in seg.docs()}
+    old_names = {e.name for e in store.entries}
+
+    class Crash(RuntimeError):
+        pass
+
+    def crashing_fsync_dir(path):
+        raise Crash("power loss after rename, before dirent flush")
+
+    monkeypatch.setattr(store_mod, "fsync_dir", crashing_fsync_dir)
+    with pytest.raises(Crash):
+        store.compact(docs_per_segment=16)
+    monkeypatch.setattr(store_mod, "fsync_dir", lambda path: None)
+    # the swap itself landed: a reopen sees the compacted manifest, with
+    # the replaced files still occupying the directory
+    store2 = FlashStore.open(root)
+    assert {e.name for e in store2.entries}.isdisjoint(old_names)
+    leftovers = {f for f in os.listdir(root) if f.endswith(".rsps")} \
+        - {e.name for e in store2.entries}
+    assert leftovers == old_names
+    store2.compact()                          # GC pass removes them
+    on_disk = {f for f in os.listdir(root) if f.endswith(".rsps")}
+    assert on_disk == {e.name for e in store2.entries}
+    assert {d for seg in store2.segments()
+            for d, _ in seg.docs()} == before
+    store2.close()
+
+
 # ---------------------------------------------------------------------------
 # prefetcher
 # ---------------------------------------------------------------------------
