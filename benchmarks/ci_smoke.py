@@ -1,15 +1,20 @@
 """CI perf-smoke driver: run the storage, serving, and ingest benchmarks
 in a tiny configuration, collect their CSV rows, and write them to a
 single ``BENCH_ci.json`` that CI uploads as a workflow artifact
-(DESIGN.md §10).
+(DESIGN.md §11).
 
 The point is the *trajectory*: every CI run leaves one machine-readable
-snapshot of the perf counters, so a regression shows up as a step in
-the artifact series long before anyone reruns the full benchmarks. On
-shared CI runners absolute numbers are noise, so this driver fails only
-when a benchmark crashes — acceptance gates (speedup floors, recompile
-bounds) stay in the benchmarks themselves for real hardware
-(``serve_bench`` runs here with ``--no-gate``).
+snapshot of the perf counters — including the storage bench's
+cold-vs-warm slab-cache split (§4.2), so a cache regression shows up as
+a step in the warm-query series — long before anyone reruns the full
+benchmarks. On shared CI runners absolute numbers are noise, so this
+driver fails only when a benchmark crashes (acceptance gates stay in
+the benchmarks themselves for real hardware; ``serve_bench`` runs here
+with ``--no-gate``).
+
+This module is import-light on purpose: ``benchmarks/run.py --suite``
+(the unified entry that also reaches the cluster and paper benches)
+reuses ``parse_rows`` / ``run_script`` / ``new_report`` from here.
 
 Usage: PYTHONPATH=src python benchmarks/ci_smoke.py [--out BENCH_ci.json]
 """
@@ -25,22 +30,44 @@ import time
 
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
+# tag -> benchmark script reachable from the unified entry
+SUITE_SCRIPTS = {
+    "paper": "run.py",
+    "storage": "storage_bench.py",
+    "serve": "serve_bench.py",
+    "cluster": "cluster_bench.py",
+    "ingest": "ingest_bench.py",
+}
+
 # tiny configurations: the goal is rows-in-minutes on a 2-core runner,
 # not statistically meaningful numbers
-TINY = [
-    ("storage", "storage_bench.py",
-     ["--docs", "3000", "--docs-per-segment", "300", "--vocab", "20000",
-      "--topics", "10", "--repeats", "1"]),
-    ("serve", "serve_bench.py",
-     ["--docs", "1500", "--vocab", "10000", "--clients", "4",
-      "--requests", "8", "--max-batch", "4", "--no-gate"]),
-    ("ingest", "ingest_bench.py",
-     ["--docs", "2000", "--append-docs", "600", "--docs-per-segment",
-      "250", "--seal-docs", "100", "--vocab", "10000", "--repeats", "5"]),
-]
+TINY = {
+    "storage": ["--docs", "3000", "--docs-per-segment", "300", "--vocab",
+                "20000", "--topics", "10", "--repeats", "1"],
+    "serve": ["--docs", "1500", "--vocab", "10000", "--clients", "4",
+              "--requests", "8", "--max-batch", "4", "--no-gate"],
+    "cluster": ["--docs", "2000", "--docs-per-segment", "250", "--vocab",
+                "10000", "--shards", "1", "2", "--clients", "4",
+                "--requests", "4", "--max-batch", "4"],
+    "ingest": ["--docs", "2000", "--append-docs", "600", "--docs-per-segment",
+               "250", "--seal-docs", "100", "--vocab", "10000",
+               "--repeats", "5"],
+    "paper": [],
+}
+
+# the smoke subset CI runs on every change (cluster and paper stay
+# reachable via ``run.py --suite all`` — too slow for every commit)
+CI_TAGS = ("storage", "serve", "ingest")
 
 
-def _parse_rows(stdout: str):
+def make_env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(BENCH_DIR, "..", "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+def parse_rows(stdout: str):
     """``name,us_per_call,derived`` lines -> row dicts (anything else on
     stdout is commentary and skipped)."""
     rows = []
@@ -57,15 +84,28 @@ def _parse_rows(stdout: str):
     return rows
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_ci.json")
-    args = ap.parse_args()
+def run_script(tag: str, argv, env=None, echo_rows: bool = False) -> dict:
+    """Run one benchmark script as a subprocess and return its report
+    entry ({cmd, returncode, wall_s, rows, [stderr_tail]})."""
+    script = SUITE_SCRIPTS[tag]
+    cmd = [sys.executable, os.path.join(BENCH_DIR, script)] + list(argv)
+    t0 = time.perf_counter()
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          env=env or make_env())
+    wall = time.perf_counter() - t0
+    rows = parse_rows(proc.stdout)
+    if echo_rows:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    entry = {"cmd": " ".join(cmd[1:]), "returncode": proc.returncode,
+             "wall_s": round(wall, 2), "rows": rows}
+    if proc.returncode != 0:
+        entry["stderr_tail"] = (proc.stdout[-2000:] + proc.stderr[-4000:])
+    return entry
 
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(BENCH_DIR, "..", "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    report = {
+
+def new_report() -> dict:
+    return {
         "schema": "repro-bench-v1",
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "host": {"platform": platform.platform(),
@@ -73,24 +113,25 @@ def main():
                  "cpus": os.cpu_count()},
         "benches": {},
     }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ci.json")
+    args = ap.parse_args()
+
+    env = make_env()
+    report = new_report()
     failed = []
-    for tag, script, argv in TINY:
-        cmd = [sys.executable, os.path.join(BENCH_DIR, script)] + argv
-        t0 = time.perf_counter()
-        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
-        wall = time.perf_counter() - t0
-        rows = _parse_rows(proc.stdout)
-        report["benches"][tag] = {
-            "cmd": " ".join(cmd[1:]),
-            "returncode": proc.returncode,
-            "wall_s": round(wall, 2),
-            "rows": rows,
-        }
-        status = "ok" if proc.returncode == 0 else "CRASH"
-        print(f"[{tag}] {status} in {wall:.1f}s, {len(rows)} rows")
-        if proc.returncode != 0:
+    for tag in CI_TAGS:
+        entry = run_script(tag, TINY[tag], env=env)
+        report["benches"][tag] = entry
+        status = "ok" if entry["returncode"] == 0 else "CRASH"
+        print(f"[{tag}] {status} in {entry['wall_s']:.1f}s, "
+              f"{len(entry['rows'])} rows")
+        if entry["returncode"] != 0:
             failed.append(tag)
-            sys.stderr.write(proc.stdout[-2000:] + proc.stderr[-4000:])
+            sys.stderr.write(entry["stderr_tail"])
 
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

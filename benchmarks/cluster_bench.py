@@ -1,5 +1,5 @@
 """Cluster-tier benchmark: shard-count sweep over one corpus behind the
-scatter/gather router (DESIGN.md §4, §10).
+scatter/gather router (DESIGN.md §5, §11).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
 
@@ -11,7 +11,7 @@ Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
                                narrow-query probe set
     cluster/speedup@shards=N   QPS vs the 1-shard cluster
     cluster/compile_per_shard  max engine traces of any shard
-                               (acceptance: <= log2(max_batch)+1, §6.2)
+                               (acceptance: <= log2(max_batch)+1, §7.2)
 
 Acceptance: the per-shard compile bound always holds; the >= 2x QPS at
 4 shards bound is enforced only on hosts with >= 8 cores — shard

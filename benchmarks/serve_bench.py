@@ -1,5 +1,5 @@
 """Serving-layer benchmark: micro-batch coalescing throughput/latency
-sweep vs the one-query-at-a-time baseline (DESIGN.md §6).
+sweep vs the one-query-at-a-time baseline (DESIGN.md §7).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
 

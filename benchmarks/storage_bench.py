@@ -1,5 +1,5 @@
 """Storage-tier benchmark: segments/sec through the flash path and
-vocabulary-filter skip-rate vs query sparsity (DESIGN.md §10).
+vocabulary-filter skip-rate vs query sparsity (DESIGN.md §11).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
 
@@ -87,7 +87,9 @@ def main():
          f"{args.docs / build_s:.0f}")
     _row("storage/store_MB", 0.0, f"{nbytes / 1e6:.1f}")
 
-    sess = FlashSearchSession(store, cfg)
+    # cache disabled here: these rows measure the *disk* streaming path
+    # (mmap read + ELL decode + upload per segment, every query)
+    sess = FlashSearchSession(store, cfg, cache_bytes=0)
 
     # -- streaming throughput: a dense query that hits every segment ---
     dense = np.concatenate([np.asarray(d[1], np.int64)[:, 0]
@@ -123,6 +125,38 @@ def main():
              f"{np.mean(rates):.3f}")
 
     sess.close()
+
+    # -- cold vs warm: the §4.2 device slab cache ----------------------
+    # Same dense query (every segment survives the filter). Cold reps
+    # clear the cache first, so each pays disk + decode + upload at
+    # steady-state compile; warm reps hit the cache for every segment.
+    # The split is the headline of the planning/cache layer: first-query
+    # vs steady-state latency on an unchanged corpus.
+    csess = FlashSearchSession(FlashStore.open(root), cfg)
+    csess.search(qi, qv)                     # warmup / compile
+    cold, warm = [], []
+    for _ in range(max(args.repeats, 2)):
+        csess.slab_cache.clear()
+        t0 = time.perf_counter()
+        csess.search(qi, qv)
+        cold.append(time.perf_counter() - t0)
+    assert csess.last_stats.cache_hits == 0   # cleared: all disk
+    csess.search(qi, qv)                     # repopulated above; now warm
+    for _ in range(max(args.repeats, 2)):
+        t0 = time.perf_counter()
+        csess.search(qi, qv)
+        warm.append(time.perf_counter() - t0)
+    st = csess.last_stats
+    cold_ms, warm_ms = np.mean(cold) * 1e3, np.mean(warm) * 1e3
+    _row("storage/cold_query_ms", np.mean(cold) * 1e6, f"{cold_ms:.2f}")
+    _row("storage/warm_query_ms", np.mean(warm) * 1e6, f"{warm_ms:.2f}")
+    _row("storage/warm_speedup", 0.0, f"{cold_ms / warm_ms:.2f}x")
+    _row("storage/warm_cache_hit_rate", 0.0,
+         f"{st.cache_hit_rate:.3f} ({st.cache_hits}/"
+         f"{st.cache_hits + st.cache_misses} slabs, "
+         f"{csess.slab_cache.nbytes / 1e6:.1f} MB resident)")
+    csess.close()
+
     if not args.keep:
         shutil.rmtree(os.path.dirname(root), ignore_errors=True)
 

@@ -1,6 +1,6 @@
 """Cluster-tier search: one corpus partitioned over 4 shard FlashStores
 with 2 replicas each, served scatter/gather behind one session
-(DESIGN.md §4).
+(DESIGN.md §5).
 
 Builds a topic-banded corpus, splits it with the range policy (bands
 stay contiguous, so each shard's segment vocab filters stay clustered),

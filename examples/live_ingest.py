@@ -1,6 +1,6 @@
 """Live ingestion: documents appended while a reader loops, then online
 compaction shrinking the segment count under that same reader
-(DESIGN.md §5).
+(DESIGN.md §6).
 
 A writer thread appends 3,000 documents one at a time through the
 WAL -> memtable -> delta-segment pipeline while the main thread keeps

@@ -1,6 +1,6 @@
 """Retrieval-augmented serving: the paper's document-search engine feeding
 an LM decoder — the integration point of the sparse pattern processor with
-the assigned architectures (DESIGN.md §7).
+the assigned architectures (DESIGN.md §8).
 
 A query is scored against the sharded corpus (in-storage search), the top
 document's tokens are prepended as context, and the LM generates a

@@ -1,5 +1,5 @@
 """Concurrent query serving: 16 blocking clients, one engine, coalesced
-micro-batches (DESIGN.md §6).
+micro-batches (DESIGN.md §7).
 
 Each "user" thread submits single queries and blocks on its Future —
 the closed-loop shape of real traffic. The SearchService coalesces

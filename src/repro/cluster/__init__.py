@@ -1,6 +1,6 @@
 """Sharded multi-slice cluster tier: partitioned FlashStores, replica
 failover, and scatter/gather top-k behind one serving surface
-(DESIGN.md §4)."""
+(DESIGN.md §5)."""
 from repro.cluster.partition import (HashPartitioner, Partitioner,
                                      RangePartitioner, from_spec,
                                      make_partitioner)

@@ -1,4 +1,4 @@
-"""Doc-id partitioning policies for the cluster tier (DESIGN.md §4.1).
+"""Doc-id partitioning policies for the cluster tier (DESIGN.md §5.1).
 
 The paper scales capacity by adding flash slices; which slice owns a
 document is a pure function of its doc id so the router never needs a

@@ -1,5 +1,5 @@
 """ShardRouter — scatter/gather top-k over a ShardedStore
-(DESIGN.md §4.2–§4.3).
+(DESIGN.md §5.2–§5.3).
 
 One coalesced ``[L, Qn]`` query batch fans out to every shard on a
 thread pool; each shard is a full FlashSearchSession (its own vocab
@@ -37,6 +37,7 @@ from repro.cluster.store import ShardedStore
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import SearchResult, _merge_results
 from repro.storage.session import FlashSearchSession, SearchStats
+from repro.storage.slabcache import CacheStats, SlabCache
 
 log = logging.getLogger(__name__)
 
@@ -84,10 +85,29 @@ class ClusterStats:
         return self._sum("memtable_docs")
 
     @property
+    def cache_hits(self) -> int:
+        return self._sum("cache_hits")
+
+    @property
+    def cache_misses(self) -> int:
+        return self._sum("cache_misses")
+
+    @property
+    def cache_evictions(self) -> int:
+        return self._sum("cache_evictions")
+
+    @property
     def skip_rate(self) -> float:
         """Aggregate skip-rate across every shard's segments."""
         total = self.segments_total
         return self.segments_skipped / total if total else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Aggregate slab-cache hit rate across every shard's probes
+        for the last batch (DESIGN.md §4.2)."""
+        probes = self.cache_hits + self.cache_misses
+        return self.cache_hits / probes if probes else 0.0
 
 
 class ShardRouter:
@@ -98,12 +118,18 @@ class ShardRouter:
     def __init__(self, store: ShardedStore, cfg: SearchConfig, *,
                  backend: str = "jnp", use_filter: bool = True,
                  prefetch_depth: int = 2,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 slab_cache: Optional[SlabCache] = None,
+                 cache_bytes: Optional[int] = None):
         self.store = store
         self.cfg = cfg
         self.backend = backend
         self.use_filter = use_filter
         self.prefetch_depth = prefetch_depth
+        # one device slab cache for the whole cluster (DESIGN.md §4.2):
+        # every shard-replica session shares the byte budget, so a hot
+        # shard can hold more resident slabs than a cold one
+        self.slab_cache = SlabCache.resolve(slab_cache, cache_bytes)
         n, r = store.n_shards, store.replicas
         self._sessions: List[List[Optional[FlashSearchSession]]] = \
             [[None] * r for _ in range(n)]
@@ -161,13 +187,15 @@ class ShardRouter:
                 sess = FlashSearchSession(
                     self.store.store(shard, replica), self.cfg,
                     backend=self.backend, use_filter=self.use_filter,
-                    prefetch_depth=self.prefetch_depth)
+                    prefetch_depth=self.prefetch_depth,
+                    slab_cache=self.slab_cache,
+                    cache_bytes=None if self.slab_cache is not None else 0)
                 if self._ingest_knobs is not None:
                     sess.enable_ingest(**self._ingest_knobs)
                 self._sessions[shard][replica] = sess
             return self._sessions[shard][replica]
 
-    # -- live ingestion (DESIGN.md §5.3) -------------------------------
+    # -- live ingestion (DESIGN.md §6.3) -------------------------------
     def enable_ingest(self, **knobs):
         """Arm every shard session (existing and future) with a write
         path; each replica directory gets its own WAL + memtable +
@@ -197,7 +225,7 @@ class ShardRouter:
         content-divergent, so it is health-marked down — out of both
         read and write rotation until ``reset_health`` (which, as with
         read failover, is only correct after the replica directory has
-        been repaired or rebuilt; §11). If every replica fails the error
+        been repaired or rebuilt; §12). If every replica fails the error
         travels with the document and nothing is marked, mirroring the
         read path's poisoned-query rule. Returns the owner shard."""
         if self._ingest_knobs is None:
@@ -329,9 +357,15 @@ class ShardRouter:
         return best
 
     # -- introspection -------------------------------------------------
+    @property
+    def cache_stats(self) -> Optional[CacheStats]:
+        """Lifetime counters of the cluster-shared slab cache, or None
+        when the cache is disabled."""
+        return self.slab_cache.stats if self.slab_cache is not None else None
+
     def compile_counts(self) -> List[List[int]]:
         """Engine traces per *opened* (shard, replica) session — the
-        per-shard L-bucket bound (DESIGN.md §6.2) applies to each."""
+        per-shard L-bucket bound (DESIGN.md §7.2) applies to each."""
         with self._lock:
             return [[s.engine.compile_stats["n_traces"]
                      for s in row if s is not None]

@@ -1,5 +1,5 @@
 """FlashClusterSession — FlashSearchSession's serving surface over an
-N-shard cluster (DESIGN.md §4).
+N-shard cluster (DESIGN.md §5).
 
 Drop-in at the serving layer: ``search`` / ``submit`` / ``service`` have
 the single-store session's exact signatures, so `SearchService`,
@@ -27,7 +27,11 @@ class FlashClusterSession(ServingSessionMixin):
     def __init__(self, store: Union[str, ShardedStore], cfg: SearchConfig,
                  *, backend: str = "jnp", use_filter: bool = True,
                  prefetch_depth: int = 2,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None,
+                 cache_bytes: Optional[int] = None):
+        """``cache_bytes`` sizes the cluster-shared device slab cache
+        (DESIGN.md §4.2) every shard-replica session draws on
+        (None = default budget, 0 = disabled)."""
         if isinstance(store, str):
             store = ShardedStore.open(store)
         if store.vocab_size > cfg.vocab_size:
@@ -39,7 +43,8 @@ class FlashClusterSession(ServingSessionMixin):
         self.cfg = cfg
         self.router = ShardRouter(
             store, cfg, backend=backend, use_filter=use_filter,
-            prefetch_depth=prefetch_depth, max_workers=max_workers)
+            prefetch_depth=prefetch_depth, max_workers=max_workers,
+            cache_bytes=cache_bytes)
         self._init_serving()
 
     # ------------------------------------------------------------------
@@ -48,7 +53,7 @@ class FlashClusterSession(ServingSessionMixin):
         shard (scatter/gather; see ShardRouter.search)."""
         return self.router.search(q_ids, q_vals)
 
-    # -- live ingestion (DESIGN.md §5.3) -------------------------------
+    # -- live ingestion (DESIGN.md §6.3) -------------------------------
     def enable_ingest(self, **knobs) -> "FlashClusterSession":
         """Attach a write path to every shard replica (each gets its own
         WAL + memtable + compactor). ``knobs`` are
@@ -74,9 +79,20 @@ class FlashClusterSession(ServingSessionMixin):
         return self.router.last_stats
 
     @property
+    def slab_cache(self):
+        """The cluster-shared device slab cache (None when disabled)."""
+        return self.router.slab_cache
+
+    @property
+    def cache_stats(self):
+        """Lifetime slab-cache counters across every shard session —
+        the same surface ``FlashSearchSession.cache_stats`` exposes."""
+        return self.router.cache_stats
+
+    @property
     def compile_stats(self) -> dict:
         """Aggregated engine traces: total plus the per-shard worst case
-        (each shard session carries its own §6.2 L-bucket bound)."""
+        (each shard session carries its own §7.2 L-bucket bound)."""
         counts = self.router.compile_counts()
         flat = [c for row in counts for c in row]
         return {"n_traces": sum(flat),

@@ -1,4 +1,4 @@
-"""ShardedStore — N FlashStores behind one CLUSTER.json (DESIGN.md §4.1).
+"""ShardedStore — N FlashStores behind one CLUSTER.json (DESIGN.md §5.1).
 
 The paper's capacity story is multi-slice: one slice handles up to 1 TB
 and the system grows by adding slices. Here a corpus is split by a

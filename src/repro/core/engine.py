@@ -14,7 +14,7 @@ resident slabs are scored while the next slab is transferred
 (double-buffered, epoch-tagged — the prefetch-predictor analogue at host
 scope), with top-k merged across slabs.
 
-Serving mode (DESIGN.md §6) feeds ``search`` micro-batches of varying L
+Serving mode (DESIGN.md §7) feeds ``search`` micro-batches of varying L
 from the SearchService coalescer. To keep variable L cheap, query shapes
 are *bucketed*: L pads to the next power-of-two multiple of the model
 axis, and the merged id stream pads to a capacity proportional to that L
@@ -141,7 +141,7 @@ class PatternSearchEngine:
     def bucket_L(self, L: int) -> int:
         """The L compile bucket: next power of two of ceil(L / tp), times
         tp — so any batch size up to ``max_batch`` lands in one of
-        ``log2(max_batch) + 1`` program shapes (DESIGN.md §6)."""
+        ``log2(max_batch) + 1`` program shapes (DESIGN.md §7)."""
         tp = self.ctx.tp_size
         return _next_pow2(-(-L // tp)) * tp
 

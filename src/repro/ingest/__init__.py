@@ -1,5 +1,5 @@
 """Live ingestion tier: WAL-backed appends, memtable + delta segments,
-and online compaction under serving (DESIGN.md §5)."""
+and online compaction under serving (DESIGN.md §6)."""
 from repro.ingest.memtable import MemTable
 from repro.ingest.pipeline import (IngestConfig, IngestPipeline,
                                    IngestStats, Snapshot, WAL_NAME)

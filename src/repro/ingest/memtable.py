@@ -1,5 +1,5 @@
 """MemTable — the searchable, not-yet-durable tail of a live store
-(DESIGN.md §5.1).
+(DESIGN.md §6.1).
 
 Documents a writer has appended (and the WAL has logged) but no seal has
 folded into a segment yet. It is a plain ordered list of ``(seq, doc)``

@@ -1,16 +1,16 @@
 """IngestPipeline — WAL-backed appends, delta-segment seals, and online
 compaction over a FlashStore, without ever blocking or perturbing
-readers (DESIGN.md §5).
+readers (DESIGN.md §6).
 
 The write path is the LSM split SpANNS applies to sparse indices:
 
-    append(doc) ──▶ WriteAheadLog (durable tail, §5.1)
+    append(doc) ──▶ WriteAheadLog (durable tail, §6.1)
                 └─▶ MemTable (searchable tail)
     seal: memtable ──▶ immutable delta segment(s) (Fig. 8 format + vocab
           filter, exactly §3.1) ──▶ manifest swap ──▶ WAL reset
     Compactor: folds the store's underfull tail run into full segments,
           commits with the same atomic manifest swap, GCs the replaced
-          files afterwards (§5.2)
+          files afterwards (§6.2)
 
 Concurrency contract (two locks, lock order write → state):
 
@@ -71,7 +71,7 @@ class IngestConfig:
     folds the store's underfull tail run once it is at least this many
     segments long. ``fsync``: fsync the WAL on every append (durable to
     the platter) — off by default, matching the flash tier's
-    mmap-not-NVMe simplification (DESIGN.md §11). ``auto_compact``
+    mmap-not-NVMe simplification (DESIGN.md §12). ``auto_compact``
     starts the background compactor thread; ``compact_poll_s`` is its
     idle poll interval (seals nudge it immediately)."""
     seal_docs: int = 512
@@ -95,23 +95,45 @@ class Snapshot:
     plus the memtable documents, captured atomically under the state
     lock. Segment handles open *lazily* (``segment``), one at a time
     like the non-ingest read path, so a snapshot costs zero fds up
-    front and the bounded-descriptor invariant of
-    ``FlashSearchSession._load_slab`` holds on live stores too. The
+    front and the bounded-descriptor invariant of the plan executor's
+    loader (``storage/plan.py``) holds on live stores too. The
     pipeline defers compaction GC while any snapshot is registered
     (``_snapshot_closed``), so a lazily opened file is guaranteed to
     still exist. ``close()`` is idempotent."""
 
     def __init__(self, entries: List[SegmentEntry], mem_docs: List[Doc],
-                 mem_key: Tuple[int, int], pipeline: "IngestPipeline"):
+                 mem_key: Tuple[int, int], generation: int,
+                 pipeline: "IngestPipeline"):
         self.entries = entries
         self.mem_docs = mem_docs
         self._mem_key = mem_key
+        self._generation = generation
         self._pipeline = pipeline
         self._segments: Dict[str, segment_lib.Segment] = {}
 
     @property
     def max_segment_docs(self) -> int:
         return max((e.n_docs for e in self.entries), default=0)
+
+    @property
+    def cache_token(self):
+        """Slab-cache identity (DESIGN.md §4.2): snapshot segments are
+        the store's own immutable files, so they share its token."""
+        return self._pipeline.store.cache_token
+
+    @property
+    def generation(self) -> int:
+        """The store generation this segment list was captured at
+        (under the state lock) — what the plan records. Compared
+        against ``live_generation`` at cache-admission time, so a
+        snapshot straggling past a fold (even one landing between
+        capture and planning) can never re-admit graveyard slabs the
+        fold just invalidated."""
+        return self._generation
+
+    @property
+    def live_generation(self) -> int:
+        return self._pipeline.store.generation
 
     def segment(self, name: str) -> segment_lib.Segment:
         if name not in self._segments:
@@ -246,6 +268,10 @@ class IngestPipeline:
             self.store.manifest["segments"] = segs
             self.store.manifest["ingest_seq"] = last_seq
             self.memtable.clear_prefix(len(docs))
+            # inside the state lock so a concurrent capture never pairs
+            # the new segment list with the old generation (seal adds,
+            # replaces nothing — this is a pure counter bump)
+            self.store.bump_generation()
         self.wal.reset()
         self.stats.seals += 1
         self._compact_wake.set()
@@ -267,8 +293,9 @@ class IngestPipeline:
             entries = self.store.entries
             mem_docs = self.memtable.docs()
             mem_key = (len(mem_docs), self.memtable.last_seq)
+            generation = self.store.generation
             self._live_snapshots += 1
-        return Snapshot(entries, mem_docs, mem_key, self)
+        return Snapshot(entries, mem_docs, mem_key, generation, self)
 
     def _snapshot_closed(self):
         with self._state_lock:
@@ -369,6 +396,10 @@ class IngestPipeline:
                     [e.name for e in tail]
                 if not doomed:
                     self._graveyard.extend(e.name for e in tail)
+            # precise cache invalidation (DESIGN.md §4.2): the folded
+            # tail names are out of the live manifest; a snapshot that
+            # still scores one reloads it from the graveyard (a miss)
+            self.store.bump_generation(removed=[e.name for e in tail])
         for name in doomed:
             try:
                 os.unlink(os.path.join(self.store.root, name))

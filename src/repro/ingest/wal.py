@@ -1,4 +1,4 @@
-"""Write-ahead log for single-document appends (DESIGN.md §5.1).
+"""Write-ahead log for single-document appends (DESIGN.md §6.1).
 
 The flash tier's segment format is append-hostile by design: its pages,
 vocabulary filter, and footer are immutable once written, which is what

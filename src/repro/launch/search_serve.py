@@ -1,5 +1,5 @@
 """Concurrent-serving launcher: closed-loop load generator against the
-micro-batching SearchService (DESIGN.md §6).
+micro-batching SearchService (DESIGN.md §7).
 
 N client threads each submit one query at a time and wait for its
 result (closed loop), so offered load scales with concurrency the way
@@ -15,12 +15,16 @@ aggregate QPS, batch occupancy and the engine's compile-cache traces.
 
 Add ``--store PATH`` to serve an existing FlashStore through a
 FlashSearchSession, or ``--cluster PATH`` to serve a sharded store
-(DESIGN.md §4) through a FlashClusterSession, instead of a synthesized
+(DESIGN.md §5) through a FlashClusterSession, instead of a synthesized
 resident corpus. With either, ``--ingest N`` additionally runs a
 closed-loop writer thread that appends N fresh documents through the
-live-ingestion tier (WAL -> memtable -> delta segments, DESIGN.md §5)
+live-ingestion tier (WAL -> memtable -> delta segments, DESIGN.md §6)
 *while* the query clients run — the serving-under-writes scenario —
 and reports appends/sec plus seal/compaction counts.
+
+Storage-backed targets serve hot segments from the device slab cache
+(DESIGN.md §4.2); ``--cache-mb`` sizes its byte budget (0 disables)
+and the post-run summary reports the hit rate.
 """
 import argparse
 import threading
@@ -101,6 +105,10 @@ def main():
                          "(requires --store or --cluster)")
     ap.add_argument("--seal-docs", type=int, default=256,
                     help="memtable seal threshold for --ingest")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="device slab cache budget in MB for --store/"
+                         "--cluster (default: the storage tier's "
+                         "default budget; 0 disables the cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.ingest and not (args.store or args.cluster):
@@ -110,17 +118,21 @@ def main():
     cfg = SearchConfig(name="serve", vocab_size=args.vocab,
                        avg_nnz_per_doc=args.avg_nnz, nnz_pad=args.nnz_pad,
                        top_k=args.top_k)
+    cache_bytes = None if args.cache_mb is None \
+        else int(args.cache_mb * 1e6)
     if args.store:
         from repro.storage import FlashSearchSession, FlashStore
         store = FlashStore.open(args.store)
-        searcher = FlashSearchSession(store, cfg, backend=args.backend)
+        searcher = FlashSearchSession(store, cfg, backend=args.backend,
+                                      cache_bytes=cache_bytes)
         corpus = store.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] store {args.store}: {store.n_docs} docs / "
               f"{store.n_segments} segments")
     elif args.cluster:
         from repro.cluster import FlashClusterSession, ShardedStore
         cstore = ShardedStore.open(args.cluster)
-        searcher = FlashClusterSession(cstore, cfg, backend=args.backend)
+        searcher = FlashClusterSession(cstore, cfg, backend=args.backend,
+                                       cache_bytes=cache_bytes)
         corpus = cstore.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] cluster {args.cluster}: {cstore.n_shards} shards x "
               f"{cstore.replicas} replicas, {cstore.n_docs} docs")
@@ -209,6 +221,15 @@ def main():
         print(f"  batches {st.n_batches}  mean occupancy "
               f"{st.mean_occupancy:.2f}  flushes {st.flushes}")
         svc.close()
+    cst = getattr(searcher, "cache_stats", None)
+    if cst is not None:
+        # slab-cache summary (DESIGN.md §4.2): lifetime totals across
+        # the run, including the bucket-warming queries
+        cache = searcher.slab_cache
+        print(f"  slab cache: {cst.hit_rate * 100:.1f}% hit rate "
+              f"({cst.hits} hits / {cst.misses} misses, "
+              f"{cst.evictions} evictions, "
+              f"{cache.nbytes / 1e6:.1f} MB resident)")
     if engine is not None:
         print(f"  engine traces: {engine.compile_stats['n_traces']} "
               f"{engine.compile_stats['buckets']}")

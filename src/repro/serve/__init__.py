@@ -1,5 +1,5 @@
 """Serving layer: LM decode steps (step.py) and the sparse-search
-micro-batching service (DESIGN.md §6)."""
+micro-batching service (DESIGN.md §7)."""
 from repro.serve.batcher import BatcherStats, MicroBatcher
 from repro.serve.search_service import SearchService
 

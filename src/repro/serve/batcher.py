@@ -1,4 +1,4 @@
-"""Micro-batch coalescing scheduler (DESIGN.md §6.1).
+"""Micro-batch coalescing scheduler (DESIGN.md §7.1).
 
 The paper's headline amortization is one corpus pass per L-query merged
 batch (Table 2); the serving-layer analogue is a scheduler that turns

@@ -1,12 +1,12 @@
 """SearchService — concurrent query serving with micro-batch coalescing
-(DESIGN.md §6).
+(DESIGN.md §7).
 
 Many clients each hold one sparse query; the paper's engine wants one
 L-column merged batch per corpus pass. The service bridges the two:
 
     client threads ── submit(q_ids, q_vals) -> Future ──┐
                                                         ▼
-                                           MicroBatcher (§6.1)
+                                           MicroBatcher (§7.1)
                                    flush on max_batch L or max_delay_ms
                                                         ▼
                             searcher.search([L, Qn] stacked batch)
@@ -75,6 +75,13 @@ class SearchService:
     @property
     def stats(self) -> BatcherStats:
         return self._batcher.stats
+
+    @property
+    def cache_stats(self):
+        """The backing searcher's slab-cache lifetime counters
+        (DESIGN.md §4.2) — None for the resident engine, which keeps
+        its whole corpus device-resident and has no storage tier."""
+        return getattr(self.searcher, "cache_stats", None)
 
     def close(self):
         self._batcher.close()

@@ -1,5 +1,5 @@
 """Shared serving surface for storage-backed search sessions
-(DESIGN.md §6.3).
+(DESIGN.md §7.3).
 
 FlashSearchSession (one store) and FlashClusterSession (N shards)
 promise the same ``service`` / ``submit`` / ``close`` surface; this
@@ -22,7 +22,7 @@ class ServingSessionMixin:
         self._closed = False
 
     def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
-        """The session's lazily-created SearchService (DESIGN.md §6):
+        """The session's lazily-created SearchService (DESIGN.md §7):
         one micro-batching scheduler whose flushed batches run
         ``self.search`` — each coalesced batch costs one pass over the
         backing store(s) instead of one per client. The knobs apply on
@@ -44,12 +44,17 @@ class ServingSessionMixin:
         return self.service().submit(q_ids, q_vals)
 
     def close(self):
+        """Idempotent: only the first close tears down the session's
+        resources (store/pipeline/router); later calls are no-ops, so a
+        router teardown racing a user close cannot double-free."""
         with self._service_lock:
+            first = not self._closed
             self._closed = True
             if self._service is not None:
                 self._service.close()
                 self._service = None
-        self._close_resources()
+        if first:
+            self._close_resources()
 
     def _close_resources(self):
         raise NotImplementedError

@@ -1,15 +1,21 @@
-"""Flash storage tier: persistent segment store with in-storage filtering
-and async prefetch (DESIGN.md §3)."""
+"""Flash storage tier: persistent segment store with in-storage filtering,
+async prefetch, and the query planner + device slab cache
+(DESIGN.md §3–§4)."""
 from repro.storage.filter import (BitmapFilter, BloomFilter, build_filter,
                                   from_meta)
+from repro.storage.plan import Planner, PlanStep, QueryPlan, execute_plan
 from repro.storage.prefetch import Prefetcher
 from repro.storage.segment import Segment, read_footer, write_segment
 from repro.storage.session import FlashSearchSession, SearchStats
+from repro.storage.slabcache import (CacheStats, SlabCache,
+                                     DEFAULT_CACHE_BYTES)
 from repro.storage.store import (FlashStore, StoreFormatError, StoreStats)
 
 __all__ = [
     "BitmapFilter", "BloomFilter", "build_filter", "from_meta",
+    "Planner", "PlanStep", "QueryPlan", "execute_plan",
     "Prefetcher", "Segment", "read_footer", "write_segment",
-    "FlashSearchSession", "SearchStats", "FlashStore",
-    "StoreFormatError", "StoreStats",
+    "FlashSearchSession", "SearchStats",
+    "CacheStats", "SlabCache", "DEFAULT_CACHE_BYTES",
+    "FlashStore", "StoreFormatError", "StoreStats",
 ]

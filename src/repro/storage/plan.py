@@ -1,0 +1,235 @@
+"""Query planning and the shared plan executor (DESIGN.md §4.1).
+
+Every scoring surface — single store, live memtable snapshot, sharded
+cluster, micro-batched service — used to hand-roll the same implicit
+scan: walk the manifest, filter, read + decode each survivor from
+disk. This module makes that plan *explicit* and single-sourced:
+
+    Planner.plan(view, q_ids[, snap])  ->  QueryPlan
+    execute_plan(engine, view, plan, q_ids, q_vals, ...) -> SearchResult
+
+A ``view`` duck-types the segment surface (``entries`` / ``segment`` /
+``release`` / ``cache_token`` — a FlashStore or an ingest Snapshot).
+The plan records one verdict per manifest segment (skip via the §3.2
+vocabulary filter, or scan), the slab source for each survivor
+(``cache``: already decoded + device-resident in the §4.2 SlabCache;
+``disk``: mmap read -> ELL decode -> device_put), the memtable tail
+when the view is a live snapshot, and the padded program shape. Steps
+are ordered cache-first so the prefetcher thread overlaps every disk
+decode behind the free cache hits.
+
+The executor is the only scan loop in the tree: it streams the plan's
+steps through the §3.3 Prefetcher, scores each slab as it lands, and
+folds the per-slab candidates in *manifest rank order* (memtable last)
+so the scan-order optimization can never change score-tie breaking
+relative to a cold scan. The cache is consulted at *execution* time (a
+planned hit that was evicted in between simply degrades to a disk load
+— plans are advisory about sources, never about correctness), and one
+``SearchStats`` is filled, including the cache hit/miss/eviction
+counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import stream_format
+from repro.core.corpus import Corpus
+from repro.core.engine import _merge_results
+from repro.storage.prefetch import Prefetcher
+from repro.storage.slabcache import SlabCache, slab_key
+
+SOURCE_CACHE = "cache"
+SOURCE_DISK = "disk"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One surviving segment in scan order. ``rank`` is its position in
+    *manifest* order among the scored segments — the executor folds
+    results by rank, so the cache-first scan order can never change the
+    merge's tie-breaking relative to a cold manifest-order scan."""
+    name: str
+    n_docs: int
+    source: str            # SOURCE_CACHE | SOURCE_DISK (advisory)
+    rank: int              # manifest-order fold position
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Explicit per-query scan plan over one snapshot view."""
+    steps: List[PlanStep]              # cache-first scan order
+    skipped: List[str]                 # filter-pruned segment names
+    segments_total: int
+    slab_docs: int                     # padded program shape (§3.3)
+    nnz_pad: int
+    cache_token: object                # store identity for cache keys
+    generation: int = 0                # generation the view's segment
+                                       # list belongs to (capture-time
+                                       # for snapshots): admission is
+                                       # skipped once the live one
+                                       # moves (see execute_plan)
+    memtable: Optional[Corpus] = None  # live tail (unpadded), or None
+    memtable_trunc: int = 0
+    memtable_pad: int = 0              # doubling pad target for the tail
+
+    def key_for(self, name: str):
+        return slab_key(self.cache_token, name, self.nnz_pad,
+                        self.slab_docs)
+
+    @property
+    def n_cached(self) -> int:
+        return sum(s.source == SOURCE_CACHE for s in self.steps)
+
+    @property
+    def n_disk(self) -> int:
+        return sum(s.source == SOURCE_DISK for s in self.steps)
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.steps and self.memtable is None
+
+
+class Planner:
+    """Turns (snapshot view, query batch) into a QueryPlan. Stateless
+    beyond its knobs, so one instance serves every query of a session."""
+
+    def __init__(self, *, nnz_pad: int, rows: int, use_filter: bool = True,
+                 cache: Optional[SlabCache] = None):
+        self.nnz_pad = nnz_pad
+        self.rows = rows                # mesh rows the slab pad aligns to
+        self.use_filter = use_filter
+        self.cache = cache
+
+    def plan(self, view, q_ids: np.ndarray, snap=None) -> QueryPlan:
+        """``snap`` carries the memtable when ``view`` is a live
+        Snapshot (the session passes the same object twice)."""
+        entries = view.entries
+        rows = self.rows
+        slab_docs = -(-max(view.max_segment_docs, 1) // rows) * rows
+        token = view.cache_token
+        q_words = np.unique(q_ids[q_ids >= 0])
+        cached: List[PlanStep] = []
+        disk: List[PlanStep] = []
+        skipped: List[str] = []
+        # one segment handle held at a time: a skipped segment costs its
+        # footer + filter pages, a survivor is reopened lazily by the
+        # executor's loader (snapshot entries stay openable — the
+        # pipeline defers GC while the snapshot lives)
+        rank = 0
+        for entry in entries:
+            if self.use_filter and q_words.size:
+                seg = view.segment(entry.name)
+                hit_any = seg.vocab_filter.contains_any(q_words)
+                view.release(entry.name)
+                if not hit_any:
+                    skipped.append(entry.name)
+                    continue
+            key = slab_key(token, entry.name, self.nnz_pad, slab_docs)
+            step = PlanStep(
+                entry.name, entry.n_docs,
+                SOURCE_CACHE if self.cache is not None
+                and self.cache.peek(key) else SOURCE_DISK, rank)
+            rank += 1
+            (cached if step.source == SOURCE_CACHE else disk).append(step)
+        mem_corpus, mem_trunc = (snap.memtable_corpus(self.nnz_pad)
+                                 if snap is not None else (None, 0))
+        mem_pad = 0
+        if mem_corpus is not None:
+            # reuse the segment program shape whenever the memtable fits;
+            # a memtable that outgrows it pads to the next *doubling* so
+            # interleaved append/search compiles O(log) shapes (§3.4)
+            mem_pad = slab_docs
+            while mem_pad < mem_corpus.n_docs:
+                mem_pad *= 2
+        return QueryPlan(steps=cached + disk, skipped=skipped,
+                         segments_total=len(entries), slab_docs=slab_docs,
+                         nnz_pad=self.nnz_pad, cache_token=token,
+                         generation=view.generation,
+                         memtable=mem_corpus, memtable_trunc=mem_trunc,
+                         memtable_pad=mem_pad)
+
+
+def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
+                 q_vals: np.ndarray, *, stats,
+                 cache: Optional[SlabCache] = None,
+                 prefetch_depth: int = 2):
+    """Run one QueryPlan: prefetch + score its slab stream, mutating
+    ``stats`` (a SearchStats) as slabs resolve. The shared scan loop
+    behind every scoring surface (DESIGN.md §4.1).
+
+    Slabs are *scored* in the plan's cache-first scan order (so the
+    prefetcher overlaps disk decodes behind the free hits) but their
+    per-slab candidates are *folded* in manifest rank order, memtable
+    last — exactly the cold scan's fold. ``_merge_results`` breaks
+    score ties by fold position, so without the rank fold a partially
+    warm query could flip tied candidates relative to a cold one."""
+
+    def load(step: PlanStep):
+        """Prefetch-thread body: cache lookup, else mmap read -> ELL
+        decode -> device upload (+ admission). At most ``prefetch_depth``
+        segments are open during the scoring stream."""
+        if cache is not None:
+            hit = cache.get(plan.key_for(step.name))
+            if hit is not None:
+                stats.cache_hits += 1
+                stats.docs_scored += hit.n_docs
+                stats.pairs_truncated += hit.n_trunc
+                return step, hit.slab
+            stats.cache_misses += 1
+        seg = view.segment(step.name)
+        doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
+            seg.stream(), plan.nnz_pad)
+        view.release(step.name)
+        stats.docs_scored += int(doc_ids.size)
+        stats.pairs_truncated += n_trunc
+        corpus = Corpus(doc_ids, ids, vals, norms)
+        slab = engine.put_slab(corpus.pad_docs_to(plan.slab_docs))
+        # admission is gated on the LIVE store generation still matching
+        # the generation the plan's segment list was captured at: once a
+        # fold/compact has moved it, this segment may be a graveyard
+        # file a snapshot is straggling over — admitting it would undo
+        # the precise invalidation and squat in the budget. The guard
+        # runs under the cache lock (see SlabCache.put) so it cannot
+        # race the fold's invalidate.
+        if cache is not None:
+            stats.cache_evictions += cache.put(
+                plan.key_for(step.name), slab,
+                n_docs=int(doc_ids.size), n_trunc=n_trunc,
+                admit=lambda: view.live_generation == plan.generation)
+        return step, slab
+
+    if plan.is_empty:
+        return engine.empty_result(q_ids.shape[0])
+    # one fold slot per scored segment in manifest order, + the memtable
+    folds: List[Optional[object]] = [None] * (len(plan.steps) + 1)
+    mem_slab = None
+    if plan.memtable is not None:
+        # stats land BEFORE the prefetcher (and its loader thread)
+        # exists: += on shared counters from two threads would race
+        stats.memtable_docs = plan.memtable.n_docs
+        stats.docs_scored += plan.memtable.n_docs
+        stats.pairs_truncated += plan.memtable_trunc
+        mem_slab = plan.memtable.pad_docs_to(plan.memtable_pad)
+    pf = Prefetcher(plan.steps, load, depth=prefetch_depth) \
+        if plan.steps else None
+    try:
+        if mem_slab is not None:
+            # scored while the prefetcher's worker loads the first slabs
+            folds[-1] = engine.search_streaming(q_ids, q_vals, [mem_slab])
+        if pf is not None:
+            for step, slab in pf:
+                folds[step.rank] = engine.search_streaming(
+                    q_ids, q_vals, [slab])
+    finally:
+        if pf is not None:
+            pf.close()
+    best = None
+    for r in folds:
+        if r is None:
+            continue
+        best = r if best is None else _merge_results(best, r,
+                                                     engine.cfg.top_k)
+    return best

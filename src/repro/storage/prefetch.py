@@ -39,6 +39,7 @@ class Prefetcher(Generic[T, U]):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._finished = False
+        self._closed = False
         self._worker = threading.Thread(
             target=self._run, args=(iter(items), load), daemon=True,
             name="slab-prefetch")
@@ -81,14 +82,25 @@ class Prefetcher(Generic[T, U]):
         return v
 
     def close(self):
-        """Stop the worker and discard queued slabs."""
+        """Stop the worker and discard queued (possibly unconsumed)
+        slabs. Idempotent: a plan that finishes with items still queued
+        — e.g. every segment was a cache hit and the engine drained the
+        stream early — can be closed again by an outer finally without
+        re-joining or re-draining."""
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
+        self._drain()
+        self._worker.join(timeout=5)
+        self._drain()     # anything the worker enqueued while we joined
+
+    def _drain(self):
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
-        self._worker.join(timeout=5)
 
     def __enter__(self):
         return self

@@ -4,17 +4,22 @@ Wires the storage tier into the engine the way the paper wires flash
 slices into accelerator kernels:
 
     FlashStore segments
-        -> vocabulary-filter pruning   (in-storage pattern filter, §3.2)
-        -> Prefetcher background thread (read + decode + device_put, §3.3)
+        -> Planner: filter verdicts + slab sources  (§4.1)
+        -> execute_plan: SlabCache hits (§4.2) + Prefetcher disk
+           decodes (§3.3), cache-first scan order
         -> PatternSearchEngine.search_streaming (score + merge top-k)
 
 Every surviving segment becomes one fixed-shape DeviceSlab (padded to the
 store's largest segment rounded up to the mesh rows) so the whole stream
-reuses a single compiled program. ``last_stats`` reports how much the
-filter pruned — the skip-rate is the storage tier's headline metric.
+reuses a single compiled program. Hot segments stay decoded and
+device-resident in the byte-budgeted slab cache, so steady-state
+queries skip the disk read, the ELL decode, and the upload entirely —
+warm results are bit-identical to cold ones. ``last_stats`` reports how
+much the filter pruned (the skip-rate is the storage tier's headline
+metric) plus the cache hit/miss/eviction counters.
 
 With ``enable_ingest()`` the session also becomes a *live* writer
-surface (DESIGN.md §5): ``append`` routes documents through a
+surface (DESIGN.md §6): ``append`` routes documents through a
 write-ahead log + memtable, and every search scores an atomic snapshot
 — the manifest segments, sealed deltas, and memtable captured at the
 moment the query (or its coalesced batch) starts scoring — so results
@@ -29,12 +34,11 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_search import SearchConfig
-from repro.core import stream_format
-from repro.core.corpus import Corpus
-from repro.core.engine import DeviceSlab, PatternSearchEngine, SearchResult
+from repro.core.engine import PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import MeshCtx, single_device_ctx
 from repro.serve.session_surface import ServingSessionMixin
-from repro.storage.prefetch import Prefetcher
+from repro.storage.plan import Planner, execute_plan
+from repro.storage.slabcache import CacheStats, SlabCache
 from repro.storage.store import FlashStore
 
 
@@ -47,17 +51,30 @@ class SearchStats:
     pairs_truncated: int = 0
     memtable_docs: int = 0     # of docs_scored, how many came from the
                                # live memtable (0 without ingest)
+    cache_hits: int = 0        # slab-cache counters for this query
+    cache_misses: int = 0      # (DESIGN.md §4.2); all zero when the
+    cache_evictions: int = 0   # cache is disabled
 
     @property
     def skip_rate(self) -> float:
         return (self.segments_skipped / self.segments_total
                 if self.segments_total else 0.0)
 
+    @property
+    def cache_hit_rate(self) -> float:
+        probes = self.cache_hits + self.cache_misses
+        return self.cache_hits / probes if probes else 0.0
+
 
 class FlashSearchSession(ServingSessionMixin):
     def __init__(self, store: FlashStore, cfg: SearchConfig,
                  ctx: Optional[MeshCtx] = None, backend: str = "jnp",
-                 use_filter: bool = True, prefetch_depth: int = 2):
+                 use_filter: bool = True, prefetch_depth: int = 2,
+                 slab_cache: Optional[SlabCache] = None,
+                 cache_bytes: Optional[int] = None):
+        """``slab_cache`` shares an existing cache (the cluster router
+        passes one per-cluster instance); otherwise ``cache_bytes``
+        sizes a private one (None = default budget, 0 = disabled)."""
         self.store = store
         self.cfg = cfg
         self.ctx = ctx or single_device_ctx()
@@ -70,6 +87,11 @@ class FlashSearchSession(ServingSessionMixin):
                 f"store vocab_size {store.vocab_size} exceeds "
                 f"cfg.vocab_size {cfg.vocab_size}")
         self.engine = PatternSearchEngine(None, cfg, self.ctx, backend)
+        self.slab_cache = SlabCache.resolve(slab_cache, cache_bytes)
+        if self.slab_cache is not None:
+            store.register_cache(self.slab_cache)
+        self._planner = Planner(nnz_pad=cfg.nnz_pad, rows=self.ctx.dp_size,
+                                use_filter=use_filter, cache=self.slab_cache)
         self.last_stats = SearchStats()
         self._ingest = None
         # one program shape for every slab: largest segment, mesh-aligned
@@ -77,7 +99,7 @@ class FlashSearchSession(ServingSessionMixin):
         self._slab_docs = -(-max(store.max_segment_docs, 1) // rows) * rows
         self._init_serving()
 
-    # -- live ingestion (DESIGN.md §5) ---------------------------------
+    # -- live ingestion (DESIGN.md §6) ---------------------------------
     def enable_ingest(self, **knobs) -> "IngestPipeline":
         """Attach a write path (WAL + memtable + background compactor)
         to this session's store and replay any WAL tail a crash left
@@ -121,82 +143,34 @@ class FlashSearchSession(ServingSessionMixin):
 
     def _search_view(self, view, snap, q_ids: np.ndarray,
                      q_vals: np.ndarray) -> SearchResult:
-        """Score one segment view. ``view`` duck-types the segment
-        surface (``entries`` / ``segment`` / ``release`` — a FlashStore
-        or an ingest Snapshot); ``snap`` carries the memtable when the
-        view is a snapshot."""
-        entries = view.entries
-        stats = SearchStats(segments_total=len(entries))
-        # segments appended since construction may have grown the slab shape
-        rows = self.ctx.dp_size
-        self._slab_docs = -(-max(view.max_segment_docs, 1) // rows) * rows
-        q_words = np.unique(q_ids[q_ids >= 0])
-        survivors = []
-        # one segment handle held at a time on both paths: a skipped
-        # segment costs its footer + filter pages, a survivor is
-        # reopened lazily by the prefetch loader (snapshot entries stay
-        # openable — the pipeline defers GC while the snapshot lives)
-        for entry in entries:
-            seg = view.segment(entry.name)
-            if (self.use_filter and q_words.size
-                    and not seg.vocab_filter.contains_any(q_words)):
-                stats.segments_skipped += 1
-                view.release(entry.name)
-                continue
-            survivors.append(entry.name)
-            view.release(entry.name)
-        stats.segments_scored = len(survivors)
-        mem_corpus, mem_trunc = (snap.memtable_corpus(self.cfg.nnz_pad)
-                                 if snap is not None else (None, 0))
+        """Score one segment view (a FlashStore or an ingest Snapshot;
+        ``snap`` carries the memtable when the view is a snapshot):
+        plan, then run the shared executor (DESIGN.md §4.1)."""
+        plan = self._planner.plan(view, q_ids, snap)
+        self._slab_docs = plan.slab_docs
+        stats = SearchStats(segments_total=plan.segments_total,
+                            segments_skipped=len(plan.skipped),
+                            segments_scored=len(plan.steps))
         self.last_stats = stats
-        if not survivors and mem_corpus is None:
-            return self.engine.empty_result(q_ids.shape[0])
-        mem_slab = None
-        if mem_corpus is not None:
-            stats.memtable_docs = mem_corpus.n_docs
-            stats.docs_scored += mem_corpus.n_docs
-            stats.pairs_truncated += mem_trunc
-            # reuse the segment program shape whenever the memtable fits;
-            # a memtable that outgrows it (seal_docs > largest segment)
-            # pads to the next *doubling* so interleaved append/search
-            # compiles O(log) shapes, not one per append
-            pad = self._slab_docs
-            while pad < mem_corpus.n_docs:
-                pad *= 2
-            mem_slab = mem_corpus.pad_docs_to(pad)
-        pf = Prefetcher(survivors, lambda name: self._load_slab(view, name),
-                        depth=self.prefetch_depth) if survivors else None
-        try:
-            slabs = self._chain_slabs(pf, mem_slab)
-            result = self.engine.search_streaming(q_ids, q_vals, slabs)
-        finally:
-            if pf is not None:
-                pf.close()
-        return result
+        return execute_plan(self.engine, view, plan, q_ids, q_vals,
+                            stats=stats, cache=self.slab_cache,
+                            prefetch_depth=self.prefetch_depth)
 
-    @staticmethod
-    def _chain_slabs(pf, mem_slab):
-        if pf is not None:
-            yield from pf
-        if mem_slab is not None:
-            yield mem_slab
-
-    # ------------------------------------------------------------------
-    def _load_slab(self, view, name: str) -> DeviceSlab:
-        """Prefetch-thread body: mmap read -> ELL decode -> device upload.
-        The segment handle is released once decoded, so at most
-        ``prefetch_depth`` segments are open during the scoring stream."""
-        seg = view.segment(name)
-        doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
-            seg.stream(), self.cfg.nnz_pad)
-        view.release(name)
-        self.last_stats.docs_scored += int(doc_ids.size)
-        self.last_stats.pairs_truncated += n_trunc
-        corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(self._slab_docs)
-        return self.engine.put_slab(corpus)
+    @property
+    def cache_stats(self) -> Optional[CacheStats]:
+        """Lifetime slab-cache counters (shared across every sharer of
+        the cache), or None when the cache is disabled."""
+        return self.slab_cache.stats if self.slab_cache is not None else None
 
     def _close_resources(self):
-        # service/submit/close lifecycle comes from ServingSessionMixin
+        # service/submit/close lifecycle comes from ServingSessionMixin,
+        # whose close() guarantees this runs at most once
+        if self.slab_cache is not None:
+            # drop the store's entries only when the *last* session
+            # sharing this (store, cache) pair detaches — another live
+            # session's warm set must not be wiped from under it
+            if self.store.unregister_cache(self.slab_cache):
+                self.slab_cache.drop_store(self.store.cache_token)
         if self._ingest is not None:
             self._ingest.close()
             self._ingest = None

@@ -16,6 +16,7 @@ the previous manifest intact and at worst an orphan segment file, which
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import logging
 import os
@@ -130,11 +131,64 @@ def _corpus_docs(corpus: Corpus) -> List[Tuple[int, List[Tuple[int, int]]]]:
     return docs
 
 
+# unique per FlashStore *instance*: a reopened (possibly
+# crash-recovered) store must never alias a previous instance's slab
+# cache entries even if segment names were reused on disk
+_CACHE_TOKENS = itertools.count(1)
+
+
 class FlashStore:
     def __init__(self, root: str, manifest: Dict):
         self.root = root
         self.manifest = manifest
         self._open_segments: Dict[str, segment_lib.Segment] = {}
+        # DESIGN.md §4.2: manifest-mutation bookkeeping for the device
+        # slab cache — ``generation`` counts commits, registered caches
+        # get precise invalidations for replaced segment names
+        self.cache_token = next(_CACHE_TOKENS)
+        self.generation = 0
+        # id(cache) -> [cache, refcount]: refcounted so N sessions
+        # sharing one cache over one store register/unregister cleanly,
+        # and a long-lived store never accumulates dead sessions' caches
+        self._caches: Dict[int, List] = {}
+
+    def register_cache(self, cache):
+        """Attach a SlabCache for invalidation callbacks. Paired with
+        ``unregister_cache`` at session close (refcounted)."""
+        slot = self._caches.setdefault(id(cache), [cache, 0])
+        slot[1] += 1
+
+    def unregister_cache(self, cache) -> bool:
+        """Detach one registration (session close). Returns True when it
+        was the last one — only then may the caller drop this store's
+        entries from the cache; earlier a sibling session still serving
+        from them would lose its warm set."""
+        slot = self._caches.get(id(cache))
+        if slot is None:
+            return False
+        slot[1] -= 1
+        if slot[1] <= 0:
+            del self._caches[id(cache)]
+            return True
+        return False
+
+    @property
+    def live_generation(self) -> int:
+        """Alias so FlashStore and ingest Snapshot expose the same
+        plan-view surface (a snapshot's ``generation`` is capture-time,
+        its ``live_generation`` is the store's current one)."""
+        return self.generation
+
+    def bump_generation(self, removed: Sequence[str] = ()):
+        """Record one manifest mutation (append/seal/fold/compact) and
+        drop exactly the replaced segment names from every registered
+        cache. Dropping is a perf event, never a correctness one — a
+        live snapshot that still scores a replaced file reloads it from
+        the graveyard (§6.2)."""
+        self.generation += 1
+        if removed:
+            for cache, _ in list(self._caches.values()):
+                cache.invalidate(self.cache_token, removed)
 
     # -- lifecycle -----------------------------------------------------
     @classmethod
@@ -287,6 +341,7 @@ class FlashStore:
                    for lo in range(0, len(docs), per)]
         self.manifest["segments"].extend(entries)
         self._write_manifest()
+        self.bump_generation()
         return [e["name"] for e in entries]
 
     def append_corpus(self, corpus: Corpus,
@@ -334,6 +389,7 @@ class FlashStore:
                     log.info("compact(%s): removing replaced segment %s",
                              self.root, fn)
                 os.unlink(os.path.join(self.root, fn))
+        self.bump_generation(removed=[e["name"] for e in old_entries])
         return self.n_segments
 
     # -- read path -----------------------------------------------------

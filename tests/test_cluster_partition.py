@@ -1,6 +1,6 @@
 """Cluster partition/layout invariants: every doc id lands in exactly
 one shard (both policies), build/rebalance preserve the corpus, and the
-store-format validation satellites (DESIGN.md §4.1)."""
+store-format validation satellites (DESIGN.md §5.1)."""
 import json
 import logging
 import os

@@ -1,6 +1,6 @@
 """Cluster scatter/gather correctness: bit-equivalence to a single-store
 scan of the union corpus, adversarial shard layouts, replica failover,
-and the per-shard compile-cache bound (DESIGN.md §4)."""
+and the per-shard compile-cache bound (DESIGN.md §5)."""
 import shutil
 import threading
 
@@ -115,7 +115,7 @@ def test_concurrent_submits_match_serial_rows(setup):
 
 def test_per_shard_compile_counts_within_bucket_bound(setup):
     """After serving every batch size up to max_batch, each shard's
-    engine holds to the §6.2 bound: <= log2(max_batch) + 1 programs."""
+    engine holds to the §7.2 bound: <= log2(max_batch) + 1 programs."""
     cfg, corpus, union, sess = setup
     rng = np.random.default_rng(0)
     L = 1

@@ -1,7 +1,7 @@
 """Live ingestion tier: WAL durability, memtable/seal/compaction
 mechanics, snapshot consistency under concurrent writers, and the
 differential contract — a live session's results are bit-identical to a
-from-scratch store over the same documents (DESIGN.md §5)."""
+from-scratch store over the same documents (DESIGN.md §6)."""
 import os
 import threading
 
@@ -294,7 +294,7 @@ def test_snapshot_survives_compaction_gc(tmp_path):
     """A snapshot captured before a fold still scores the *old* files:
     the compactor parks replaced files in the graveyard while the
     snapshot is registered, and they are unlinked only when the last
-    snapshot closes — readers are never perturbed (DESIGN.md §5.2)."""
+    snapshot closes — readers are never perturbed (DESIGN.md §6.2)."""
     cfg = smoke()
     corpus = corpus_lib.synthesize(60, cfg.vocab_size, cfg.avg_nnz_per_doc,
                                    cfg.nnz_pad, seed=3)
@@ -334,7 +334,7 @@ def test_snapshot_survives_compaction_gc(tmp_path):
 def test_growing_memtable_compiles_log_many_shapes(tmp_path):
     """A memtable that outgrows the largest segment pads to doublings of
     the slab shape: interleaved append/search must trace O(log) engine
-    programs, not one per append (the §6.2 bound must survive live
+    programs, not one per append (the §7.2 bound must survive live
     writes)."""
     cfg = smoke()
     store = FlashStore.create(str(tmp_path / "s"), vocab_size=cfg.vocab_size,
