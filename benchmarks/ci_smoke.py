@@ -1,7 +1,7 @@
 """CI perf-smoke driver: run the storage, serving, and ingest benchmarks
 in a tiny configuration, collect their CSV rows, and write them to a
 single ``BENCH_ci.json`` that CI uploads as a workflow artifact
-(DESIGN.md §11).
+(DESIGN.md §12).
 
 The point is the *trajectory*: every CI run leaves one machine-readable
 snapshot of the perf counters — including the storage bench's
@@ -16,7 +16,14 @@ This module is import-light on purpose: ``benchmarks/run.py --suite``
 (the unified entry that also reaches the cluster and paper benches)
 reuses ``parse_rows`` / ``run_script`` / ``new_report`` from here.
 
+``--check PATH`` validates an existing report instead of running the
+benches: the storage bench must have exported its per-stage latency
+rows and a passing (or explicitly skipped) tracing-off overhead gate
+(DESIGN.md §8) — CI's perf-smoke job runs this right after the smoke
+pass so a silently-dropped observability row fails the build.
+
 Usage: PYTHONPATH=src python benchmarks/ci_smoke.py [--out BENCH_ci.json]
+       PYTHONPATH=src python benchmarks/ci_smoke.py --check BENCH_ci.json
 """
 from __future__ import annotations
 
@@ -115,10 +122,43 @@ def new_report() -> dict:
     }
 
 
+def check_report(path: str) -> list:
+    """Validate an existing BENCH json's observability rows; returns the
+    list of problems (empty = ok)."""
+    with open(path) as f:
+        report = json.load(f)
+    problems = []
+    rows = {r["name"]: r
+            for b in report.get("benches", {}).values()
+            for r in b.get("rows", [])}
+    stages = [n for n in rows if n.startswith("storage/stage_ms@")]
+    if len(stages) < 3:
+        problems.append(f"expected >=3 storage/stage_ms@* rows, got "
+                        f"{sorted(stages)}")
+    gate = rows.get("storage/obs_overhead_pct")
+    if gate is None:
+        problems.append("missing storage/obs_overhead_pct row")
+    elif "FAIL" in gate["derived"]:
+        problems.append(f"overhead gate failed: {gate['derived']}")
+    return problems
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_ci.json")
+    ap.add_argument("--check", metavar="PATH",
+                    help="validate an existing report's observability "
+                         "rows instead of running the benches")
     args = ap.parse_args()
+
+    if args.check:
+        problems = check_report(args.check)
+        for p in problems:
+            print(f"[check] {p}")
+        if problems:
+            sys.exit(f"{args.check}: {len(problems)} problem(s)")
+        print(f"[check] {args.check}: observability rows ok")
+        return
 
     env = make_env()
     report = new_report()

@@ -1,5 +1,5 @@
 """Storage-tier benchmark: segments/sec through the flash path and
-vocabulary-filter skip-rate vs query sparsity (DESIGN.md §11).
+vocabulary-filter skip-rate vs query sparsity (DESIGN.md §12).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
 
@@ -29,6 +29,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs.paper_search import SearchConfig
+from repro.obs import Obs
 from repro.storage import FlashSearchSession, FlashStore
 
 
@@ -68,6 +69,13 @@ def main():
     ap.add_argument("--nnz", type=int, default=60)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--keep", help="persist the store at this path")
+    ap.add_argument("--obs-gate-pct", type=float, default=2.0,
+                    help="max tolerated warm-median overhead of the "
+                         "always-on metrics layer vs Obs.disabled()")
+    ap.add_argument("--min-cores", type=int, default=8,
+                    help="enforce the overhead gate only on hosts with "
+                         "at least this many cores (shared runners are "
+                         "too noisy for a 2%% latency gate)")
     args = ap.parse_args()
 
     cfg = SearchConfig(name="storage-bench", vocab_size=args.vocab,
@@ -155,10 +163,54 @@ def main():
          f"{st.cache_hit_rate:.3f} ({st.cache_hits}/"
          f"{st.cache_hits + st.cache_misses} slabs, "
          f"{csess.slab_cache.nbytes / 1e6:.1f} MB resident)")
+
+    # -- per-stage latency (§8): every query above ran under the
+    # process-default registry, so its stage histograms already cover
+    # the disk-streaming, skip-sweep, cold, and warm passes
+    for name, labels, kind, m in csess.obs.registry.items():
+        if name == "stage_ms" and kind == "histogram" and m.count:
+            _row(f"storage/stage_ms@{labels['stage']}", m.p50 * 1e3,
+                 f"p50={m.p50:.3f}ms p95={m.p95:.3f}ms n={m.count}")
     csess.close()
+
+    # -- tracing-off overhead gate (§8): warm-path medians with the
+    # always-on metrics layer vs Obs.disabled() (the instrumentation
+    # floor). Tracing itself is off in both — that is the shipped
+    # default whose cost the <2% budget bounds.
+    reps = max(args.repeats * 4, 12)
+    gsess = {tag: FlashSearchSession(FlashStore.open(root), cfg, obs=bundle)
+             for tag, bundle in (("on", Obs()), ("off", Obs.disabled()))}
+    for s in gsess.values():                 # compile + populate caches
+        s.search(qi, qv)
+        s.search(qi, qv)
+    ts = {"on": [], "off": []}
+    for rep in range(reps):                  # interleave + alternate order
+        for tag in (("on", "off") if rep % 2 else ("off", "on")):
+            t0 = time.perf_counter()
+            gsess[tag].search(qi, qv)
+            ts[tag].append(time.perf_counter() - t0)
+    medians = {tag: float(np.median(v)) for tag, v in ts.items()}
+    for s in gsess.values():
+        s.close()
+    overhead = (medians["on"] - medians["off"]) / medians["off"] * 100
+    cores = os.cpu_count() or 1
+    if cores >= args.min_cores:
+        ok = overhead < args.obs_gate_pct
+        verdict = "PASS" if ok else "FAIL"
+        detail = (f"{verdict} (gate <{args.obs_gate_pct:g}%: on="
+                  f"{medians['on'] * 1e3:.3f}ms off="
+                  f"{medians['off'] * 1e3:.3f}ms)")
+    else:
+        ok = True
+        detail = (f"SKIP gate: host has {cores} cores < {args.min_cores} "
+                  f"(measured on={medians['on'] * 1e3:.3f}ms "
+                  f"off={medians['off'] * 1e3:.3f}ms)")
+    _row("storage/obs_overhead_pct", 0.0, f"{overhead:.2f}% {detail}")
 
     if not args.keep:
         shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+    if not ok:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ import dataclasses
 import logging
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import List, Optional, Tuple
 
@@ -36,6 +37,7 @@ import numpy as np
 from repro.cluster.store import ShardedStore
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import SearchResult, _merge_results
+from repro.obs import NULL_SPAN, Obs, default_obs
 from repro.storage.session import FlashSearchSession, SearchStats
 from repro.storage.slabcache import CacheStats, SlabCache
 
@@ -57,8 +59,11 @@ class ClusterStats:
     failovers: int = 0
 
     def _sum(self, field: str) -> int:
-        return sum(getattr(st, field) for st in self.per_shard
-                   if st is not None)
+        # `or 0` tolerates shards reporting partial stats (e.g. a
+        # replica built with its cache disabled leaves cache fields
+        # None-ish) — the aggregate must never raise on a healthy batch
+        return sum(int(getattr(st, field, 0) or 0)
+                   for st in self.per_shard if st is not None)
 
     @property
     def segments_total(self) -> int:
@@ -105,7 +110,9 @@ class ClusterStats:
     @property
     def cache_hit_rate(self) -> float:
         """Aggregate slab-cache hit rate across every shard's probes
-        for the last batch (DESIGN.md §4.2)."""
+        for the last batch (DESIGN.md §4.2). 0.0 when no shard probed
+        the cache at all (every segment filter-skipped, or caches
+        disabled) — never a division error."""
         probes = self.cache_hits + self.cache_misses
         return self.cache_hits / probes if probes else 0.0
 
@@ -120,12 +127,17 @@ class ShardRouter:
                  prefetch_depth: int = 2,
                  max_workers: Optional[int] = None,
                  slab_cache: Optional[SlabCache] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         self.store = store
         self.cfg = cfg
         self.backend = backend
         self.use_filter = use_filter
         self.prefetch_depth = prefetch_depth
+        # one observability bundle for the whole cluster (DESIGN.md §8):
+        # shard sessions share it, so their stage histograms aggregate,
+        # while query-level accounting stays with the router
+        self.obs = obs if obs is not None else default_obs()
         # one device slab cache for the whole cluster (DESIGN.md §4.2):
         # every shard-replica session shares the byte budget, so a hot
         # shard can hold more resident slabs than a cold one
@@ -189,7 +201,8 @@ class ShardRouter:
                     backend=self.backend, use_filter=self.use_filter,
                     prefetch_depth=self.prefetch_depth,
                     slab_cache=self.slab_cache,
-                    cache_bytes=None if self.slab_cache is not None else 0)
+                    cache_bytes=None if self.slab_cache is not None else 0,
+                    obs=self.obs)
                 if self._ingest_knobs is not None:
                     sess.enable_ingest(**self._ingest_knobs)
                 self._sessions[shard][replica] = sess
@@ -225,7 +238,7 @@ class ShardRouter:
         content-divergent, so it is health-marked down — out of both
         read and write rotation until ``reset_health`` (which, as with
         read failover, is only correct after the replica directory has
-        been repaired or rebuilt; §12). If every replica fails the error
+        been repaired or rebuilt; §13). If every replica fails the error
         travels with the document and nothing is marked, mirroring the
         read path's poisoned-query rule. Returns the owner shard."""
         if self._ingest_knobs is None:
@@ -294,8 +307,8 @@ class ShardRouter:
 
     # -- scatter/gather ------------------------------------------------
     def _search_shard(self, shard: int, q_ids: np.ndarray,
-                      q_vals: np.ndarray
-                      ) -> Tuple[SearchResult, SearchStats]:
+                      q_vals: np.ndarray, span=NULL_SPAN
+                      ) -> Tuple[SearchResult, SearchStats, float]:
         """Pool-thread body: primary replica first, fail over in replica
         order. A failed attempt contributes nothing to the merge (its
         candidates are discarded whole), so retried shards can never
@@ -306,27 +319,43 @@ class ShardRouter:
         the replica. When every replica fails, the error almost
         certainly travels with the query (bad shape, poisoned input),
         so no marks are recorded and the next query gets every replica
-        back: one malformed request must never brick the cluster."""
-        last: Optional[Exception] = None
-        failed: list = []
-        for rep in range(self.store.replicas):
-            if self._down[shard][rep]:
-                continue
-            try:
-                sess = self._session(shard, rep)
-                res = sess.search(q_ids, q_vals)
-            except Exception as e:
-                last = e
-                log.warning("shard %d replica %d failed (%s); failing over",
-                            shard, rep, e)
-                failed.append(rep)
-                continue
-            for r in failed:
-                self.mark_down(shard, r)
-            return res, dataclasses.replace(sess.last_stats)
-        raise ClusterSearchError(
-            f"shard {shard}: all {self.store.replicas} replicas failed"
-        ) from last
+        back: one malformed request must never brick the cluster.
+
+        ``span`` is this shard's child of the cluster trace; each
+        replica attempt nests one level deeper, so a fail-over shows up
+        as sibling replica spans (the failed one attr'd with its
+        error). Returns the shard wall time for straggler attribution."""
+        t0 = time.perf_counter()
+        try:
+            last: Optional[Exception] = None
+            failed: list = []
+            for rep in range(self.store.replicas):
+                if self._down[shard][rep]:
+                    continue
+                rspan = span.child("replica", replica=rep)
+                try:
+                    sess = self._session(shard, rep)
+                    res = sess.search(q_ids, q_vals, _span=rspan)
+                except Exception as e:
+                    rspan.end(error=repr(e))
+                    last = e
+                    log.warning(
+                        "shard %d replica %d failed (%s); failing over",
+                        shard, rep, e)
+                    failed.append(rep)
+                    continue
+                rspan.end()
+                for r in failed:
+                    self.mark_down(shard, r)
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                span.end(replica=rep, wall_ms=round(wall_ms, 3))
+                return res, dataclasses.replace(sess.last_stats), wall_ms
+            raise ClusterSearchError(
+                f"shard {shard}: all {self.store.replicas} replicas failed"
+            ) from last
+        except BaseException as e:
+            span.end(error=repr(e))
+            raise
 
     def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
         """q_ids/q_vals ``[L, Qn]`` (pad < 0) -> global ``[L, k]`` top-k
@@ -334,29 +363,66 @@ class ShardRouter:
         shard order, so results are deterministic regardless of which
         shard finishes first."""
         self._reconcile_generation()
+        t_start = time.perf_counter()
         n = self.store.n_shards
+        trace = self.obs.tracer.start("query", surface="cluster",
+                                      L=int(q_ids.shape[0]), shards=n)
+        root = trace.root if trace is not None else NULL_SPAN
+        reg = self.obs.registry
+        h_shard = reg.histogram("cluster_shard_ms")
         stats = ClusterStats([None] * n)
-        futs = [self._pool.submit(self._search_shard, s, q_ids, q_vals)
-                for s in range(n)]
-        best: Optional[SearchResult] = None
-        err: Optional[BaseException] = None
-        for s, fut in enumerate(futs):
-            try:
-                res, st = fut.result()
-            except BaseException as e:
-                err = err or e
-                continue
-            stats.per_shard[s] = st
-            best = res if best is None else _merge_results(
-                best, res, self.cfg.top_k)
+        walls: List[Optional[float]] = [None] * n
+        try:
+            futs = [self._pool.submit(self._search_shard, s, q_ids, q_vals,
+                                      root.child("shard", shard=s))
+                    for s in range(n)]
+            # the gather span covers waiting out the stragglers plus the
+            # shard-order fold — the scatter itself lives in the shard
+            # children above
+            gspan = root.child("gather")
+            best: Optional[SearchResult] = None
+            err: Optional[BaseException] = None
+            for s, fut in enumerate(futs):
+                try:
+                    res, st, wall_ms = fut.result()
+                except BaseException as e:
+                    err = err or e
+                    continue
+                walls[s] = wall_ms
+                h_shard.observe(wall_ms)
+                stats.per_shard[s] = st
+                best = res if best is None else _merge_results(
+                    best, res, self.cfg.top_k)
+            done = [s for s, w in enumerate(walls) if w is not None]
+            if done:
+                straggler = max(done, key=lambda s: walls[s])
+                reg.histogram("cluster_straggler_ms").observe(
+                    walls[straggler])
+                root.set(straggler_shard=straggler,
+                         straggler_ms=round(walls[straggler], 3))
+            gspan.end(shards_merged=len(done))
+        finally:
+            if trace is not None:
+                trace.finish()
         stats.failovers = self.failovers
         self.last_stats = stats
         if err is not None:
             raise err
         assert best is not None          # n_shards >= 1
+        self.obs.note_query(
+            "cluster", (time.perf_counter() - t_start) * 1e3,
+            shards=n, segments_scored=stats.segments_scored,
+            cache_hits=stats.cache_hits)
+        self.obs.publish_search_stats(stats, surface="cluster")
         return best
 
     # -- introspection -------------------------------------------------
+    @property
+    def last_trace(self):
+        """Most recent sampled cluster QueryTrace (None unless the
+        shared ``obs`` samples traces)."""
+        return self.obs.tracer.last_trace
+
     @property
     def cache_stats(self) -> Optional[CacheStats]:
         """Lifetime counters of the cluster-shared slab cache, or None

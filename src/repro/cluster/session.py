@@ -28,10 +28,13 @@ class FlashClusterSession(ServingSessionMixin):
                  *, backend: str = "jnp", use_filter: bool = True,
                  prefetch_depth: int = 2,
                  max_workers: Optional[int] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 obs=None):
         """``cache_bytes`` sizes the cluster-shared device slab cache
         (DESIGN.md §4.2) every shard-replica session draws on
-        (None = default budget, 0 = disabled)."""
+        (None = default budget, 0 = disabled). ``obs`` shares one
+        observability bundle (DESIGN.md §8) across the router and every
+        shard session; None falls back to the process default."""
         if isinstance(store, str):
             store = ShardedStore.open(store)
         if store.vocab_size > cfg.vocab_size:
@@ -44,8 +47,13 @@ class FlashClusterSession(ServingSessionMixin):
         self.router = ShardRouter(
             store, cfg, backend=backend, use_filter=use_filter,
             prefetch_depth=prefetch_depth, max_workers=max_workers,
-            cache_bytes=cache_bytes)
+            cache_bytes=cache_bytes, obs=obs)
         self._init_serving()
+
+    @property
+    def obs(self):
+        """The cluster's shared observability bundle (DESIGN.md §8)."""
+        return self.router.obs
 
     # ------------------------------------------------------------------
     def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
@@ -77,6 +85,12 @@ class FlashClusterSession(ServingSessionMixin):
     @property
     def last_stats(self) -> ClusterStats:
         return self.router.last_stats
+
+    @property
+    def last_trace(self):
+        """Most recent sampled cluster QueryTrace (None unless ``obs``
+        samples traces)."""
+        return self.router.last_trace
 
     @property
     def slab_cache(self):

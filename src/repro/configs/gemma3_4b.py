@@ -3,7 +3,7 @@
 Assigned: 34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144.
 head_dim 256 (Gemma3); sliding window 1024 on local layers, every 6th layer
 global; qk-norm; tied embeddings. Qualifies for long_500k via the 5:1
-local:global pattern (DESIGN.md §8).
+local:global pattern (DESIGN.md §9).
 """
 from repro.configs.base import ModelConfig
 

@@ -18,7 +18,7 @@ class SearchConfig:
     nnz_pad: int = 128              # ELL row width (padded nnz per doc)
     query_batch: int = 1            # L in the paper's K*L kernel grid
     top_k: int = 16                 # results reported to host
-    # kernel tiling (VMEM working set; DESIGN.md §10)
+    # kernel tiling (VMEM working set; DESIGN.md §11)
     block_docs: int = 128
     block_query: int = 512
 

@@ -67,12 +67,16 @@ def _next_pow2(n: int) -> int:
 
 class PatternSearchEngine:
     def __init__(self, corpus: Optional[Corpus], cfg: SearchConfig,
-                 ctx: MeshCtx, backend: str = "jnp"):
+                 ctx: MeshCtx, backend: str = "jnp", obs=None):
         """``corpus=None`` builds a streaming-only engine (no resident
-        corpus): callers must use ``search_streaming`` / ``put_slab``."""
+        corpus): callers must use ``search_streaming`` / ``put_slab``.
+        ``obs`` (a ``repro.obs.Obs``) mirrors compile traces into the
+        shared metrics registry; None uses the process default."""
+        from repro.obs import default_obs
         self.cfg = cfg
         self.ctx = ctx
         self.backend = backend
+        self.obs = obs if obs is not None else default_obs()
         if corpus is None:
             corpus = Corpus.empty(cfg.nnz_pad)
         if corpus.ids.size and int(corpus.ids.max()) >= cfg.vocab_size:
@@ -120,6 +124,9 @@ class PatternSearchEngine:
 
         qcols_spec = P(None, tp)  # L value-columns over the model axis
         trace_keys = self._trace_keys
+        # registry handle resolved once: the jitted body's python side
+        # effect stays one list append + one counter inc per real trace
+        trace_counter = self.obs.registry.counter("engine_compile_traces")
 
         @jax.jit
         def search(ids, vals, norms, docids, q_ids, q_vals, q_norms):
@@ -127,6 +134,7 @@ class PatternSearchEngine:
             # program), never on a jit cache hit
             trace_keys.append((q_norms.shape[0], q_ids.shape[0],
                                ids.shape[0]))
+            trace_counter.inc()
             f = shard_map(
                 local_score, mesh=ctx.mesh,
                 in_specs=(P(dp, None), P(dp, None), P(dp), P(dp),

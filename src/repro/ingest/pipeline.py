@@ -47,11 +47,13 @@ import dataclasses
 import logging
 import os
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.corpus import Corpus
 from repro.ingest.memtable import MemTable
 from repro.ingest.wal import WriteAheadLog
+from repro.obs import Obs, default_obs
 from repro.storage import segment as segment_lib
 from repro.storage.store import FlashStore, SegmentEntry
 
@@ -71,7 +73,7 @@ class IngestConfig:
     folds the store's underfull tail run once it is at least this many
     segments long. ``fsync``: fsync the WAL on every append (durable to
     the platter) — off by default, matching the flash tier's
-    mmap-not-NVMe simplification (DESIGN.md §12). ``auto_compact``
+    mmap-not-NVMe simplification (DESIGN.md §13). ``auto_compact``
     starts the background compactor thread; ``compact_poll_s`` is its
     idle poll interval (seals nudge it immediately)."""
     seal_docs: int = 512
@@ -160,7 +162,8 @@ class Snapshot:
 
 
 class IngestPipeline:
-    def __init__(self, store: FlashStore, cfg: Optional[IngestConfig] = None):
+    def __init__(self, store: FlashStore, cfg: Optional[IngestConfig] = None,
+                 obs: Optional[Obs] = None):
         self.store = store
         self.cfg = cfg or IngestConfig()
         if self.cfg.seal_docs < 1:
@@ -170,8 +173,21 @@ class IngestPipeline:
         self._compact_lock = threading.Lock()   # one fold at a time
         self._closed = False
         self.stats = IngestStats()
+        # §8 registry handles, resolved once — append() touches exactly
+        # one pre-bound counter beyond its existing work
+        self.obs = obs if obs is not None else default_obs()
+        reg = self.obs.registry
+        self._c_append = reg.counter("ingest_appends")
+        self._c_seal = reg.counter("ingest_seals")
+        self._c_sealed_docs = reg.counter("ingest_docs_sealed")
+        self._c_fold = reg.counter("ingest_compactions")
+        self._c_folded = reg.counter("ingest_segments_folded")
+        self._h_seal = reg.histogram("ingest_seal_ms")
+        self._h_fold = reg.histogram("ingest_fold_ms")
         self.wal = WriteAheadLog(os.path.join(store.root, WAL_NAME),
                                  fsync=self.cfg.fsync)
+        if self.wal.repairs:
+            reg.counter("ingest_wal_repairs").inc(self.wal.repairs)
         self.memtable = MemTable()
         # replay: only records newer than what seals already made durable
         # (an empty WAL after a post-seal crash must not rewind last_seq
@@ -183,6 +199,7 @@ class IngestPipeline:
             self.memtable.add(seq, doc)
             self.stats.replayed += 1
         if self.stats.replayed:
+            reg.counter("ingest_wal_replayed").inc(self.stats.replayed)
             log.info("ingest(%s): replayed %d document(s) from the WAL",
                      store.root, self.stats.replayed)
         self._compact_wake = threading.Event()
@@ -225,6 +242,7 @@ class IngestPipeline:
             with self._state_lock:
                 self.memtable.add(seq, (int(doc_id), pairs))
             self.stats.appended += 1
+            self._c_append.inc()
             if len(self.memtable) >= self.cfg.seal_docs:
                 self._seal_locked()
         return seq
@@ -245,6 +263,7 @@ class IngestPipeline:
         docs = self.memtable.docs()
         if not docs:
             return 0
+        t0 = time.perf_counter()
         last_seq = self.memtable.last_seq
         per = self.store.manifest["docs_per_segment"]
         entries = []
@@ -274,6 +293,9 @@ class IngestPipeline:
             self.store.bump_generation()
         self.wal.reset()
         self.stats.seals += 1
+        self._c_seal.inc()
+        self._c_sealed_docs.inc(len(docs))
+        self._h_seal.observe((time.perf_counter() - t0) * 1e3)
         self._compact_wake.set()
         return len(docs)
 
@@ -352,6 +374,7 @@ class IngestPipeline:
         i, tail = self._fold_range()
         if not tail:
             return 0
+        t0 = time.perf_counter()
         per = self.store.manifest["docs_per_segment"]
         buf: List[Doc] = []
         new_entries: List[Dict] = []
@@ -407,6 +430,9 @@ class IngestPipeline:
                 pass
         self.stats.compactions += 1
         self.stats.segments_folded += len(tail)
+        self._c_fold.inc()
+        self._c_folded.inc(len(tail))
+        self._h_fold.observe((time.perf_counter() - t0) * 1e3)
         log.info("compactor(%s): folded %d tail segment(s) into %d",
                  self.store.root, len(tail), len(new_entries))
         return len(tail)

@@ -57,6 +57,10 @@ class WriteAheadLog:
         self.fsync = fsync
         self._records: List[Tuple[int, Doc]] = []
         self.last_seq = 0
+        # repairs performed while opening (torn header rewrites + torn
+        # tail truncations); the pipeline mirrors this into the §8
+        # registry so crash-recovery events are visible fleet-wide
+        self.repairs = 0
         if os.path.exists(path):
             self._records = self._scan_and_repair()
             if self._records:
@@ -78,6 +82,7 @@ class WriteAheadLog:
             # rewrite as a fresh, empty log rather than bricking ingest
             log.warning("wal(%s): torn %d-byte header; rewriting empty",
                         self.path, len(raw))
+            self.repairs += 1
             with open(self.path, "wb") as f:
                 f.write(MAGIC)
             return []
@@ -104,6 +109,7 @@ class WriteAheadLog:
         if good < len(raw):
             log.warning("wal(%s): truncating %d torn byte(s) at offset %d",
                         self.path, len(raw) - good, good)
+            self.repairs += 1
             with open(self.path, "r+b") as f:
                 f.truncate(good)
         return records

@@ -1,5 +1,5 @@
 """Pallas TPU kernel: sparse pattern matching (the paper's Key Comparator +
-Distance Accumulator, fused — DESIGN.md §10).
+Distance Accumulator, fused — DESIGN.md §11).
 
 The FPGA's sequential merge-join becomes a *match matrix* on the MXU: for a
 document ELL tile (ids, vals) and a (merged multi-query) id/value tile,

@@ -25,6 +25,13 @@ and reports appends/sec plus seal/compaction counts.
 Storage-backed targets serve hot segments from the device slab cache
 (DESIGN.md §4.2); ``--cache-mb`` sizes its byte budget (0 disables)
 and the post-run summary reports the hit rate.
+
+Observability (DESIGN.md §8): every target serves under one ``Obs``
+bundle, and the post-run summary is the same block for all of them —
+query/stage latency percentiles, cache state, compile traces, slow
+queries. ``--metrics-out PATH`` dumps the registry in Prometheus text
+format (plus ``PATH.traces.json`` when tracing); ``--trace-sample N``
+samples every Nth query into a QueryTrace and prints the last one.
 """
 import argparse
 import threading
@@ -36,6 +43,9 @@ from repro.configs.paper_search import SearchConfig
 from repro.core import corpus as corpus_lib
 from repro.core.engine import PatternSearchEngine
 from repro.distributed.meshctx import single_device_ctx
+from repro.obs import Obs
+from repro.obs.export import (render_summary, render_trace, write_metrics,
+                              write_traces)
 from repro.serve import SearchService
 
 
@@ -109,6 +119,16 @@ def main():
                     help="device slab cache budget in MB for --store/"
                          "--cluster (default: the storage tier's "
                          "default budget; 0 disables the cache)")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="write the metrics registry in Prometheus text "
+                         "format here after the run (and the retained "
+                         "trace trees to PATH.traces.json when "
+                         "--trace-sample is on)")
+    ap.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                    help="sample every Nth query into a QueryTrace "
+                         "(0 = tracing off, the default)")
+    ap.add_argument("--slow-ms", type=float, default=250.0,
+                    help="slow-query log threshold for the summary")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.ingest and not (args.store or args.cluster):
@@ -120,11 +140,14 @@ def main():
                        top_k=args.top_k)
     cache_bytes = None if args.cache_mb is None \
         else int(args.cache_mb * 1e6)
+    # one Obs bundle for the whole process: every target publishes into
+    # the same registry, so the post-run summary is target-agnostic
+    obs = Obs(trace_sample=args.trace_sample, slow_ms=args.slow_ms)
     if args.store:
         from repro.storage import FlashSearchSession, FlashStore
         store = FlashStore.open(args.store)
         searcher = FlashSearchSession(store, cfg, backend=args.backend,
-                                      cache_bytes=cache_bytes)
+                                      cache_bytes=cache_bytes, obs=obs)
         corpus = store.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] store {args.store}: {store.n_docs} docs / "
               f"{store.n_segments} segments")
@@ -132,7 +155,7 @@ def main():
         from repro.cluster import FlashClusterSession, ShardedStore
         cstore = ShardedStore.open(args.cluster)
         searcher = FlashClusterSession(cstore, cfg, backend=args.backend,
-                                       cache_bytes=cache_bytes)
+                                       cache_bytes=cache_bytes, obs=obs)
         corpus = cstore.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] cluster {args.cluster}: {cstore.n_shards} shards x "
               f"{cstore.replicas} replicas, {cstore.n_docs} docs")
@@ -142,9 +165,7 @@ def main():
         corpus = corpus_lib.synthesize(args.n_docs, args.vocab, args.avg_nnz,
                                        args.nnz_pad, seed=args.seed)
         searcher = PatternSearchEngine(corpus, cfg, single_device_ctx(),
-                                       backend=args.backend)
-    engine = searcher if isinstance(searcher, PatternSearchEngine) \
-        else getattr(searcher, "engine", None)
+                                       backend=args.backend, obs=obs)
 
     def draw_query(rng):
         qi, qv = corpus_lib.make_query(corpus, int(rng.integers(corpus.n_docs)),
@@ -221,28 +242,6 @@ def main():
         print(f"  batches {st.n_batches}  mean occupancy "
               f"{st.mean_occupancy:.2f}  flushes {st.flushes}")
         svc.close()
-    cst = getattr(searcher, "cache_stats", None)
-    if cst is not None:
-        # slab-cache summary (DESIGN.md §4.2): lifetime totals across
-        # the run, including the bucket-warming queries
-        cache = searcher.slab_cache
-        print(f"  slab cache: {cst.hit_rate * 100:.1f}% hit rate "
-              f"({cst.hits} hits / {cst.misses} misses, "
-              f"{cst.evictions} evictions, "
-              f"{cache.nbytes / 1e6:.1f} MB resident)")
-    if engine is not None:
-        print(f"  engine traces: {engine.compile_stats['n_traces']} "
-              f"{engine.compile_stats['buckets']}")
-    else:                                # cluster: one engine per shard
-        cs = searcher.compile_stats
-        agg = searcher.last_stats
-        print(f"  engine traces: {cs['n_traces']} total, "
-              f"per-shard max {cs['per_shard']}")
-        down = sum(not ok for row in searcher.router.health() for ok in row)
-        print(f"  last batch: skip rate {agg.skip_rate:.2f} "
-              f"({agg.segments_skipped}/{agg.segments_total} segments)")
-        print(f"  router lifetime: {searcher.router.failovers} replicas "
-              f"failed over, {down} out of rotation")
     if writer_thread is not None:
         writer_thread.join()                 # let a slow writer finish
         if "error" in writer_state:
@@ -261,6 +260,23 @@ def main():
         st = searcher.last_stats
         print(f"  post-ingest store: {st.docs_scored} docs scored "
               f"(snapshot incl. memtable)")
+    # unified post-run block (DESIGN.md §8.3): one summary whichever
+    # target served — resident engine, store session, or cluster
+    print(render_summary(searcher, obs))
+    if args.cluster:
+        down = sum(not ok for row in searcher.router.health() for ok in row)
+        print(f"router lifetime: {searcher.router.failovers} replicas "
+              f"failed over, {down} out of rotation")
+    if args.trace_sample:
+        print("last sampled trace:")
+        print(render_trace(getattr(searcher, "last_trace", None)
+                           or obs.tracer.last_trace))
+    if args.metrics_out:
+        write_metrics(obs, args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
+        if args.trace_sample:
+            n = write_traces(obs, args.metrics_out + ".traces.json")
+            print(f"traces  -> {args.metrics_out}.traces.json ({n} trace(s))")
     if args.store or args.cluster:
         searcher.close()
 

@@ -1,6 +1,6 @@
 """Mixture-of-Experts block with expert parallelism (EP).
 
-Dispatch is MegaBlocks-style adapted to TPU/SPMD (DESIGN.md §9):
+Dispatch is MegaBlocks-style adapted to TPU/SPMD (DESIGN.md §10):
 
   router top-k -> sort assignments by destination expert shard -> capacity
   slice -> all_to_all along the ``model`` (EP) axis -> per-expert matmul via

@@ -1,0 +1,136 @@
+"""Exporters and the shared post-run summary (DESIGN.md §8.3).
+
+Three consumers, one data source (the ``Obs`` bundle):
+
+- ``write_metrics`` — Prometheus text exposition to a file
+  (``search_serve --metrics-out``);
+- ``write_traces`` — JSON dump of the tracer's retained ``QueryTrace``
+  trees (written next to the metrics file when ``--trace-sample`` is on);
+- ``render_summary`` — the one human-readable post-run block every
+  ``search_serve`` target (single store, cluster, service-wrapped
+  engine) prints, replacing the divergent per-target code paths;
+  ``render_trace`` pretty-prints one trace tree for the console.
+
+Everything here only *reads* instruments; nothing in this module is on
+a query path.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+from . import Obs
+from .trace import QueryTrace
+
+
+def write_metrics(obs: Obs, path: str, prefix: str = "repro") -> None:
+    """Dump the registry in Prometheus text exposition format."""
+    with open(path, "w") as f:
+        f.write(obs.registry.to_prometheus(prefix=prefix))
+
+
+def write_traces(obs: Obs, path: str) -> int:
+    """Dump the tracer's retained traces as JSON; returns how many."""
+    traces = obs.tracer.export()
+    with open(path, "w") as f:
+        json.dump({"schema": "repro-traces-v1", "traces": traces}, f,
+                  indent=1)
+    return len(traces)
+
+
+def render_trace(trace: Optional[QueryTrace]) -> str:
+    """Indented timeline of one QueryTrace (start offset + duration per
+    span, then its attrs) — the README's sample dump."""
+    if trace is None:
+        return "(no trace sampled)"
+    lines: List[str] = []
+
+    def walk(node: dict, depth: int) -> None:
+        attrs = " ".join(f"{k}={v}" for k, v in node["attrs"].items())
+        lines.append(f"{'  ' * depth}{node['name']:<8} "
+                     f"+{node['start_ms']:>8.3f}ms "
+                     f"{node['dur_ms']:>9.3f}ms  {attrs}".rstrip())
+        for child in node["children"]:
+            walk(child, depth + 1)
+
+    walk(trace.to_dict()["root"], 0)
+    return "\n".join(lines)
+
+
+def _fmt_labels(labels: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+
+
+def render_summary(searcher, obs: Optional[Obs] = None) -> str:
+    """The unified post-run block: query/stage latency percentiles from
+    the registry, slab cache state, engine compile traces, and the slow
+    query ring — identical shape whichever target ``searcher`` is (the
+    resident engine, a FlashSearchSession, a FlashClusterSession, or a
+    SearchService wrapping any of them)."""
+    if obs is None:
+        obs = getattr(searcher, "obs", None)
+    lines: List[str] = ["== observability summary =="]
+    if obs is None or not getattr(obs, "enabled", False):
+        lines.append("observability disabled")
+        return "\n".join(lines)
+
+    hists = [(name, labels, m)
+             for name, labels, kind, m in obs.registry.items()
+             if kind == "histogram" and m.count]
+    for name, labels, m in hists:
+        if name != "query_ms":
+            continue
+        lines.append(
+            f"queries[{_fmt_labels(labels)}]: n={m.count} "
+            f"p50={m.p50:.2f}ms p95={m.p95:.2f}ms p99={m.p99:.2f}ms")
+    stage = [(labels.get("stage", "?"), m) for name, labels, m in hists
+             if name == "stage_ms"]
+    if stage:
+        lines.append("stage latency (ms):")
+        for sname, m in stage:
+            lines.append(f"  {sname:<14} n={m.count:<6} p50={m.p50:8.3f} "
+                         f"p95={m.p95:8.3f} p99={m.p99:8.3f}")
+    for name, labels, m in hists:
+        if name in ("serve_queue_wait_ms", "cluster_shard_ms"):
+            lines.append(
+                f"{name}[{_fmt_labels(labels)}]: n={m.count} "
+                f"p50={m.p50:.3f}ms p95={m.p95:.3f}ms p99={m.p99:.3f}ms")
+
+    # slab cache: every tier exposes the same cache_stats surface
+    cache = getattr(searcher, "slab_cache", None)
+    cstats = getattr(searcher, "cache_stats", None)
+    if cstats is not None:
+        obs.publish_cache(cache)
+        extra = (f" bytes={cache.nbytes} entries={len(cache)}"
+                 if cache is not None else "")
+        lines.append(
+            f"slab cache: hit_rate={cstats.hit_rate:.3f} "
+            f"hits={cstats.hits} misses={cstats.misses} "
+            f"evictions={cstats.evictions}"
+            f" invalidations={cstats.invalidations}{extra}")
+
+    # compile traces: one consistent accessor for every target — the
+    # engine, both session tiers, and SearchService (via its searcher)
+    target = searcher
+    cs = getattr(target, "compile_stats", None)
+    if cs is None:
+        target = getattr(searcher, "searcher", None)
+        cs = getattr(target, "compile_stats", None)
+    if cs is not None:
+        line = f"engine traces: {cs['n_traces']}"
+        if "per_shard" in cs:
+            line += f" (per-shard max: {cs['per_shard']})"
+        reg_traces = obs.registry.counter("engine_compile_traces").value
+        line += f" [registry: {reg_traces}]"
+        lines.append(line)
+
+    slow = obs.slow_query_log()
+    if slow:
+        lines.append(f"slow queries (>= {obs.slow_ms:g}ms): {len(slow)}; "
+                     "worst:")
+        for rec in slow[:3]:
+            extras = " ".join(f"{k}={v}" for k, v in rec.items()
+                              if k not in ("surface", "wall_ms", "time"))
+            lines.append(f"  {rec['wall_ms']:9.2f}ms "
+                         f"[{rec['surface']}] {extras}".rstrip())
+    return "\n".join(lines)

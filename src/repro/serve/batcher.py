@@ -27,7 +27,9 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.obs import NULL_REGISTRY, Obs
 
 _SHUTDOWN = object()
 
@@ -56,7 +58,8 @@ class BatcherStats:
 class MicroBatcher:
     def __init__(self, run_batch: Callable[[List[Any]], None], *,
                  max_batch: int = 8, max_delay_ms: float = 2.0,
-                 name: str = "micro-batcher"):
+                 name: str = "micro-batcher",
+                 obs: Optional[Obs] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if max_delay_ms < 0:
@@ -68,6 +71,19 @@ class MicroBatcher:
         self._closed = False
         self._lock = threading.Lock()
         self.stats = BatcherStats()
+        # §8 registry handles (resolved once — the scheduler loop only
+        # touches pre-bound instruments); NULL when no obs is shared
+        reg = obs.registry if obs is not None else NULL_REGISTRY
+        self._h_wait = reg.histogram("serve_queue_wait_ms")
+        self._h_occ = reg.histogram(
+            "serve_batch_occupancy",
+            buckets=(1., 2., 4., 8., 16., 32., 64., 128.))
+        self._c_flush = {reason: reg.counter("serve_flushes", reason=reason)
+                        for reason in ("full", "timeout", "drain")}
+        # queue waits (ms) of the most recent flush, written by the
+        # scheduler thread right before run_batch — run_batch bodies
+        # (e.g. SearchService) may read it to annotate traces
+        self.last_queue_waits_ms: List[float] = []
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=name)
         self._thread.start()
@@ -109,45 +125,56 @@ class MicroBatcher:
         self.close()
 
     # ------------------------------------------------------------------
-    def _flush(self, pending: List[Any], reason: str) -> None:
+    def _flush(self, pending: List[Tuple[Any, float]], reason: str) -> None:
+        """``pending`` holds (request, submit monotonic-time) pairs, so
+        the flush can attribute each request's full queue wait — from
+        submit to the moment its batch starts scoring."""
+        now = time.monotonic()
+        waits = [(now - t_sub) * 1e3 for _, t_sub in pending]
+        self.last_queue_waits_ms = waits
+        for w in waits:
+            self._h_wait.observe(w)
+        self._h_occ.observe(len(pending))
+        self._c_flush[reason].inc()
         self.stats.n_batches += 1
         self.stats.n_requests += len(pending)
         self.stats.flushes[reason] += 1
         self.stats.occupancy.append(len(pending))
+        requests = [item for item, _ in pending]
         try:
-            self._run_batch(pending)
+            self._run_batch(requests)
         except BaseException as e:
             # run_batch is expected to fail its requests' futures itself;
             # this is the backstop for errors it did not attribute
-            for r in pending:
+            for r in requests:
                 fut = getattr(r, "future", None)
                 if fut is not None and not fut.done():
                     fut.set_exception(e)
 
-    def _topup(self, pending: List[Any]) -> bool:
+    def _topup(self, pending: List[Tuple[Any, float]]) -> bool:
         """Non-blocking: absorb whatever is already queued, up to
         max_batch. An overdue flush must still coalesce the backlog that
         accumulated behind the previous batch — those requests are here
         *now*, so batching them delays nobody. True if shutdown was hit."""
         while len(pending) < self.max_batch:
             try:
-                item, _ = self._q.get_nowait()
+                item, t_sub = self._q.get_nowait()
             except queue.Empty:
                 return False
             if item is _SHUTDOWN:
                 return True
-            pending.append(item)
+            pending.append((item, t_sub))
         return False
 
     def _loop(self) -> None:
-        pending: List[Any] = []
+        pending: List[Tuple[Any, float]] = []
         deadline = 0.0
         while True:
             if not pending:
                 item, t_sub = self._q.get()  # idle: block until work arrives
                 if item is _SHUTDOWN:
                     return
-                pending.append(item)
+                pending.append((item, t_sub))
                 # the delay budget started at submit time, not dequeue:
                 # a request that already waited behind a long batch
                 # flushes promptly instead of waiting a fresh max_delay
@@ -172,7 +199,7 @@ class MicroBatcher:
                 if item is _SHUTDOWN:
                     self._flush(pending, "drain")
                     return
-                pending.append(item)
+                pending.append((item, t_sub))
             if len(pending) >= self.max_batch:
                 self._flush(pending, "full")
                 pending = []

@@ -49,9 +49,13 @@ class SearchService:
         L-bucket granularity (a power of two times the model-axis size)
         so full batches need no pad columns."""
         self.searcher = searcher
+        # share the searcher's observability bundle (every tier carries
+        # one, DESIGN.md §8) so queue-wait/occupancy histograms land in
+        # the same registry as the scoring stages
+        self.obs = getattr(searcher, "obs", None)
         self._batcher = MicroBatcher(
             self._run_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
-            name="search-service")
+            name="search-service", obs=self.obs)
 
     # ------------------------------------------------------------------
     def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
@@ -83,6 +87,12 @@ class SearchService:
         its whole corpus device-resident and has no storage tier."""
         return getattr(self.searcher, "cache_stats", None)
 
+    @property
+    def last_trace(self):
+        """The backing searcher's most recent sampled QueryTrace (the
+        batch's trace, annotated with its clients' queue waits)."""
+        return getattr(self.searcher, "last_trace", None)
+
     def close(self):
         self._batcher.close()
 
@@ -110,7 +120,17 @@ class SearchService:
             for l, r in enumerate(reqs):
                 qi[l, :r.q_ids.size] = r.q_ids
                 qv[l, :r.q_vals.size] = r.q_vals
+            before = getattr(self.searcher, "last_trace", None)
             res = self.searcher.search(qi, qv)
+            # if the tracer sampled THIS batch's query, stitch the serve
+            # stage in: the clients' queue waits become root attrs
+            after = getattr(self.searcher, "last_trace", None)
+            waits = self._batcher.last_queue_waits_ms
+            if after is not None and after is not before and waits:
+                after.root.set(
+                    batch_size=len(reqs),
+                    queue_wait_ms_max=round(max(waits), 3),
+                    queue_wait_ms_mean=round(sum(waits) / len(waits), 3))
         except BaseException as e:
             for r in reqs:
                 if not r.future.done():

@@ -31,6 +31,7 @@ counters.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import numpy as np
@@ -38,6 +39,7 @@ import numpy as np
 from repro.core import stream_format
 from repro.core.corpus import Corpus
 from repro.core.engine import _merge_results
+from repro.obs import NULL_REGISTRY, NULL_SPAN
 from repro.storage.prefetch import Prefetcher
 from repro.storage.slabcache import SlabCache, slab_key
 
@@ -155,7 +157,8 @@ class Planner:
 def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
                  q_vals: np.ndarray, *, stats,
                  cache: Optional[SlabCache] = None,
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2, span=NULL_SPAN,
+                 registry=None):
     """Run one QueryPlan: prefetch + score its slab stream, mutating
     ``stats`` (a SearchStats) as slabs resolve. The shared scan loop
     behind every scoring surface (DESIGN.md §4.1).
@@ -165,28 +168,47 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
     per-slab candidates are *folded* in manifest rank order, memtable
     last — exactly the cold scan's fold. ``_merge_results`` breaks
     score ties by fold position, so without the rank fold a partially
-    warm query could flip tied candidates relative to a cold one."""
+    warm query could flip tied candidates relative to a cold one.
+
+    ``span``/``registry`` are the §8 observability hooks: per-segment
+    child spans (slab source, decode/upload ms) hang off ``span`` when
+    a trace sampled this query (``NULL_SPAN`` otherwise — allocation-
+    free), and stage latencies land in the registry's ``stage_ms``
+    histograms. Neither touches the numeric path: scan order, fold
+    order, and every array op are identical with observability on,
+    off, or disabled."""
+    reg = NULL_REGISTRY if registry is None else registry
+    h_decode = reg.histogram("stage_ms", stage="decode")
+    h_upload = reg.histogram("stage_ms", stage="upload")
+    h_score = reg.histogram("stage_ms", stage="score")
 
     def load(step: PlanStep):
         """Prefetch-thread body: cache lookup, else mmap read -> ELL
         decode -> device upload (+ admission). At most ``prefetch_depth``
         segments are open during the scoring stream."""
+        lspan = span.child("load", segment=step.name, rank=step.rank)
         if cache is not None:
             hit = cache.get(plan.key_for(step.name))
             if hit is not None:
                 stats.cache_hits += 1
                 stats.docs_scored += hit.n_docs
                 stats.pairs_truncated += hit.n_trunc
+                lspan.end(source=SOURCE_CACHE)
                 return step, hit.slab
             stats.cache_misses += 1
+        t0 = time.perf_counter()
         seg = view.segment(step.name)
         doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
             seg.stream(), plan.nnz_pad)
         view.release(step.name)
+        t1 = time.perf_counter()
         stats.docs_scored += int(doc_ids.size)
         stats.pairs_truncated += n_trunc
         corpus = Corpus(doc_ids, ids, vals, norms)
         slab = engine.put_slab(corpus.pad_docs_to(plan.slab_docs))
+        t2 = time.perf_counter()
+        h_decode.observe((t1 - t0) * 1e3)
+        h_upload.observe((t2 - t1) * 1e3)
         # admission is gated on the LIVE store generation still matching
         # the generation the plan's segment list was captured at: once a
         # fold/compact has moved it, this segment may be a graveyard
@@ -199,9 +221,13 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
                 plan.key_for(step.name), slab,
                 n_docs=int(doc_ids.size), n_trunc=n_trunc,
                 admit=lambda: view.live_generation == plan.generation)
+        lspan.end(source=SOURCE_DISK,
+                  decode_ms=round((t1 - t0) * 1e3, 3),
+                  upload_ms=round((t2 - t1) * 1e3, 3))
         return step, slab
 
     if plan.is_empty:
+        span.set(empty=True)
         return engine.empty_result(q_ids.shape[0])
     # one fold slot per scored segment in manifest order, + the memtable
     folds: List[Optional[object]] = [None] * (len(plan.steps) + 1)
@@ -218,18 +244,36 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
     try:
         if mem_slab is not None:
             # scored while the prefetcher's worker loads the first slabs
+            sspan = span.child("score", segment="memtable")
+            t0 = time.perf_counter()
             folds[-1] = engine.search_streaming(q_ids, q_vals, [mem_slab])
+            h_score.observe((time.perf_counter() - t0) * 1e3)
+            sspan.end(source="memtable", docs=stats.memtable_docs)
         if pf is not None:
             for step, slab in pf:
+                sspan = span.child("score", segment=step.name,
+                                   rank=step.rank)
+                t0 = time.perf_counter()
                 folds[step.rank] = engine.search_streaming(
                     q_ids, q_vals, [slab])
+                h_score.observe((time.perf_counter() - t0) * 1e3)
+                sspan.end()
     finally:
         if pf is not None:
             pf.close()
+    if pf is not None:
+        wait_ms = pf.consumer_wait_s * 1e3
+        reg.histogram("stage_ms", stage="prefetch_wait").observe(wait_ms)
+        span.set(prefetch_wait_ms=round(wait_ms, 3))
+    mspan = span.child("merge")
+    t0 = time.perf_counter()
     best = None
     for r in folds:
         if r is None:
             continue
         best = r if best is None else _merge_results(best, r,
                                                      engine.cfg.top_k)
+    reg.histogram("stage_ms", stage="merge").observe(
+        (time.perf_counter() - t0) * 1e3)
+    mspan.end(folds=sum(r is not None for r in folds))
     return best

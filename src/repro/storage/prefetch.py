@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Generic, Iterable, Iterator, TypeVar
 
 T = TypeVar("T")
@@ -40,6 +41,10 @@ class Prefetcher(Generic[T, U]):
         self._stop = threading.Event()
         self._finished = False
         self._closed = False
+        # seconds the consumer spent blocked waiting on the worker: the
+        # overlap telemetry (DESIGN.md §8.2) — 0 means the prefetcher
+        # fully hid the disk+decode latency behind scoring
+        self.consumer_wait_s = 0.0
         self._worker = threading.Thread(
             target=self._run, args=(iter(items), load), daemon=True,
             name="slab-prefetch")
@@ -72,7 +77,12 @@ class Prefetcher(Generic[T, U]):
     def __next__(self) -> U:
         if self._finished:          # after _DONE or a worker error the
             raise StopIteration     # stream is over; never block again
-        v = self._q.get()
+        try:                        # fast path: slab already queued —
+            v = self._q.get_nowait()   # no clock reads on full overlap
+        except queue.Empty:
+            t0 = time.perf_counter()
+            v = self._q.get()
+            self.consumer_wait_s += time.perf_counter() - t0
         if v is _DONE:
             self._finished = True
             raise StopIteration

@@ -29,6 +29,7 @@ and background seals/compactions never perturb an in-flight query.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,6 +37,7 @@ import numpy as np
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import MeshCtx, single_device_ctx
+from repro.obs import NULL_SPAN, Obs, default_obs
 from repro.serve.session_surface import ServingSessionMixin
 from repro.storage.plan import Planner, execute_plan
 from repro.storage.slabcache import CacheStats, SlabCache
@@ -57,13 +59,18 @@ class SearchStats:
 
     @property
     def skip_rate(self) -> float:
-        return (self.segments_skipped / self.segments_total
+        return ((self.segments_skipped or 0) / self.segments_total
                 if self.segments_total else 0.0)
 
     @property
     def cache_hit_rate(self) -> float:
-        probes = self.cache_hits + self.cache_misses
-        return self.cache_hits / probes if probes else 0.0
+        # hardened against both the zero-slab query (every segment
+        # filter-skipped: zero probes -> 0.0, never a ZeroDivisionError)
+        # and None-valued fields from a shard that reported partial
+        # stats (e.g. its cache disabled) — see also ClusterStats._sum
+        hits = self.cache_hits or 0
+        probes = hits + (self.cache_misses or 0)
+        return hits / probes if probes else 0.0
 
 
 class FlashSearchSession(ServingSessionMixin):
@@ -71,22 +78,27 @@ class FlashSearchSession(ServingSessionMixin):
                  ctx: Optional[MeshCtx] = None, backend: str = "jnp",
                  use_filter: bool = True, prefetch_depth: int = 2,
                  slab_cache: Optional[SlabCache] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         """``slab_cache`` shares an existing cache (the cluster router
         passes one per-cluster instance); otherwise ``cache_bytes``
-        sizes a private one (None = default budget, 0 = disabled)."""
+        sizes a private one (None = default budget, 0 = disabled).
+        ``obs`` shares an observability bundle (DESIGN.md §8); None
+        falls back to the process-wide ``default_obs()``."""
         self.store = store
         self.cfg = cfg
         self.ctx = ctx or single_device_ctx()
         self.use_filter = use_filter
         self.prefetch_depth = prefetch_depth
+        self.obs = obs if obs is not None else default_obs()
         if store.vocab_size > cfg.vocab_size:
             # same invariant the resident engine constructor enforces:
             # out-of-range word ids would silently scatter out of bounds
             raise ValueError(
                 f"store vocab_size {store.vocab_size} exceeds "
                 f"cfg.vocab_size {cfg.vocab_size}")
-        self.engine = PatternSearchEngine(None, cfg, self.ctx, backend)
+        self.engine = PatternSearchEngine(None, cfg, self.ctx, backend,
+                                          obs=self.obs)
         self.slab_cache = SlabCache.resolve(slab_cache, cache_bytes)
         if self.slab_cache is not None:
             store.register_cache(self.slab_cache)
@@ -107,7 +119,8 @@ class FlashSearchSession(ServingSessionMixin):
         Idempotent; returns the pipeline."""
         from repro.ingest import IngestConfig, IngestPipeline
         if self._ingest is None:
-            self._ingest = IngestPipeline(self.store, IngestConfig(**knobs))
+            self._ingest = IngestPipeline(self.store, IngestConfig(**knobs),
+                                          obs=self.obs)
         return self._ingest
 
     @property
@@ -129,24 +142,65 @@ class FlashSearchSession(ServingSessionMixin):
         return self._ingest.seal() if self._ingest is not None else 0
 
     # ------------------------------------------------------------------
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+    def search(self, q_ids: np.ndarray, q_vals: np.ndarray,
+               _span=None) -> SearchResult:
         """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over the store
         (plus, with ingest enabled, the sealed deltas and memtable of an
-        atomic snapshot taken now)."""
-        if self._ingest is None:
-            return self._search_view(self.store, None, q_ids, q_vals)
-        snap = self._ingest.capture()
+        atomic snapshot taken now).
+
+        ``_span`` is the observability hook for nesting callers (the
+        cluster router hands each shard session a child span of the
+        cluster trace): when set, this query joins the parent's trace
+        and the parent owns the query-level accounting."""
+        t0 = time.perf_counter()
+        trace = None
+        if _span is None:
+            trace = self.obs.tracer.start("query", surface="store",
+                                          L=int(q_ids.shape[0]))
+            span = trace.root if trace is not None else NULL_SPAN
+        else:
+            span = _span
         try:
-            return self._search_view(snap, snap, q_ids, q_vals)
+            if self._ingest is None:
+                res = self._search_view(self.store, None, q_ids, q_vals,
+                                        span)
+            else:
+                snap = self._ingest.capture()
+                try:
+                    res = self._search_view(snap, snap, q_ids, q_vals,
+                                            span)
+                finally:
+                    snap.close()
         finally:
-            snap.close()
+            if trace is not None:
+                trace.finish()
+        if _span is None:
+            # nested (per-shard) calls skip this: the router publishes
+            # the cluster aggregate, so counting here would double it
+            st = self.last_stats
+            self.obs.note_query(
+                "store", (time.perf_counter() - t0) * 1e3,
+                segments_scored=st.segments_scored,
+                segments_skipped=st.segments_skipped,
+                cache_hits=st.cache_hits, docs_scored=st.docs_scored)
+            self.obs.publish_search_stats(st, surface="store")
+        return res
 
     def _search_view(self, view, snap, q_ids: np.ndarray,
-                     q_vals: np.ndarray) -> SearchResult:
+                     q_vals: np.ndarray, span=NULL_SPAN) -> SearchResult:
         """Score one segment view (a FlashStore or an ingest Snapshot;
         ``snap`` carries the memtable when the view is a snapshot):
         plan, then run the shared executor (DESIGN.md §4.1)."""
+        reg = self.obs.registry
+        pspan = span.child("plan")
+        t0 = time.perf_counter()
         plan = self._planner.plan(view, q_ids, snap)
+        reg.histogram("stage_ms", stage="plan").observe(
+            (time.perf_counter() - t0) * 1e3)
+        pspan.end(segments_total=plan.segments_total,
+                  skipped=len(plan.skipped), cached=plan.n_cached,
+                  disk=plan.n_disk,
+                  skipped_names=plan.skipped[:16])
         self._slab_docs = plan.slab_docs
         stats = SearchStats(segments_total=plan.segments_total,
                             segments_skipped=len(plan.skipped),
@@ -154,13 +208,26 @@ class FlashSearchSession(ServingSessionMixin):
         self.last_stats = stats
         return execute_plan(self.engine, view, plan, q_ids, q_vals,
                             stats=stats, cache=self.slab_cache,
-                            prefetch_depth=self.prefetch_depth)
+                            prefetch_depth=self.prefetch_depth,
+                            span=span, registry=reg)
 
     @property
     def cache_stats(self) -> Optional[CacheStats]:
         """Lifetime slab-cache counters (shared across every sharer of
         the cache), or None when the cache is disabled."""
         return self.slab_cache.stats if self.slab_cache is not None else None
+
+    @property
+    def compile_stats(self) -> dict:
+        """The engine's compile-cache telemetry, surfaced here so every
+        search_serve target prints one consistent block (DESIGN.md §8.3)."""
+        return self.engine.compile_stats
+
+    @property
+    def last_trace(self):
+        """Most recent sampled QueryTrace (None unless the session's
+        ``obs`` was built with ``trace_sample`` > 0)."""
+        return self.obs.tracer.last_trace
 
     def _close_resources(self):
         # service/submit/close lifecycle comes from ServingSessionMixin,

@@ -1,0 +1,210 @@
+"""Metrics registry unit tests (DESIGN.md §8.1): instrument semantics,
+quantile estimation, Prometheus rendering, thread safety under a
+16-thread hammer, and the zero-slab stats regressions the registry
+retrofit fixed (SearchStats.cache_hit_rate, ClusterStats with missing
+per-shard stats)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster.router import ClusterStats
+from repro.obs import (DEFAULT_MS_BUCKETS, MetricsRegistry, NULL_METRIC,
+                       NULL_REGISTRY, Obs)
+from repro.obs.metrics import Histogram
+from repro.storage.session import SearchStats
+
+
+# -- instruments -------------------------------------------------------
+
+def test_counter_and_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", surface="store")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("resident_bytes")
+    g.set(100)
+    g.inc(-25)
+    assert g.value == 75
+
+
+def test_registry_returns_same_instrument_for_same_key():
+    reg = MetricsRegistry()
+    assert reg.counter("x", a="1") is reg.counter("x", a="1")
+    assert reg.counter("x", a="1") is not reg.counter("x", a="2")
+    with pytest.raises(TypeError):
+        reg.histogram("x", a="1")        # same key, different kind
+
+
+def test_histogram_percentiles_interpolate():
+    h = Histogram(buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in np.linspace(0.1, 7.9, 200):
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 200
+    # uniform on (0.1, 7.9): p50 ~ 4, p95 ~ 7.5 — the fixed-bucket
+    # estimate must land within one bucket width
+    assert abs(s["p50"] - 4.0) < 2.0
+    assert abs(s["p95"] - 7.5) < 4.0
+    assert s["p50"] <= s["p95"] <= s["p99"]
+
+
+def test_histogram_single_observation_is_exact():
+    h = Histogram(buckets=DEFAULT_MS_BUCKETS)
+    h.observe(3.7)
+    # min/max tightening: one sample pins every quantile to itself
+    assert h.p50 == pytest.approx(3.7)
+    assert h.p99 == pytest.approx(3.7)
+
+
+def test_histogram_overflow_bucket():
+    h = Histogram(buckets=(1.0, 10.0))
+    h.observe(5000.0)
+    h.observe(7000.0)
+    assert h.count == 2
+    assert h.buckets()[-1] == (float("inf"), 2)
+    assert h.p50 >= 5000.0
+
+
+def test_null_registry_is_inert():
+    c = NULL_REGISTRY.counter("whatever", x="y")
+    c.inc(10)
+    assert c is NULL_METRIC
+    NULL_REGISTRY.histogram("h").observe(1.0)
+    assert list(NULL_REGISTRY.items()) == []
+
+
+def test_prometheus_rendering():
+    reg = MetricsRegistry()
+    reg.counter("queries_total", surface="store").inc(3)
+    h = reg.histogram("stage_ms", stage="plan", buckets=(1.0, 10.0))
+    h.observe(0.5)
+    h.observe(20.0)
+    text = reg.to_prometheus(prefix="repro")
+    assert "# TYPE repro_queries_total counter" in text
+    assert 'repro_queries_total{surface="store"} 3' in text
+    assert 'repro_stage_ms_bucket{le="1",stage="plan"} 1' in text
+    assert 'repro_stage_ms_bucket{le="+Inf",stage="plan"} 2' in text
+    assert "repro_stage_ms_count" in text
+
+
+# -- concurrency: counters must not drop increments --------------------
+
+def test_sixteen_thread_hammer_matches_serial_totals():
+    reg = MetricsRegistry()
+    n_threads, per_thread = 16, 2000
+    c = reg.counter("hammer_total")
+    h = reg.histogram("hammer_ms", buckets=(1.0, 10.0, 100.0))
+
+    def worker(tid):
+        for i in range(per_thread):
+            c.inc()
+            h.observe(float(i % 50))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+    assert h.count == n_threads * per_thread
+    # the bucket counts must also conserve every observation
+    assert h.buckets()[-1][1] == n_threads * per_thread
+
+
+def test_concurrent_registry_lookup_returns_one_instrument():
+    reg = MetricsRegistry()
+    got = []
+
+    def worker():
+        got.append(reg.counter("shared", k="v"))
+
+    threads = [threading.Thread(target=worker) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(c is got[0] for c in got)
+
+
+# -- stats regressions (satellite: zero-slab / None propagation) -------
+
+def test_cache_hit_rate_zero_slab_query_is_zero():
+    """A query that skips every segment touches no slabs: the hit rate
+    must read 0.0, not raise ZeroDivisionError."""
+    st = SearchStats(segments_total=4, segments_skipped=4)
+    assert st.cache_hit_rate == 0.0
+    assert st.skip_rate == 1.0
+
+
+def test_cache_hit_rate_tolerates_none_fields():
+    st = SearchStats(segments_total=2, cache_hits=None, cache_misses=None)
+    assert st.cache_hit_rate == 0.0
+    st2 = SearchStats(segments_total=2, cache_hits=3, cache_misses=None)
+    assert st2.cache_hit_rate == 1.0
+
+
+def test_cluster_stats_tolerates_none_shard_stats():
+    """A shard that served from a cache-less replica reports None stats;
+    the aggregate must skip it instead of raising."""
+    a = SearchStats(segments_total=2, segments_scored=2, docs_scored=10,
+                    cache_hits=2, cache_misses=0)
+    agg = ClusterStats(per_shard=[a, None])
+    assert agg.segments_total == 2
+    assert agg.docs_scored == 10
+    assert agg.cache_hits == 2
+    b = SearchStats(segments_total=1, segments_scored=1, docs_scored=5,
+                    cache_hits=None, cache_misses=None)
+    agg2 = ClusterStats(per_shard=[a, b])
+    assert agg2.docs_scored == 15
+    assert agg2.cache_hits == 2
+
+
+# -- the Obs bundle ----------------------------------------------------
+
+def test_note_query_and_slow_query_log():
+    obs = Obs(slow_ms=10.0)
+    obs.note_query("store", 3.0, docs=5)
+    obs.note_query("store", 50.0, docs=7)
+    obs.note_query("cluster", 25.0, shards=2)
+    slow = obs.slow_query_log()
+    assert [r["wall_ms"] for r in slow] == [50.0, 25.0]
+    assert slow[0]["docs"] == 7
+    assert obs.slow_query_log(threshold_ms=0.0)[-1]["wall_ms"] == 3.0
+    hist = obs.registry.histogram("query_ms", surface="store")
+    assert hist.count == 2
+
+
+def test_publish_search_stats_accumulates_counters():
+    obs = Obs()
+    st = SearchStats(segments_total=3, segments_scored=2, segments_skipped=1,
+                     docs_scored=100, cache_hits=2, cache_misses=0)
+    obs.publish_search_stats(st, surface="store")
+    obs.publish_search_stats(st, surface="store")
+    reg = obs.registry
+    assert reg.counter("queries_total", surface="store").value == 2
+    assert reg.counter("docs_scored_total", surface="store").value == 200
+    assert reg.counter("segments_skipped_total", surface="store").value == 2
+
+
+def test_disabled_obs_records_nothing():
+    obs = Obs.disabled()
+    obs.note_query("store", 9999.0)
+    obs.publish_search_stats(
+        SearchStats(segments_total=1, docs_scored=1), surface="store")
+    assert obs.slow_query_log(threshold_ms=0.0) == []
+    assert list(obs.registry.items()) == []
+
+
+def test_registry_to_dict_snapshot():
+    obs = Obs()
+    obs.registry.counter("c", surface="x").inc(2)
+    obs.registry.gauge("g").set(7)
+    obs.registry.histogram("h").observe(1.0)
+    d = obs.registry.to_dict()
+    assert d["c"] == [{"labels": {"surface": "x"}, "value": 2}]
+    assert d["g"][0]["value"] == 7.0
+    assert d["h"][0]["count"] == 1
+    assert d["h"][0]["p50"] == 1.0

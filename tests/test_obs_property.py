@@ -1,0 +1,92 @@
+"""Property test (ISSUE acceptance): trace span trees stay well-formed
+— every span ended, every child interval nested inside its parent —
+under ANY random interleaving of append / seal / compact / search on a
+live ingesting session with tracing at sample_every=1, and the registry
+counters keep exact query accounting throughout (DESIGN.md §8.2).
+
+Runs under real hypothesis when installed and under the
+``tests/hypothesis_compat`` random-sampling fallback otherwise."""
+import shutil
+import tempfile
+
+import numpy as np
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.obs import Obs
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+_CORPUS = corpus_lib.synthesize(80, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                CFG.nnz_pad, seed=23)
+_POOL = _corpus_docs(_CORPUS)
+
+# append-heavy so the structural ops see a growing store; every search
+# is a trace + counter checkpoint
+_OP = st.sampled_from(["append", "append", "append", "append",
+                       "seal", "compact", "search"])
+
+
+def _probe(pairs):
+    qi = np.full((1, CFG.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, CFG.max_query_nnz), np.float32)
+    for j, (w, c) in enumerate(pairs[:CFG.max_query_nnz]):
+        qi[0, j] = w
+        qv[0, j] = c
+    return qi, qv
+
+
+@settings(max_examples=6, deadline=None)
+@given(ops=st.lists(_OP, min_size=3, max_size=24))
+def test_traces_stay_well_formed_under_interleavings(ops):
+    tmp = tempfile.mkdtemp(prefix="obs-prop-")
+    obs = Obs(trace_sample=1)
+    sess = None
+    try:
+        store = FlashStore.create(f"{tmp}/live", vocab_size=CFG.vocab_size,
+                                  docs_per_segment=8)
+        sess = FlashSearchSession(store, CFG, obs=obs)
+        sess.enable_ingest(seal_docs=6, fold_min_segments=2,
+                           auto_compact=False)
+        appended = []
+        searches = 0
+        nxt = iter(_POOL)
+        for op in ops + ["search"]:          # always verify the end state
+            if op == "append":
+                d, p = next(nxt)
+                sess.append(d, p)
+                appended.append((d, p))
+            elif op == "seal":
+                sess.flush_ingest()
+            elif op == "compact":
+                sess.ingest.compact_once()
+            else:
+                probe = appended[-1] if appended else _POOL[0]
+                qi, qv = _probe(probe[1])
+                sess.search(qi, qv)
+                searches += 1
+                tr = sess.last_trace
+                assert tr is not None, "sample_every=1 must trace all"
+                assert tr.well_formed(), \
+                    f"malformed trace after ops {ops!r}"
+                assert tr.root.t1 is not None      # finished at return
+
+        # every retained trace — not just the last — is well-formed
+        assert all(t.well_formed() for t in obs.tracer.recent)
+        # exact accounting: one trace and one counted query per search
+        reg = obs.registry
+        assert reg.counter("queries_total", surface="store").value \
+            == searches
+        assert reg.histogram("query_ms", surface="store").count == searches
+        # ingest instrumentation conserves documents: sealed + memtable
+        # equals appended (counters are cumulative and single-writer)
+        sealed = reg.counter("ingest_docs_sealed").value
+        assert sealed + len(sess.ingest.memtable) == len(appended)
+        assert reg.counter("ingest_appends").value == len(appended)
+    finally:
+        if sess is not None:
+            sess.close()
+        shutil.rmtree(tmp, ignore_errors=True)

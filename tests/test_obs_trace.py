@@ -1,0 +1,257 @@
+"""Per-query trace spans end-to-end (DESIGN.md §8.2): span-tree
+mechanics, sampling, the store and cluster request paths (per-shard
+subtrees, straggler attribution), the exporters, and the differential
+acceptance gate — tracing on vs off must be bit-identical on every
+scoring surface."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster import FlashClusterSession
+from repro.cluster.store import build_sharded_store
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.obs import NULL_SPAN, Obs, QueryTrace, Tracer
+from repro.obs.export import (render_summary, render_trace, write_metrics,
+                              write_traces)
+from repro.serve import SearchService
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    corpus = corpus_lib.synthesize(400, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                   CFG.nnz_pad, seed=11)
+    root = str(tmp_path_factory.mktemp("obs") / "store")
+    store = FlashStore.create(root, vocab_size=CFG.vocab_size,
+                              docs_per_segment=100)
+    store.append_corpus(corpus)
+    return corpus, root
+
+
+def _query(corpus, idx=7):
+    qi, qv = corpus_lib.make_query(corpus, idx, CFG.max_query_nnz)
+    return qi[None], qv[None]
+
+
+def _names(span):
+    return [c.name for c in span.children]
+
+
+# -- span mechanics ----------------------------------------------------
+
+def test_span_tree_nests_and_is_well_formed():
+    tr = QueryTrace("query", surface="test")
+    with tr.root.child("plan") as p:
+        p.set(segments=3)
+    c = tr.root.child("score", segment="s0")
+    c.end(docs=10)
+    tr.finish()
+    assert tr.well_formed()
+    assert _names(tr.root) == ["plan", "score"]
+    assert tr.root.children[1].attrs == {"segment": "s0", "docs": 10}
+    d = tr.to_dict()["root"]
+    assert d["start_ms"] == 0.0
+    assert all(ch["start_ms"] >= 0 for ch in d["children"])
+
+
+def test_unended_child_is_not_well_formed():
+    tr = QueryTrace("query")
+    tr.root.child("dangling")                # never ended
+    tr.finish()
+    assert not tr.well_formed()
+
+
+def test_null_span_is_self_propagating():
+    s = NULL_SPAN.child("anything", deep=1).child("deeper")
+    assert s is NULL_SPAN
+    assert s.set(x=1) is NULL_SPAN
+    assert s.to_dict() == {}
+
+
+def test_tracer_sampling_cadence():
+    t = Tracer(sample_every=0)
+    assert t.start("query") is None          # off by default
+    t2 = Tracer(sample_every=2)
+    picks = [t2.start("query") is not None for _ in range(6)]
+    assert picks == [True, False, True, False, True, False]
+    tr = t2.start("query")
+    tr.finish()
+    assert t2.last_trace is tr
+    assert list(t2.recent)[-1] is tr
+
+
+# -- store surface -----------------------------------------------------
+
+def test_store_query_trace_structure(setup):
+    corpus, root = setup
+    obs = Obs(trace_sample=1)
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+    tr = sess.last_trace
+    assert tr is not None and tr.well_formed()
+    assert tr.root.attrs["surface"] == "store"
+    kids = _names(tr.root)
+    assert kids[0] == "plan"
+    assert "merge" in kids
+    loads = [c for c in tr.root.children if c.name == "load"]
+    scores = [c for c in tr.root.children if c.name == "score"]
+    assert loads and scores
+    # cold first query: every load came from disk with decode/upload ms
+    assert all(c.attrs["source"] == "disk" for c in loads)
+    assert all(c.attrs["decode_ms"] >= 0 for c in loads)
+    # warm second query: same segments now served from the slab cache
+    sess.search(qi, qv)
+    warm = [c for c in sess.last_trace.root.children if c.name == "load"]
+    assert all(c.attrs["source"] == "cache" for c in warm)
+    assert sess.last_trace.well_formed()
+    sess.close()
+
+
+def test_store_stage_histograms_populated(setup):
+    corpus, root = setup
+    obs = Obs()
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+    stages = {labels["stage"] for name, labels, kind, m in
+              obs.registry.items() if name == "stage_ms" and m.count}
+    assert {"plan", "decode", "upload", "score", "merge"} <= stages
+    assert obs.registry.counter("queries_total", surface="store").value == 1
+    sess.close()
+
+
+# -- cluster surface ---------------------------------------------------
+
+def test_cluster_trace_has_per_shard_subtrees(setup, tmp_path):
+    corpus, _ = setup
+    cl = build_sharded_store(str(tmp_path / "c"), _corpus_docs(corpus),
+                             n_shards=2, replicas=1,
+                             vocab_size=CFG.vocab_size, docs_per_segment=100)
+    obs = Obs(trace_sample=1)
+    sess = FlashClusterSession(cl, CFG, obs=obs)
+    qi, qv = _query(corpus)
+    r1 = sess.search(qi, qv)
+    tr = sess.last_trace
+    assert tr is not None and tr.well_formed()
+    assert tr.root.attrs["surface"] == "cluster"
+    shards = [c for c in tr.root.children if c.name == "shard"]
+    assert len(shards) == 2
+    for sh in shards:
+        reps = [c for c in sh.children if c.name == "replica"]
+        assert len(reps) == 1
+        inner = _names(reps[0])
+        assert inner[0] == "plan" and "merge" in inner
+        assert "score" in inner
+    gathers = [c for c in tr.root.children if c.name == "gather"]
+    assert len(gathers) == 1
+    assert tr.root.attrs["straggler_shard"] in (0, 1)
+    assert tr.root.attrs["straggler_ms"] >= 0
+    # per-query accounting lands once, on the cluster surface — the
+    # shard sessions joined the parent trace instead of double counting
+    assert obs.registry.counter("queries_total", surface="cluster").value == 1
+    assert obs.registry.counter("queries_total", surface="store").value == 0
+    # differential: same cluster served without observability
+    sess2 = FlashClusterSession(cl, CFG, obs=Obs.disabled())
+    r2 = sess2.search(qi, qv)
+    np.testing.assert_array_equal(r1.doc_ids, r2.doc_ids)
+    np.testing.assert_array_equal(r1.scores, r2.scores)
+    sess.close()
+
+
+# -- differential: tracing on must not change results ------------------
+
+def test_store_results_bit_identical_tracing_on_vs_off(setup):
+    corpus, root = setup
+    on = FlashSearchSession(FlashStore.open(root), CFG,
+                            obs=Obs(trace_sample=1))
+    off = FlashSearchSession(FlashStore.open(root), CFG, obs=Obs.disabled())
+    for idx in (0, 123, 399):
+        qi, qv = _query(corpus, idx)
+        a, b = on.search(qi, qv), off.search(qi, qv)
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    assert on.last_trace is not None
+    on.close()
+    off.close()
+
+
+def test_engine_results_bit_identical_with_obs(setup):
+    corpus, _ = setup
+    qi, qv = _query(corpus, 42)
+    e1 = PatternSearchEngine(corpus, CFG, single_device_ctx(),
+                             obs=Obs(trace_sample=1))
+    e2 = PatternSearchEngine(corpus, CFG, single_device_ctx(),
+                             obs=Obs.disabled())
+    a, b = e1.search(qi, qv), e2.search(qi, qv)
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+    np.testing.assert_array_equal(a.scores, b.scores)
+    assert e1.obs.registry.counter("engine_compile_traces").value >= 1
+
+
+def test_service_results_bit_identical_and_batch_annotated(setup):
+    corpus, root = setup
+    qi, qv = _query(corpus, 55)
+    got = {}
+    for tag, obs in (("on", Obs(trace_sample=1)), ("off", Obs.disabled())):
+        sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+        svc = SearchService(sess, max_batch=2, max_delay_ms=1.0)
+        futs = [svc.submit(qi[0], qv[0]) for _ in range(4)]
+        got[tag] = [f.result() for f in futs]
+        if tag == "on":
+            tr = svc.last_trace
+            assert tr is not None and tr.well_formed()
+            assert "batch_size" in tr.root.attrs
+            assert tr.root.attrs["queue_wait_ms_max"] >= 0
+        svc.close()
+        sess.close()
+    for a, b in zip(got["on"], got["off"]):
+        np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+# -- exporters ---------------------------------------------------------
+
+def test_exporters_write_metrics_and_traces(setup, tmp_path):
+    corpus, root = setup
+    obs = Obs(trace_sample=1, slow_ms=0.0)
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+
+    mpath = str(tmp_path / "metrics.prom")
+    write_metrics(obs, mpath)
+    text = open(mpath).read()
+    assert "# TYPE repro_query_ms histogram" in text
+    assert 'repro_queries_total{surface="store"} 1' in text
+
+    tpath = str(tmp_path / "traces.json")
+    assert write_traces(obs, tpath) == 1
+    dump = json.load(open(tpath))
+    assert dump["schema"] == "repro-traces-v1"
+    root_node = dump["traces"][0]["root"]
+    assert root_node["name"] == "query"
+    assert any(c["name"] == "plan" for c in root_node["children"])
+
+    rendered = render_trace(sess.last_trace)
+    assert rendered.splitlines()[0].startswith("query")
+    assert "plan" in rendered
+
+    summary = render_summary(sess)
+    assert "== observability summary ==" in summary
+    assert "stage latency" in summary
+    assert "slow queries" in summary
+    sess.close()
+
+
+def test_render_summary_disabled_degrades():
+    class Bare:
+        pass
+    assert "disabled" in render_summary(Bare(), Obs.disabled())
