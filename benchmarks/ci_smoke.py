@@ -1,7 +1,7 @@
 """CI perf-smoke driver: run the storage, serving, and ingest benchmarks
 in a tiny configuration, collect their CSV rows, and write them to a
 single ``BENCH_ci.json`` that CI uploads as a workflow artifact
-(DESIGN.md §12).
+(DESIGN.md §13).
 
 The point is the *trajectory*: every CI run leaves one machine-readable
 snapshot of the perf counters — including the storage bench's
@@ -18,9 +18,11 @@ reuses ``parse_rows`` / ``run_script`` / ``new_report`` from here.
 
 ``--check PATH`` validates an existing report instead of running the
 benches: the storage bench must have exported its per-stage latency
-rows and a passing (or explicitly skipped) tracing-off overhead gate
-(DESIGN.md §8) — CI's perf-smoke job runs this right after the smoke
-pass so a silently-dropped observability row fails the build.
+rows, a passing (or explicitly skipped) tracing-off overhead gate
+(DESIGN.md §8), and the fused-backend cold/warm rows with a
+non-failing fused-vs-unfused speedup gate (DESIGN.md §12) — CI's
+perf-smoke job runs this right after the smoke pass so a
+silently-dropped row fails the build.
 
 Usage: PYTHONPATH=src python benchmarks/ci_smoke.py [--out BENCH_ci.json]
        PYTHONPATH=src python benchmarks/ci_smoke.py --check BENCH_ci.json
@@ -140,6 +142,18 @@ def check_report(path: str) -> list:
         problems.append("missing storage/obs_overhead_pct row")
     elif "FAIL" in gate["derived"]:
         problems.append(f"overhead gate failed: {gate['derived']}")
+    # fused-backend rows (DESIGN.md §12): the cold/warm split must be in
+    # every snapshot, and the fused-vs-unfused speedup gate — which
+    # SKIPs off-TPU or below the core floor — must not read FAIL
+    for name in ("storage/fused_cold_query_ms",
+                 "storage/fused_warm_query_ms"):
+        if name not in rows:
+            problems.append(f"missing {name} row")
+    fgate = rows.get("storage/fused_vs_unfused_speedup")
+    if fgate is None:
+        problems.append("missing storage/fused_vs_unfused_speedup row")
+    elif "FAIL" in fgate["derived"]:
+        problems.append(f"fused speedup gate failed: {fgate['derived']}")
     return problems
 
 

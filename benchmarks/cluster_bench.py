@@ -1,5 +1,5 @@
 """Cluster-tier benchmark: shard-count sweep over one corpus behind the
-scatter/gather router (DESIGN.md §5, §12).
+scatter/gather router (DESIGN.md §5, §13).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
 

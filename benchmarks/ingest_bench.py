@@ -1,5 +1,5 @@
 """Ingestion-tier benchmark: write-path throughput and the cost of
-searching under live writes (DESIGN.md §12).
+searching under live writes (DESIGN.md §13).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
 

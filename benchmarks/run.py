@@ -7,7 +7,7 @@ paper_projection.py, with the paper's own figures for comparison. See
 EXPERIMENTS.md §Paper-claims).
 
 ``--suite`` reaches every tier bench from one command and ``--json``
-emits one combined BENCH report (the ci_smoke schema, DESIGN.md §12):
+emits one combined BENCH report (the ci_smoke schema, DESIGN.md §13):
 
     # every suite, full configs, one combined json
     PYTHONPATH=src python benchmarks/run.py --suite all --json BENCH.json

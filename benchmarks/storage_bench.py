@@ -1,5 +1,5 @@
 """Storage-tier benchmark: segments/sec through the flash path and
-vocabulary-filter skip-rate vs query sparsity (DESIGN.md §12).
+vocabulary-filter skip-rate vs query sparsity (DESIGN.md §13).
 
 Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
 
@@ -26,6 +26,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 
 from repro.configs.paper_search import SearchConfig
@@ -76,6 +77,11 @@ def main():
                     help="enforce the overhead gate only on hosts with "
                          "at least this many cores (shared runners are "
                          "too noisy for a 2%% latency gate)")
+    ap.add_argument("--fused-gate-speedup", type=float, default=1.0,
+                    help="min fused-vs-unfused warm speedup; enforced "
+                         "only on TPU (CPU runs the fused kernel in "
+                         "interpret mode — correct, not fast) and with "
+                         "at least --min-cores cores")
     args = ap.parse_args()
 
     cfg = SearchConfig(name="storage-bench", vocab_size=args.vocab,
@@ -164,6 +170,51 @@ def main():
          f"{st.cache_hits + st.cache_misses} slabs, "
          f"{csess.slab_cache.nbytes / 1e6:.1f} MB resident)")
 
+    # -- fused decode+match+top-k backend (§12): cold/warm over the
+    # same store, bit-identity vs the staged path, and the
+    # fused-vs-unfused warm speedup gate. The gate is a performance
+    # statement, so it only votes on compiled TPU programs; on CPU the
+    # same kernel runs in Pallas interpret mode — the correctness half
+    # (bit-identical results) is asserted unconditionally.
+    ell_res = csess.search(qi, qv)
+    fsess = FlashSearchSession(FlashStore.open(root), cfg,
+                               backend="pallas_fused")
+    fres = fsess.search(qi, qv)              # warmup / compile
+    np.testing.assert_array_equal(fres.doc_ids, ell_res.doc_ids)
+    np.testing.assert_array_equal(fres.scores, ell_res.scores)
+    fcold, fwarm = [], []
+    for _ in range(max(args.repeats, 2)):
+        fsess.slab_cache.clear()
+        t0 = time.perf_counter()
+        fsess.search(qi, qv)
+        fcold.append(time.perf_counter() - t0)
+    fsess.search(qi, qv)                     # repopulate; now warm
+    for _ in range(max(args.repeats, 2)):
+        t0 = time.perf_counter()
+        fsess.search(qi, qv)
+        fwarm.append(time.perf_counter() - t0)
+    fsess.close()
+    fcold_ms, fwarm_ms = np.mean(fcold) * 1e3, np.mean(fwarm) * 1e3
+    _row("storage/fused_cold_query_ms", np.mean(fcold) * 1e6,
+         f"{fcold_ms:.2f}")
+    _row("storage/fused_warm_query_ms", np.mean(fwarm) * 1e6,
+         f"{fwarm_ms:.2f} (bit-identical to the staged warm result)")
+    speedup = warm_ms / fwarm_ms
+    cores = os.cpu_count() or 1
+    on_tpu = jax.default_backend() == "tpu"
+    if cores >= args.min_cores and on_tpu:
+        fused_ok = speedup >= args.fused_gate_speedup
+        fdetail = (f"{'PASS' if fused_ok else 'FAIL'} (gate >="
+                   f"{args.fused_gate_speedup:g}x: fused={fwarm_ms:.2f}ms "
+                   f"staged={warm_ms:.2f}ms)")
+    else:
+        fused_ok = True
+        why = (f"{jax.default_backend()} backend runs the fused kernel in "
+               "interpret mode" if not on_tpu
+               else f"host has {cores} cores < {args.min_cores}")
+        fdetail = f"SKIP gate: {why}"
+    _row("storage/fused_vs_unfused_speedup", 0.0, f"{speedup:.2f}x {fdetail}")
+
     # -- per-stage latency (§8): every query above ran under the
     # process-default registry, so its stage histograms already cover
     # the disk-streaming, skip-sweep, cold, and warm passes
@@ -209,7 +260,7 @@ def main():
 
     if not args.keep:
         shutil.rmtree(os.path.dirname(root), ignore_errors=True)
-    if not ok:
+    if not (ok and fused_ok):
         sys.exit(1)
 
 

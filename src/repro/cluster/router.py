@@ -238,7 +238,7 @@ class ShardRouter:
         content-divergent, so it is health-marked down — out of both
         read and write rotation until ``reset_health`` (which, as with
         read failover, is only correct after the replica directory has
-        been repaired or rebuilt; §13). If every replica fails the error
+        been repaired or rebuilt; §14). If every replica fails the error
         travels with the document and nothing is marked, mirroring the
         read path's poisoned-query rule. Returns the owner shard."""
         if self._ingest_knobs is None:
@@ -425,9 +425,12 @@ class ShardRouter:
 
     @property
     def cache_stats(self) -> Optional[CacheStats]:
-        """Lifetime counters of the cluster-shared slab cache, or None
-        when the cache is disabled."""
-        return self.slab_cache.stats if self.slab_cache is not None else None
+        """Locked snapshot of the cluster-shared slab cache's lifetime
+        counters, or None when the cache is disabled. Shard sessions
+        mutate the counters concurrently under the cache lock, so the
+        lock-free live object could pair mid-flight hits/misses."""
+        return (self.slab_cache.stats_snapshot()
+                if self.slab_cache is not None else None)
 
     def compile_counts(self) -> List[List[int]]:
         """Engine traces per *opened* (shard, replica) session — the

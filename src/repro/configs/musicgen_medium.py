@@ -5,7 +5,7 @@ head_dim 64; 2-matrix GELU FFN (MusicGen uses a plain transformer MLP).
 The EnCodec frontend is a STUB per the assignment: input_specs() provides
 precomputed frame embeddings; the backbone predicts codec tokens (vocab
 2048). Single-stream channel (delay-pattern interleave is a data-layout
-concern outside the backbone — DESIGN.md §13).
+concern outside the backbone — DESIGN.md §14).
 """
 from repro.configs.base import ModelConfig
 

@@ -3,7 +3,7 @@
 Assigned: 38L d_model=2048 32H (GQA kv=32 = MHA) d_ff=8192 vocab=32000,
 ssm_state=64. The 38 layers are Mamba2 blocks (no per-layer FFN); one
 *shared* attention+MLP block (d_ff 8192) is applied every 6th layer with
-shared weights (per-application LoRA deltas omitted — DESIGN.md §13).
+shared weights (per-application LoRA deltas omitted — DESIGN.md §14).
 """
 from repro.configs.base import ModelConfig
 

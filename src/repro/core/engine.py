@@ -37,9 +37,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.paper_search import SearchConfig
 from repro.core import topk as topk_lib
 from repro.core.corpus import Corpus
+from repro.core.stream_format import VAL_MASK
 from repro.distributed.meshctx import MeshCtx
+from repro.kernels import fused as kfused
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels.fused import PackedSlab
+from repro.kernels.sparse_match_packed import pack as pack_ell
+from repro.kernels.tiling import FixedTiling, TilingStrategy
 
 
 @dataclasses.dataclass
@@ -58,7 +63,19 @@ class DeviceSlab(NamedTuple):
     doc_ids: jax.Array    # [n] int32
 
 
-SlabLike = Union[Corpus, DeviceSlab]
+SlabLike = Union[Corpus, DeviceSlab, PackedSlab]
+
+
+def _require_integral_counts(vals: np.ndarray, backend: str):
+    """The packed/fused backends carry values in the Fig. 8 12-bit count
+    field — arbitrary floats would be silently clipped/rounded."""
+    v = vals[vals != 0]
+    if v.size and (not np.all(v == np.round(v)) or v.min() < 0
+                   or v.max() > VAL_MASK):
+        raise ValueError(
+            f"backend={backend!r} needs integral counts in "
+            f"[0, {VAL_MASK}] (Fig. 8 packing); use backend='jnp' or "
+            "'pallas' for arbitrary float values")
 
 
 def _next_pow2(n: int) -> int:
@@ -67,11 +84,14 @@ def _next_pow2(n: int) -> int:
 
 class PatternSearchEngine:
     def __init__(self, corpus: Optional[Corpus], cfg: SearchConfig,
-                 ctx: MeshCtx, backend: str = "jnp", obs=None):
+                 ctx: MeshCtx, backend: str = "jnp", obs=None,
+                 tiling: Optional[TilingStrategy] = None):
         """``corpus=None`` builds a streaming-only engine (no resident
         corpus): callers must use ``search_streaming`` / ``put_slab``.
         ``obs`` (a ``repro.obs.Obs``) mirrors compile traces into the
-        shared metrics registry; None uses the process default."""
+        shared metrics registry; None uses the process default.
+        ``tiling`` picks the fused backend's tile shapes (DESIGN.md
+        §12.3); None uses ``FixedTiling`` at the config's shapes."""
         from repro.obs import default_obs
         self.cfg = cfg
         self.ctx = ctx
@@ -88,20 +108,53 @@ class PatternSearchEngine:
         n = -(-corpus.n_docs // rows) * rows
         corpus = corpus.pad_docs_to(n)
         self.corpus = corpus
-        spec = P(ctx.dp_axes, None)
-        self.d_ids = jax.device_put(corpus.ids,
-                                    NamedSharding(ctx.mesh, spec))
-        self.d_vals = jax.device_put(corpus.vals,
-                                     NamedSharding(ctx.mesh, spec))
-        self.d_norms = jax.device_put(corpus.norms,
-                                      NamedSharding(ctx.mesh, P(ctx.dp_axes)))
-        self.d_docids = jax.device_put(corpus.doc_ids.astype(np.int32),
-                                       NamedSharding(ctx.mesh, P(ctx.dp_axes)))
+        self.tiling = tiling if tiling is not None else FixedTiling(
+            cfg.block_docs, cfg.block_query)
+        self.f_tiles: Optional[jax.Array] = None
+        if backend == "pallas_fused":
+            # the fused kernel scores a single device's packed tiles;
+            # sharded meshes keep the staged per-device kernels
+            if ctx.mesh.size != 1:
+                raise ValueError(
+                    "backend='pallas_fused' is single-device (packed doc "
+                    f"tiles are not mesh-sharded); mesh has {ctx.mesh.size}"
+                    " devices — use 'pallas' or 'jnp' there")
+            self._block_docs = self.tiling.doc_tile(
+                nnz_pad=cfg.nnz_pad, n_docs=corpus.n_docs)
+            tiles, _, self._resident_trunc = kfused.tile_stream(
+                kfused.corpus_to_stream(corpus),
+                block_docs=self._block_docs, nnz_pad=cfg.nnz_pad,
+                pad_docs_to=corpus.n_docs)
+            # no host ELL staging, no per-array uploads: one uint32
+            # tile matrix is the whole resident corpus
+            self.f_tiles = jax.device_put(tiles)
+            self.d_ids = self.d_vals = None
+            self.d_norms = self.d_docids = None
+        else:
+            self._block_docs = cfg.block_docs
+            spec = P(ctx.dp_axes, None)
+            up_ids = corpus.ids
+            if backend == "pallas_packed":
+                # the packed kernel consumes Fig. 8 uint32 words, not
+                # ELL int32 ids — uploading the raw ids scored every
+                # document as all-zero (word 19-bit fields never match)
+                _require_integral_counts(corpus.vals, backend)
+                up_ids = pack_ell(corpus.ids, corpus.vals)
+            self.d_ids = jax.device_put(up_ids,
+                                        NamedSharding(ctx.mesh, spec))
+            self.d_vals = jax.device_put(corpus.vals,
+                                         NamedSharding(ctx.mesh, spec))
+            self.d_norms = jax.device_put(
+                corpus.norms, NamedSharding(ctx.mesh, P(ctx.dp_axes)))
+            self.d_docids = jax.device_put(
+                corpus.doc_ids.astype(np.int32),
+                NamedSharding(ctx.mesh, P(ctx.dp_axes)))
         # compile-cache bookkeeping: one program per (L-bucket, Q-capacity,
         # n_docs) key; _trace_keys is appended at *trace* time inside the
         # jitted body, so it counts real recompiles, not call shapes
         self._trace_keys: list = []
-        self._search_fn = self._build(ndev)
+        self._search_fn = (self._build_fused() if backend == "pallas_fused"
+                           else self._build(ndev))
 
     # ------------------------------------------------------------------
     def _build(self, ndev: int):
@@ -145,6 +198,27 @@ class PatternSearchEngine:
 
         return search
 
+    def _build_fused(self):
+        """The fused path's one dispatch: packed tiles + merged stream ->
+        folded winners (kernels.fused, DESIGN.md §12). ``block_query``
+        is static — the tiling strategy resolves it per L bucket, so it
+        adds no program shapes beyond the bucket's."""
+        cfg = self.cfg
+        bd = self._block_docs
+        trace_keys = self._trace_keys
+        trace_counter = self.obs.registry.counter("engine_compile_traces")
+
+        @functools.partial(jax.jit, static_argnames=("block_query",))
+        def search(tiles, q_ids, q_vals, q_norms, block_query):
+            trace_keys.append((q_norms.shape[0], q_ids.shape[0],
+                               tiles.shape[0] * bd))
+            trace_counter.inc()
+            return kops.fused_topk(tiles, q_ids, q_vals, q_norms,
+                                   k=cfg.top_k, block_docs=bd,
+                                   block_query=block_query)
+
+        return search
+
     # ------------------------------------------------------------------
     def bucket_L(self, L: int) -> int:
         """The L compile bucket: next power of two of ceil(L / tp), times
@@ -167,6 +241,11 @@ class PatternSearchEngine:
         paper's L query batch, bucketed so the serving layer's variable
         batches reuse cached programs)."""
         L_ = q_ids.shape[0]
+        if L_ == 0:
+            # an empty batch has a well-defined answer, not a degenerate
+            # program shape (bucket_L would still pad to tp, but the
+            # [0, k] result needs no kernel at all)
+            return self.empty_result(0)
         Lp = self.bucket_L(L_)
         if Lp != L_:
             pad_i = np.full((Lp - L_, q_ids.shape[1]), -1, q_ids.dtype)
@@ -180,12 +259,20 @@ class PatternSearchEngine:
         mv = np.pad(mv, ((0, pad - mv.shape[0]), (0, 0)))
         q_norms = np.sqrt((np.where(q_vals > 0, q_vals, 0) ** 2).sum(1))
         q_norms = np.maximum(q_norms, 1e-12).astype(np.float32)
-        v, i = self._search_fn(
-            self.d_ids, self.d_vals, self.d_norms, self.d_docids,
-            jnp.asarray(mi), jnp.asarray(mv), jnp.asarray(q_norms))
+        if self.backend == "pallas_fused":
+            tq = self.tiling.query_tile(Lp)
+            v, i = self._search_fn(self.f_tiles, jnp.asarray(mi),
+                                   jnp.asarray(mv), jnp.asarray(q_norms),
+                                   block_query=tq)
+        else:
+            v, i = self._search_fn(
+                self.d_ids, self.d_vals, self.d_norms, self.d_docids,
+                jnp.asarray(mi), jnp.asarray(mv), jnp.asarray(q_norms))
         v = np.asarray(v)[:L_]
+        # ids come from local_topk / the fused epilogue already masked by
+        # row validity; re-masking by isfinite here renamed real docs
+        # with non-finite fp32 scores to -1 (see core.topk.local_topk)
         i = np.asarray(i)[:L_]
-        i = np.where(np.isfinite(v), i, -1)
         return SearchResult(doc_ids=i.astype(np.int64), scores=v)
 
     # ------------------------------------------------------------------
@@ -229,27 +316,67 @@ class PatternSearchEngine:
         return SearchResult(np.full((n_queries, k), -1, np.int64),
                             np.full((n_queries, k), -np.inf, np.float32))
 
-    def put_slab(self, slab: Corpus) -> DeviceSlab:
+    @property
+    def slab_fmt(self) -> str:
+        """The device-slab layout this engine scores — part of the slab
+        cache key, so an ELL slab can never satisfy a fused lookup (the
+        fused layout also depends on the doc-tile side)."""
+        if self.backend == "pallas_fused":
+            return f"fused:{self._block_docs}"
+        return "ell"
+
+    def put_slab(self, slab: Corpus) -> SlabLike:
         """Upload a host slab, sharded like the resident corpus. device_put
-        is async: the transfer overlaps whatever is already enqueued."""
+        is async: the transfer overlaps whatever is already enqueued.
+        The fused backend re-encodes the corpus rows into packed doc
+        tiles (``PackedSlab``); ELL backends upload the row arrays."""
         rows = self.ctx.dp_size
         slab = slab.pad_docs_to(-(-slab.n_docs // rows) * rows)
+        if self.backend == "pallas_fused":
+            tiles, _, _ = kfused.tile_stream(
+                kfused.corpus_to_stream(slab),
+                block_docs=self._block_docs, nnz_pad=self.cfg.nnz_pad,
+                pad_docs_to=slab.n_docs)
+            return PackedSlab(jax.device_put(tiles))
+        ids = slab.ids
+        if self.backend == "pallas_packed":
+            _require_integral_counts(slab.vals, self.backend)
+            ids = pack_ell(slab.ids, slab.vals)
         sh = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes, None))
         sh1 = NamedSharding(self.ctx.mesh, P(self.ctx.dp_axes))
         return DeviceSlab(
-            jax.device_put(slab.ids, sh), jax.device_put(slab.vals, sh),
+            jax.device_put(ids, sh), jax.device_put(slab.vals, sh),
             jax.device_put(slab.norms, sh1),
             jax.device_put(slab.doc_ids.astype(np.int32), sh1))
 
-    def _as_device(self, slab: Optional[SlabLike]) -> Optional[DeviceSlab]:
-        if slab is None or isinstance(slab, DeviceSlab):
+    def put_stream_slab(self, stream: np.ndarray, *,
+                        pad_docs_to: Optional[int] = None
+                        ) -> Tuple[PackedSlab, int, int]:
+        """Fused-backend ingest straight from the Fig. 8 byte stream: a
+        segment file becomes device tiles with *no* host ELL decode —
+        the storage executor's fused load path (DESIGN.md §12.2).
+        Returns ``(slab, n_docs, n_truncated)`` with the exact counts
+        ``decode_to_ell`` would have reported."""
+        if self.backend != "pallas_fused":
+            raise ValueError("put_stream_slab is the fused-backend "
+                             f"ingest; engine backend is {self.backend!r}")
+        tiles, n_docs, n_trunc = kfused.tile_stream(
+            stream, block_docs=self._block_docs, nnz_pad=self.cfg.nnz_pad,
+            pad_docs_to=pad_docs_to)
+        return PackedSlab(jax.device_put(tiles)), n_docs, n_trunc
+
+    def _as_device(self, slab: Optional[SlabLike]) -> Optional[SlabLike]:
+        if slab is None or isinstance(slab, (DeviceSlab, PackedSlab)):
             return slab
         return self.put_slab(slab)
 
-    def _with_slab(self, dev: DeviceSlab):
+    def _with_slab(self, dev: SlabLike):
         eng = object.__new__(PatternSearchEngine)
         eng.__dict__.update(self.__dict__)
-        eng.d_ids, eng.d_vals, eng.d_norms, eng.d_docids = dev
+        if isinstance(dev, PackedSlab):
+            eng.f_tiles = dev.tiles
+        else:
+            eng.d_ids, eng.d_vals, eng.d_norms, eng.d_docids = dev
         return eng
 
 

@@ -22,11 +22,17 @@ def local_topk(scores: Array, doc_ids: Array, k: int) -> Tuple[Array, Array]:
     never outrank a real document, and their reported id is forced to -1.
     When k exceeds the shard's row count the candidate list is padded with
     (-inf, -1) placeholders so every shard reports the same [L, k] shape.
+
+    Id masking is by *row validity* (doc_id >= 0), never by score
+    finiteness: a real document whose fp32 score overflowed to +inf (or
+    went NaN on non-finite input values) is still a real document and
+    must report its real id — masking on isfinite(vals) silently renamed
+    the best-scoring candidate to -1 (tests/test_topk.py pins this).
     """
     scores = jnp.where(doc_ids[:, None] >= 0, scores, -jnp.inf)
     k_eff = min(k, scores.shape[0])
     vals, idx = jax.lax.top_k(scores.T, k_eff)    # [L, k_eff]
-    ids = jnp.where(jnp.isfinite(vals), doc_ids[idx], -1)
+    ids = jnp.where(doc_ids[idx] >= 0, doc_ids[idx], -1)
     if k_eff < k:
         pad = ((0, 0), (0, k - k_eff))
         vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
@@ -34,12 +40,27 @@ def local_topk(scores: Array, doc_ids: Array, k: int) -> Tuple[Array, Array]:
     return vals, ids
 
 
-def merge_topk(vals_a, ids_a, vals_b, ids_b, k: int):
-    """Merge two [L, k] candidate sets."""
-    vals = jnp.concatenate([vals_a, vals_b], axis=1)
-    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+def fold_topk(vals: Array, ids: Array, k: int) -> Tuple[Array, Array]:
+    """Fold an [L, C] candidate list down to the best [L, k].
+
+    ``top_k`` breaks ties by lower column index, so candidates must be
+    concatenated in priority order (earlier shard / tile / fold slot
+    first) — that is what keeps the fused kernel's per-tile partial
+    top-k bit-identical to a flat global top-k. A list shorter than k
+    is padded with (-inf, -1) placeholders."""
+    c = vals.shape[1]
+    if c < k:
+        pad = ((0, 0), (0, k - c))
+        vals = jnp.pad(vals, pad, constant_values=-jnp.inf)
+        ids = jnp.pad(ids, pad, constant_values=-1)
     v, idx = jax.lax.top_k(vals, k)
     return v, jnp.take_along_axis(ids, idx, axis=1)
+
+
+def merge_topk(vals_a, ids_a, vals_b, ids_b, k: int):
+    """Merge two [L, k] candidate sets."""
+    return fold_topk(jnp.concatenate([vals_a, vals_b], axis=1),
+                     jnp.concatenate([ids_a, ids_b], axis=1), k)
 
 
 def tree_topk(vals: Array, ids: Array, k: int, axis_name: str):

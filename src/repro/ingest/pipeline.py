@@ -73,7 +73,7 @@ class IngestConfig:
     folds the store's underfull tail run once it is at least this many
     segments long. ``fsync``: fsync the WAL on every append (durable to
     the platter) — off by default, matching the flash tier's
-    mmap-not-NVMe simplification (DESIGN.md §13). ``auto_compact``
+    mmap-not-NVMe simplification (DESIGN.md §14). ``auto_compact``
     starts the background compactor thread; ``compact_poll_s`` is its
     idle poll interval (seals nudge it immediately)."""
     seal_docs: int = 512

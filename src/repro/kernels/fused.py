@@ -1,0 +1,284 @@
+"""Fused decode + match + partial-top-k Pallas kernel (DESIGN.md §12).
+
+The paper's accelerator wins by *fusion*: the flash interface logic
+decodes the Fig. 8 stream, the key comparator + distance accumulator
+match it, and only high-score document ids leave the chip — one pass,
+no intermediate materialization. The staged software path still runs
+
+    decode_to_ell (host numpy) -> correlate (kernel) -> local_topk
+
+as three dispatches with a host-resident ELL intermediate ([D, K] int32
+ids + [D, K] float32 vals + norms) between the first two. This module
+collapses the chain into one ``pallas_call`` over the packed uint32
+stream itself:
+
+  - **decode** — in-kernel VPU shifts/masks split each 32-bit word into
+    header (bit 31 set: ``[1 | docID:31]``) or pair (``[0 | wordID:19 |
+    count:12]``); a cumulative sum over the header bits assigns every
+    word to its document row, and a one-hot row matrix turns segment
+    reductions (per-doc norm, per-doc score) into MXU matmuls;
+  - **match** — the same merge-join -> match-matrix reformulation as
+    ``sparse_match``: ``eq = (ids == q_ids)``, ``eq @ q_vals``, scaled
+    by the decoded counts and segment-summed per document row;
+  - **top-k** — the epilogue (last query-tile grid step) computes the
+    cosine scores against in-kernel doc norms and emits each doc tile's
+    ``min(k, block_docs)`` best candidates; the host-side wrapper folds
+    the per-tile candidate lists with the ``core.topk`` primitives.
+
+Host staging is reduced to ``tile_stream``: an O(n) boundary-index pass
+that splits the raw stream at document boundaries into fixed-capacity
+``[T, cap]`` uint32 tiles (``cap = block_docs * (1 + nnz_pad)``, pad
+word 0xFFFFFFFF) so no document straddles a grid block. No ELL arrays,
+no float conversion, no norms are materialized on the host — 4 B/word
+travels to the device exactly as it sits in the segment file.
+
+Numerics: counts are 12-bit integers, so in the no-overflow regime
+(score and norm partial sums below 2**24) every accumulation order is
+exact in fp32 and the fused result is *bit-identical* to the staged
+``jnp`` reference — including IEEE-correctly-rounded ``sqrt`` for the
+norms (fp64->fp32 double rounding of sqrt is innocuous at these
+widths). tests/test_fused_kernel.py proves this on every serving
+surface.
+
+Tiling (``block_docs``, ``block_query``) comes from the strategy
+classes in ``kernels.tiling``; shapes are memoized per L-bucket so the
+§7 compile-cache bound (<= log2(max_batch)+1 programs per shape
+family) still holds. ``interpret=True`` runs the same kernel on CPU —
+the differential suites in CI exercise the identical code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:                                      # scratch constructors (TPU path
+    from jax.experimental.pallas import tpu as pltpu   # + interpret mode)
+except ImportError:                       # pragma: no cover - old jax
+    pltpu = None
+
+from repro.core.stream_format import (HEADER_BIT, KEY_BITS, KEY_MASK,
+                                      MAX_DOC_ID, VAL_BITS, VAL_MASK)
+
+Array = jax.Array
+
+PAD_WORD = np.uint32(0xFFFFFFFF)
+
+
+class PackedSlab(NamedTuple):
+    """A corpus slab in fused-kernel layout: the Fig. 8 stream split
+    into fixed-capacity doc tiles, still packed uint32. The fused
+    scoring unit — the counterpart of the staged path's DeviceSlab."""
+    tiles: jax.Array      # [T, cap] uint32 (PAD_WORD padding)
+
+
+# ---------------------------------------------------------------------------
+# host-side stream tiling (boundary index pass — NOT an ELL decode)
+# ---------------------------------------------------------------------------
+def tile_stream(stream: np.ndarray, *, block_docs: int, nnz_pad: int,
+                pad_docs_to: Optional[int] = None
+                ) -> Tuple[np.ndarray, int, int]:
+    """Split a Fig. 8 uint32 stream into ``[T, cap]`` fixed-capacity doc
+    tiles for the fused kernel. Applies the exact truncation rule of
+    ``decode_to_ell`` (pairs beyond ``nnz_pad`` per document are
+    dropped) so fused stats and scores match the staged path.
+
+    ``pad_docs_to`` pads the tile count to ``ceil(pad_docs_to /
+    block_docs)`` (all-PAD rows) so every segment of a store shares one
+    program shape — the fused analogue of ``Corpus.pad_docs_to``.
+
+    Returns ``(tiles, n_docs, n_truncated)``.
+    """
+    stream = np.asarray(stream, np.uint32)
+    cap = block_docs * (1 + nnz_pad)
+    is_hdr = (stream & HEADER_BIT) != 0
+    n_docs = int(is_hdr.sum())
+    target = n_docs if pad_docs_to is None else int(pad_docs_to)
+    if target < n_docs:
+        raise ValueError(f"pad_docs_to {target} < n_docs {n_docs}")
+    n_tiles = -(-target // block_docs) if target else 0
+    if n_docs == 0:
+        return np.full((n_tiles, cap), PAD_WORD, np.uint32), 0, 0
+    if bool((stream == PAD_WORD).any()):
+        # header word of doc_id MAX_DOC_ID collides with the pad
+        # sentinel; the staged backends handle it, the fused one refuses
+        raise ValueError(
+            f"stream contains word 0x{int(PAD_WORD):08X} (doc_id "
+            f"{MAX_DOC_ID}), which aliases the fused-kernel pad")
+    # per-word document segment + within-document position
+    hdr_pos = np.flatnonzero(is_hdr)
+    seg = np.cumsum(is_hdr) - 1
+    pos = np.arange(stream.size) - hdr_pos[seg]    # 0 = header, 1.. = pair
+    keep = is_hdr | (pos <= nnz_pad)
+    n_trunc = int(stream.size - int(keep.sum()))
+    kept = stream[keep]
+    # re-index the kept stream and scatter into (tile, column) slots
+    is_hdr_k = (kept & HEADER_BIT) != 0
+    hdr_pos_k = np.flatnonzero(is_hdr_k)
+    doc_of = np.cumsum(is_hdr_k) - 1               # document per word
+    tile_of = doc_of // block_docs
+    tile_base = hdr_pos_k[tile_of * block_docs]    # tile's first word
+    col = np.arange(kept.size) - tile_base
+    tiles = np.full((n_tiles, cap), PAD_WORD, np.uint32)
+    tiles[tile_of, col] = kept
+    return tiles, n_docs, n_trunc
+
+
+def corpus_to_stream(corpus) -> np.ndarray:
+    """Re-encode an ELL ``Corpus`` (integral Fig. 8-representable
+    counts) as the packed uint32 stream — the bridge for surfaces that
+    only hold decoded rows (resident engine corpus, ingest memtable).
+    Padding rows (doc_id < 0) are skipped; within-row pair order is
+    preserved. Raises for values the 19/12-bit packing cannot carry."""
+    ids = np.asarray(corpus.ids)
+    vals = np.asarray(corpus.vals)
+    doc_ids = np.asarray(corpus.doc_ids)
+    rows = doc_ids >= 0
+    valid = (ids >= 0) & rows[:, None]
+    v = vals[valid]
+    if v.size and (not np.all(v == np.round(v)) or v.min() < 0
+                   or v.max() > VAL_MASK):
+        raise ValueError(
+            "fused/packed backends need integral counts in "
+            f"[0, {VAL_MASK}] (Fig. 8 12-bit packing); use the jnp or "
+            "pallas backend for arbitrary float values")
+    if ids[valid].size and int(ids[valid].max()) > KEY_MASK:
+        raise ValueError(f"word id exceeds {KEY_BITS}-bit packing")
+    if rows.any() and int(doc_ids[rows].max()) >= MAX_DOC_ID:
+        raise ValueError(f"doc_id >= {MAX_DOC_ID} aliases the fused pad")
+    lens = valid.sum(1)[rows]
+    d_ids = doc_ids[rows].astype(np.uint32)
+    starts = np.zeros(d_ids.size, np.int64)
+    np.cumsum(lens[:-1] + 1, out=starts[1:])
+    out = np.empty(int(lens.sum() + d_ids.size), np.uint32)
+    out[starts] = HEADER_BIT | d_ids
+    r, c = np.nonzero(valid[rows])
+    rank = np.arange(r.size) - np.searchsorted(r, r)
+    out[starts[r] + 1 + rank] = (
+        (ids[rows][r, c].astype(np.uint32) << VAL_BITS)
+        | vals[rows][r, c].astype(np.uint32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the fused kernel
+# ---------------------------------------------------------------------------
+def _fused_kernel(tiles_ref, q_ids_ref, q_vals_ref, q_norms_ref,
+                  vals_out_ref, ids_out_ref,
+                  corr_ref, dnorm_ref, docid_ref, *, kp: int, nq: int):
+    """Grid (doc_tiles, query_tiles), query axis innermost. Scratch
+    (corr accumulator, doc norms, doc ids) persists across the query
+    axis; the epilogue runs once per doc tile at the last query step."""
+    j = pl.program_id(1)
+    words = tiles_ref[0, :]                          # [cap] uint32
+    cap = words.shape[0]
+    bd = docid_ref.shape[0]
+
+    # -- in-kernel Fig. 8 decode (VPU shifts/masks) --------------------
+    is_pad = words == jnp.uint32(PAD_WORD)
+    is_hdr = jnp.logical_and((words & jnp.uint32(HEADER_BIT)) != 0,
+                             jnp.logical_not(is_pad))
+    valid_pair = jnp.logical_and(jnp.logical_not(is_pad),
+                                 jnp.logical_not(is_hdr))
+    row = jnp.cumsum(is_hdr.astype(jnp.int32)) - 1   # doc row per word
+    onehot = row[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (cap, bd), 1)                     # word -> doc row
+    d_ids = jnp.where(valid_pair,
+                      ((words >> VAL_BITS) & jnp.uint32(KEY_MASK))
+                      .astype(jnp.int32), -1)
+    d_vals = jnp.where(valid_pair,
+                       (words & jnp.uint32(VAL_MASK)).astype(jnp.float32),
+                       0.0)
+
+    @pl.when(j == 0)
+    def _prologue():
+        oh = onehot.astype(jnp.float32)
+        # per-doc L2 norm of the decoded counts (segment sum via MXU)
+        sumsq = jnp.dot(d_vals * d_vals, oh,
+                        preferred_element_type=jnp.float32)      # [bd]
+        dnorm_ref[...] = jnp.sqrt(sumsq)
+        hdr_id = jnp.where(is_hdr,
+                           (words & jnp.uint32(MAX_DOC_ID))
+                           .astype(jnp.int32), -1)
+        docid_ref[...] = jnp.max(
+            jnp.where(onehot, hdr_id[:, None], -1), axis=0)      # [bd]
+        corr_ref[...] = jnp.zeros_like(corr_ref)
+
+    # -- match: merge-join as a match matrix (MXU) ---------------------
+    eq = (d_ids[:, None] == q_ids_ref[...][None, :]).astype(jnp.float32)
+    matched = jnp.dot(eq, q_vals_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)   # [cap, L]
+    pp = d_vals[:, None] * matched
+    corr_ref[...] += jnp.dot(onehot.astype(jnp.float32).T, pp,
+                             preferred_element_type=jnp.float32)  # [bd, L]
+
+    # -- epilogue: cosine + per-tile partial top-k ---------------------
+    @pl.when(j == nq - 1)
+    def _epilogue():
+        doc_id = docid_ref[...]
+        denom = dnorm_ref[...][:, None] * q_norms_ref[...][None, :]
+        cos = jnp.where(denom > 0,
+                        corr_ref[...] / jnp.maximum(denom, 1e-12),
+                        -jnp.inf)
+        # invalid rows (tile padding) can never surface; real documents
+        # keep their id whatever their score (see core.topk.local_topk)
+        cos = jnp.where(doc_id[:, None] >= 0, cos, -jnp.inf)
+        # rank with NaN pinned above every finite score (lax.top_k's own
+        # totalorder outside Pallas); the in-kernel sort orders NaN
+        # *last*, which would let -inf padding displace a real document
+        # whose score went non-finite — the rename bug's sibling
+        rank = jnp.where(jnp.isnan(cos), jnp.inf, cos)
+        _, idx = jax.lax.top_k(rank.T, kp)           # [L, kp]
+        v = jnp.take_along_axis(cos.T, idx, axis=1)
+        ids = jnp.take(doc_id, idx)
+        vals_out_ref[...] = v[None]
+        ids_out_ref[...] = jnp.where(ids >= 0, ids, -1)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_docs", "kp",
+                                             "block_query", "interpret"))
+def fused_match_topk(tiles: Array, q_ids: Array, q_vals: Array,
+                     q_norms: Array, *, block_docs: int, kp: int,
+                     block_query: int = 512,
+                     interpret: bool = False) -> Tuple[Array, Array]:
+    """tiles: [T, cap] uint32 (from ``tile_stream``, cap = block_docs *
+    (1 + nnz_pad)); q_ids: [Qm] int32 merged stream (pads already
+    remapped by ops.py so they can never match a decoded word id);
+    q_vals: [Qm, L]; q_norms: [L]. Qm % block_query == 0 (ops.py pads).
+    Returns per-tile candidates (vals [T, L, kp], ids [T, L, kp]) — fold
+    with ``core.topk.fold_topk``."""
+    T, cap = tiles.shape
+    Qm, L_ = q_vals.shape
+    tq = min(block_query, Qm)
+    assert Qm % tq == 0, (Qm, tq)
+    nq = Qm // tq
+    grid = (T, nq)
+    scratch = []
+    if pltpu is not None:
+        scratch = [pltpu.VMEM((block_docs, L_), jnp.float32),
+                   pltpu.VMEM((block_docs,), jnp.float32),
+                   pltpu.VMEM((block_docs,), jnp.int32)]
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, kp=kp, nq=nq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq,), lambda i, j: (j,)),
+            pl.BlockSpec((tq, L_), lambda i, j: (j, 0)),
+            pl.BlockSpec((L_,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L_, kp), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, L_, kp), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, L_, kp), jnp.float32),
+            jax.ShapeDtypeStruct((T, L_, kp), jnp.int32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(tiles, q_ids, q_vals, q_norms)

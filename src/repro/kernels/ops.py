@@ -1,10 +1,14 @@
-"""jit'd public wrappers around the sparse_match kernel.
+"""jit'd public wrappers around the sparse_match kernel family.
 
 Handles padding to tile multiples, merged multi-query streams, sentinel
 conventions and cosine normalization. ``backend``:
   - "pallas": the TPU kernel (interpret=True on CPU — used by tests)
   - "jnp":    gather-based scoring (engine default on CPU; also the
               in-memory CPU baseline of the paper's Fig. 13)
+  - "pallas_packed": the Fig. 8 packed-word kernel (uint32 corpus)
+  - "pallas_fused": decode+match+top-k in one kernel over packed doc
+    tiles — wrapped by ``fused_topk`` (DESIGN.md §12), which returns
+    folded [L, k] winners instead of a correlation matrix
 """
 from __future__ import annotations
 
@@ -15,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.topk import fold_topk
 from repro.kernels import ref as ref_mod
+from repro.kernels.fused import fused_match_topk
 from repro.kernels.sparse_match import sparse_match, QUERY_PAD
 from repro.kernels.sparse_match_packed import sparse_match_packed
 
@@ -34,8 +40,15 @@ def _pad_to(x: Array, n: int, axis: int, fill) -> Array:
 def merge_queries(q_ids: np.ndarray, q_vals: np.ndarray
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Stack L queries ([L, Qn] ids, [L, Qn] vals, pad<0) into one merged
-    id stream with L value columns: ids [Qm], vals [Qm, L]."""
+    id stream with L value columns: ids [Qm], vals [Qm, L].
+
+    Rows with zero non-pad terms simply contribute no items (their value
+    column stays all-zero, so they score 0 against everything), and an
+    empty batch (L = 0, or every row empty) yields the well-defined
+    zero-length stream — not a concatenate error."""
     L_, _ = q_ids.shape
+    if L_ == 0:
+        return np.empty(0, np.int32), np.zeros((0, 0), np.float32)
     ids_out, vals_out = [], []
     for l in range(L_):
         keep = q_ids[l] >= 0
@@ -55,13 +68,22 @@ def correlate(doc_ids: Array, doc_vals: Array, q_ids: Array, q_vals: Array,
               *, backend: str = "jnp", vocab_size: int = 0,
               block_docs: int = 128, block_query: int = 512) -> Array:
     """Correlation (cosine numerator) [D, L]."""
+    D = doc_ids.shape[0]
+    L_ = q_vals.shape[1]
+    if D == 0 or L_ == 0:
+        # degenerate program shapes (empty corpus / empty batch): the
+        # well-defined zero correlation, not an empty-grid kernel launch
+        return jnp.zeros((D, L_), jnp.float32)
     if backend in ("pallas", "pallas_packed"):
-        D = doc_ids.shape[0]
         Qm = q_ids.shape[0]
         td = min(block_docs, max(D, 8))
         tq = min(block_query, max(Qm, 8))
         Dp = -(-D // td) * td
-        Qp = -(-Qm // tq) * tq
+        # a zero-length merged stream (every query row empty) still pads
+        # to one full query tile: the kernel then scores all-pad items
+        # to the all-zero row instead of launching an empty grid whose
+        # output would be uninitialized
+        Qp = max(-(-Qm // tq) * tq, tq)
         qi = _pad_to(q_ids, Qp, 0, QUERY_PAD)
         qv = _pad_to(q_vals, Qp, 0, 0.0)
         # query padding might collide with doc padding sentinel: remap
@@ -90,3 +112,41 @@ def cosine_scores(corr: Array, doc_norms: Array, q_norms: Array) -> Array:
     """corr: [D, L]; doc_norms: [D]; q_norms: [L] -> cosine in [-1, 1]."""
     denom = doc_norms[:, None] * q_norms[None, :]
     return jnp.where(denom > 0, corr / jnp.maximum(denom, 1e-12), -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_docs",
+                                             "block_query"))
+def fused_topk(tiles: Array, q_ids: Array, q_vals: Array, q_norms: Array,
+               *, k: int, block_docs: int, block_query: int = 512
+               ) -> Tuple[Array, Array]:
+    """The ``pallas_fused`` scoring surface: packed doc tiles ([T, cap]
+    uint32 from ``kernels.fused.tile_stream``) + merged query stream ->
+    folded (vals [L, k], ids [L, k]) winners. One kernel replaces the
+    decode -> correlate -> local_topk dispatch chain (DESIGN.md §12).
+
+    Each doc tile emits its best ``min(k, block_docs)`` candidates —
+    never explicit pad entries mid-stream — and the fold concatenates
+    them in tile order, so ties resolve exactly as a flat global top_k
+    over document rows would (see ``core.topk.fold_topk``)."""
+    T = tiles.shape[0]
+    L_ = q_vals.shape[1]
+    kp = min(k, block_docs)
+    if T == 0 or L_ == 0:
+        # empty corpus / empty batch: the same (-inf, -1) no-result rows
+        # the staged path's local_topk padding produces
+        return (jnp.full((L_, k), -jnp.inf, jnp.float32),
+                jnp.full((L_, k), -1, jnp.int32))
+    Qm = q_ids.shape[0]
+    tq = min(block_query, max(Qm, 8))
+    Qp = max(-(-Qm // tq) * tq, tq)      # >= one tile even when Qm == 0
+    qi = _pad_to(q_ids, Qp, 0, QUERY_PAD)
+    qi = jnp.where(qi < 0, QUERY_PAD, qi)
+    qv = _pad_to(q_vals, Qp, 0, 0.0)
+    interpret = jax.default_backend() != "tpu"
+    pv, pi = fused_match_topk(tiles, qi, qv, q_norms,
+                              block_docs=block_docs, kp=kp,
+                              block_query=tq, interpret=interpret)
+    # concatenate per-tile candidates in tile order, then fold to k
+    cv = jnp.transpose(pv, (1, 0, 2)).reshape(L_, T * kp)
+    ci = jnp.transpose(pi, (1, 0, 2)).reshape(L_, T * kp)
+    return fold_topk(cv, ci, k)

@@ -58,7 +58,7 @@ def build_lowering(arch: str, shape_name: str, multi_pod: bool,
     if not ok:
         return None, why
     # >500B-param training requires int8 optimizer states to fit the pod
-    # (DESIGN.md §13 / EXPERIMENTS.md §Dry-run)
+    # (DESIGN.md §14 / EXPERIMENTS.md §Dry-run)
     if shape.kind == "train" and cfg.param_count() > 5e11:
         int8_opt = True
     ctx = make_ctx(multi_pod=multi_pod)

@@ -9,7 +9,7 @@ tensor D[t,s,d] = exp(cum_{t-1} - cum_s) is materialized (numerically safe —
 no exp(+large)), across chunks an O(hd^2) state is carried by lax.scan.
 Decode is the O(1)-state recurrence — the reason this arch runs long_500k.
 
-Simplifications vs the released model (DESIGN.md §13): static token-shift
+Simplifications vs the released model (DESIGN.md §14): static token-shift
 lerp coefficients (the ddlerp LoRA is kept only for the decay, which is the
 paper's headline mechanism); per-head RMS norm in place of GroupNorm.
 """

@@ -109,7 +109,7 @@ class Obs:
         reg = self.registry
         reg.gauge("slab_cache_bytes").set(cache.nbytes)
         reg.gauge("slab_cache_entries").set(len(cache))
-        st = cache.stats
+        st = cache.stats_snapshot()
         reg.gauge("slab_cache_hits_lifetime").set(st.hits)
         reg.gauge("slab_cache_misses_lifetime").set(st.misses)
         reg.gauge("slab_cache_evictions_lifetime").set(st.evictions)

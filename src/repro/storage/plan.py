@@ -76,10 +76,12 @@ class QueryPlan:
     memtable: Optional[Corpus] = None  # live tail (unpadded), or None
     memtable_trunc: int = 0
     memtable_pad: int = 0              # doubling pad target for the tail
+    fmt: str = "ell"                   # engine slab layout (§12.2):
+                                       # "ell" or "fused:<block_docs>"
 
     def key_for(self, name: str):
         return slab_key(self.cache_token, name, self.nnz_pad,
-                        self.slab_docs)
+                        self.slab_docs, self.fmt)
 
     @property
     def n_cached(self) -> int:
@@ -99,11 +101,14 @@ class Planner:
     beyond its knobs, so one instance serves every query of a session."""
 
     def __init__(self, *, nnz_pad: int, rows: int, use_filter: bool = True,
-                 cache: Optional[SlabCache] = None):
+                 cache: Optional[SlabCache] = None, fmt: str = "ell"):
         self.nnz_pad = nnz_pad
         self.rows = rows                # mesh rows the slab pad aligns to
         self.use_filter = use_filter
         self.cache = cache
+        self.fmt = fmt                  # the engine's slab_fmt: cache
+                                        # verdicts must probe the same
+                                        # keys the executor will load
 
     def plan(self, view, q_ids: np.ndarray, snap=None) -> QueryPlan:
         """``snap`` carries the memtable when ``view`` is a live
@@ -129,7 +134,8 @@ class Planner:
                 if not hit_any:
                     skipped.append(entry.name)
                     continue
-            key = slab_key(token, entry.name, self.nnz_pad, slab_docs)
+            key = slab_key(token, entry.name, self.nnz_pad, slab_docs,
+                           self.fmt)
             step = PlanStep(
                 entry.name, entry.n_docs,
                 SOURCE_CACHE if self.cache is not None
@@ -151,7 +157,7 @@ class Planner:
                          nnz_pad=self.nnz_pad, cache_token=token,
                          generation=view.generation,
                          memtable=mem_corpus, memtable_trunc=mem_trunc,
-                         memtable_pad=mem_pad)
+                         memtable_pad=mem_pad, fmt=self.fmt)
 
 
 def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
@@ -198,15 +204,29 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
             stats.cache_misses += 1
         t0 = time.perf_counter()
         seg = view.segment(step.name)
-        doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
-            seg.stream(), plan.nnz_pad)
-        view.release(step.name)
-        t1 = time.perf_counter()
-        stats.docs_scored += int(doc_ids.size)
-        stats.pairs_truncated += n_trunc
-        corpus = Corpus(doc_ids, ids, vals, norms)
-        slab = engine.put_slab(corpus.pad_docs_to(plan.slab_docs))
-        t2 = time.perf_counter()
+        if plan.fmt.startswith("fused"):
+            # the fused kernel decodes the Fig. 8 words on-device: the
+            # segment stream is only *tiled* here (a boundary-index
+            # pass), never staged through host ELL arrays (§12.2). The
+            # mmap view stays open until the tiles are built — tiling
+            # copies, so the segment can be released right after.
+            slab, n_docs, n_trunc = engine.put_stream_slab(
+                seg.stream(), pad_docs_to=plan.slab_docs)
+            view.release(step.name)
+            t1 = t2 = time.perf_counter()
+            stats.docs_scored += n_docs
+            stats.pairs_truncated += n_trunc
+        else:
+            doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
+                seg.stream(), plan.nnz_pad)
+            view.release(step.name)
+            t1 = time.perf_counter()
+            n_docs = int(doc_ids.size)
+            stats.docs_scored += n_docs
+            stats.pairs_truncated += n_trunc
+            corpus = Corpus(doc_ids, ids, vals, norms)
+            slab = engine.put_slab(corpus.pad_docs_to(plan.slab_docs))
+            t2 = time.perf_counter()
         h_decode.observe((t1 - t0) * 1e3)
         h_upload.observe((t2 - t1) * 1e3)
         # admission is gated on the LIVE store generation still matching
@@ -219,7 +239,7 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
         if cache is not None:
             stats.cache_evictions += cache.put(
                 plan.key_for(step.name), slab,
-                n_docs=int(doc_ids.size), n_trunc=n_trunc,
+                n_docs=n_docs, n_trunc=n_trunc,
                 admit=lambda: view.live_generation == plan.generation)
         lspan.end(source=SOURCE_DISK,
                   decode_ms=round((t1 - t0) * 1e3, 3),

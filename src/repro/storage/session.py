@@ -103,7 +103,8 @@ class FlashSearchSession(ServingSessionMixin):
         if self.slab_cache is not None:
             store.register_cache(self.slab_cache)
         self._planner = Planner(nnz_pad=cfg.nnz_pad, rows=self.ctx.dp_size,
-                                use_filter=use_filter, cache=self.slab_cache)
+                                use_filter=use_filter, cache=self.slab_cache,
+                                fmt=self.engine.slab_fmt)
         self.last_stats = SearchStats()
         self._ingest = None
         # one program shape for every slab: largest segment, mesh-aligned
@@ -213,9 +214,13 @@ class FlashSearchSession(ServingSessionMixin):
 
     @property
     def cache_stats(self) -> Optional[CacheStats]:
-        """Lifetime slab-cache counters (shared across every sharer of
-        the cache), or None when the cache is disabled."""
-        return self.slab_cache.stats if self.slab_cache is not None else None
+        """A locked point-in-time snapshot of the lifetime slab-cache
+        counters (shared across every sharer of the cache), or None when
+        the cache is disabled. A snapshot, not the live object: the
+        counters mutate under the cache lock mid-query, so a lock-free
+        read could pair hits and misses from different moments."""
+        return (self.slab_cache.stats_snapshot()
+                if self.slab_cache is not None else None)
 
     @property
     def compile_stats(self) -> dict:

@@ -63,15 +63,20 @@ def slab_nbytes(slab) -> int:
                for np_like in slab)
 
 
-Key = Tuple[Hashable, str, int, int]   # (store token, name, nnz_pad, slab_docs)
+# (store token, name, nnz_pad, slab_docs, slab fmt)
+Key = Tuple[Hashable, str, int, int, str]
 
 
 def slab_key(token: Hashable, name: str, nnz_pad: int,
-             slab_docs: int) -> Key:
+             slab_docs: int, fmt: str = "ell") -> Key:
     """The one cache-key constructor — planner peeks and executor
     get/puts must key identically or every planned hit silently
-    degrades to a miss."""
-    return (token, name, nnz_pad, slab_docs)
+    degrades to a miss. ``fmt`` is the engine's slab layout
+    (``engine.slab_fmt``): an ELL DeviceSlab and a fused PackedSlab of
+    the same segment are different device objects and must never alias
+    (the fused fmt also carries its doc-tile side, since re-tiling
+    changes the layout)."""
+    return (token, name, nnz_pad, slab_docs, fmt)
 
 
 class SlabCache:
@@ -110,6 +115,16 @@ class SlabCache:
     def keys(self):
         with self._lock:
             return list(self._entries)
+
+    def stats_snapshot(self) -> CacheStats:
+        """A point-in-time copy of the lifetime counters, taken under
+        the cache lock. ``cache_stats`` surfaces must return this, not
+        the live ``stats`` object: a lock-free read of the mutating
+        dataclass can pair a ``hits`` from one moment with a ``misses``
+        from another, so ``hit_rate`` mid-flight was not any state the
+        cache ever held."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
 
     # -- read path -----------------------------------------------------
     def peek(self, key: Key) -> bool:

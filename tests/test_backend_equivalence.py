@@ -12,16 +12,29 @@ every adversarial sentinel the formats define: -1 doc padding, -2 query
 padding, duplicate ids (within docs and within the merged stream),
 empty documents and empty queries. Disagreement beyond 1e-5 is a
 scoring bug, not tolerance noise — counts are small integers.
+
+The engine-level half runs all *four* end-to-end backends (adding
+``pallas_fused``, DESIGN.md §12) over adversarial fixtures: non-finite
+query values (the local_topk isfinite-mask regression), zero-term
+query rows, the all-empty batch, single-doc corpora, and a randomized
+fused-vs-jnp bit-identity property over corpora *and* tile shapes.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis_compat import given, settings, strategies as st
 
+from repro.configs.paper_search import SearchConfig
+from repro.core.corpus import from_stream
+from repro.core.engine import PatternSearchEngine
+from repro.core.stream_format import encode
+from repro.distributed.meshctx import single_device_ctx
 from repro.kernels import ops, ref
 from repro.kernels.sparse_match_packed import pack
+from repro.kernels.tiling import FixedTiling
 
 BACKENDS = ["jnp", "pallas", "pallas_packed"]
+ENGINE_BACKENDS = BACKENDS + ["pallas_fused"]
 VOCAB = 256
 
 
@@ -143,3 +156,123 @@ def test_engine_merged_path_matches_per_query(seed):
         single = np.asarray(_correlate("ref", ids, vals, mi1, mv1))
         np.testing.assert_allclose(batched[:, l], single[:, 0],
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-level adversarial fixtures, all four end-to-end backends
+# ---------------------------------------------------------------------------
+def _cfg(**kw):
+    base = dict(name="equiv-test", vocab_size=VOCAB, avg_nnz_per_doc=6,
+                nnz_pad=8, top_k=4, block_docs=8, block_query=16)
+    base.update(kw)
+    return SearchConfig(**base)
+
+
+def _engine(backend, docs, cfg, **kw):
+    corpus = from_stream(encode(docs), cfg.nnz_pad)
+    return PatternSearchEngine(corpus, cfg, single_device_ctx(), backend,
+                               **kw)
+
+
+def _assert_same(a, b, label=""):
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=label)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=label)
+
+
+@pytest.mark.parametrize("backend", ENGINE_BACKENDS)
+def test_nonfinite_query_value_keeps_real_doc_id(backend):
+    """Regression for the local_topk isfinite mask: an inf query value
+    drives the matching document's cosine score non-finite (inf/inf ->
+    NaN through the norm), and the old ``isfinite(vals)`` id mask then
+    renamed that *real* document to -1 — indistinguishable from "no
+    result". Every backend must keep a real id at the top slot.
+
+    Cross-backend score equality (and NaN *rank*) deliberately NOT
+    asserted here: the matmul-formulation kernels (pallas/packed/fused)
+    produce NaN for non-matching docs too (0 * inf inside the match
+    matrix) where the gather backends give them 0, and the top-k
+    reduction chain orders NaN differently per stage (lax.top_k sorts
+    it first, the merge argsort last) — documented non-finite
+    divergences. What every backend MUST agree on is that the real
+    document is still reported under its real id."""
+    docs = [(0, [(3, 2), (10, 1)]),
+            (1, [(7, 5)]),              # only doc 1 holds word 7
+            (2, [(12, 4), (20, 2)])]
+    eng = _engine(backend, docs, _cfg())
+    qi = np.array([[7, -1]], np.int32)
+    qv = np.array([[np.inf, 0.0]], np.float32)
+    res = eng.search(qi, qv)
+    row_ids = res.doc_ids[0]
+    assert 1 in row_ids                   # kept its id, not renamed -1
+    pos = int(np.flatnonzero(row_ids == 1)[0])
+    assert not np.isfinite(res.scores[0, pos])
+
+
+def test_zero_term_and_all_empty_rows_bit_identical():
+    """A zero-term query row inside a batch, and a batch of *only*
+    empty rows, are well-defined (score 0 against every real doc) and
+    must agree bitwise across all four backends."""
+    docs = [(d, [(d + 1, 2), (d + 50, 1)]) for d in range(6)]
+    cfg = _cfg()
+    mixed_i = np.array([[3, 4], [-1, -1], [51, -1]], np.int32)
+    mixed_v = np.array([[1.0, 2.0], [0.0, 0.0], [3.0, 0.0]], np.float32)
+    empty_i = np.full((2, 3), -1, np.int32)
+    empty_v = np.zeros((2, 3), np.float32)
+    results = {}
+    for b in ENGINE_BACKENDS:
+        eng = _engine(b, docs, cfg)
+        results[b] = (eng.search(mixed_i, mixed_v),
+                      eng.search(empty_i, empty_v),
+                      eng.search(np.empty((0, 2), np.int32),
+                                 np.empty((0, 2), np.float32)))
+    for b in ENGINE_BACKENDS[1:]:
+        _assert_same(results["jnp"][0], results[b][0], f"{b} mixed")
+        _assert_same(results["jnp"][1], results[b][1], f"{b} all-empty")
+        assert results[b][2].doc_ids.shape == (0, cfg.top_k)
+    # the empty row scored: real ids, all-zero scores, nothing renamed
+    zrow = results["jnp"][0]
+    assert (zrow.doc_ids[1] >= 0).all()
+    np.testing.assert_array_equal(zrow.scores[1], 0.0)
+
+
+def test_single_doc_corpus_bit_identical():
+    docs = [(17, [(5, 3), (9, 1)])]
+    cfg = _cfg()
+    qi = np.array([[5, -1], [9, 5]], np.int32)
+    qv = np.array([[2.0, 0.0], [1.0, 1.0]], np.float32)
+    ref_r = _engine("jnp", docs, cfg).search(qi, qv)
+    assert ref_r.doc_ids[0, 0] == 17 and (ref_r.doc_ids[:, 1:] == -1).all()
+    for b in ENGINE_BACKENDS[1:]:
+        _assert_same(ref_r, _engine(b, docs, cfg).search(qi, qv), b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_fused_bit_identical_to_jnp_over_random_corpora_and_tiles(seed):
+    """The tentpole property (DESIGN.md §12): for integral counts in
+    the exact-fp32 regime, the fused kernel is *bit-identical* to the
+    staged jnp path — over random corpora, random queries, and random
+    (block_docs, block_query) tile shapes."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(nnz_pad=int(rng.integers(2, 10)),
+               top_k=int(rng.integers(1, 7)),
+               block_docs=int(2 ** rng.integers(2, 6)),
+               block_query=int(2 ** rng.integers(3, 7)))
+    docs = []
+    for d in range(int(rng.integers(1, 60))):
+        nw = int(rng.integers(0, 12))
+        ws = sorted(rng.choice(VOCAB, nw, replace=False).tolist())
+        docs.append((d, [(int(w), int(rng.integers(1, 30))) for w in ws]))
+    L = int(rng.integers(1, 5))
+    qi = np.full((L, 5), -1, np.int32)
+    qv = np.zeros((L, 5), np.float32)
+    for l in range(L):
+        if rng.random() < 0.2:
+            continue
+        q = int(rng.integers(1, 6))
+        qi[l, :q] = np.sort(rng.choice(VOCAB, q, replace=False))
+        qv[l, :q] = rng.integers(1, 20, q)
+    tiling = FixedTiling(cfg.block_docs, cfg.block_query)
+    ref_r = _engine("jnp", docs, cfg).search(qi, qv)
+    got = _engine("pallas_fused", docs, cfg, tiling=tiling).search(qi, qv)
+    _assert_same(ref_r, got, f"seed={seed} cfg={cfg}")

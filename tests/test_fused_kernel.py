@@ -1,0 +1,345 @@
+"""Fused decode+match+top-k kernel (DESIGN.md §12): stream tiling
+parity with the staged decoder, and bit-identity of the
+``pallas_fused`` backend with the ``jnp`` reference on every serving
+surface — engine, streaming slabs, storage session (cold and warm),
+ingest snapshot, and the stream ingest path itself."""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import stream_format as sf
+from repro.core import topk as topk_lib
+from repro.core.corpus import Corpus
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.kernels import fused, ops
+from repro.storage import FlashSearchSession, FlashStore
+
+VOCAB = 512
+
+
+def _cfg(**kw):
+    base = dict(name="fused-test", vocab_size=VOCAB, avg_nnz_per_doc=8,
+                nnz_pad=16, top_k=4, block_docs=16, block_query=32)
+    base.update(kw)
+    return SearchConfig(**base)
+
+
+def _rand_docs(rng, n_docs, max_nnz=12, max_count=30):
+    docs = []
+    for d in range(n_docs):
+        nw = int(rng.integers(0, max_nnz))
+        ws = sorted(rng.choice(VOCAB, nw, replace=False).tolist())
+        docs.append((d, [(int(w), int(rng.integers(1, max_count)))
+                         for w in ws]))
+    return docs
+
+
+def _corpus_from_docs(docs, nnz_pad):
+    from repro.core.corpus import from_stream
+    return from_stream(sf.encode(docs), nnz_pad)
+
+
+def _rand_queries(rng, docs, L, qn=6, empty_rows=True):
+    qi = np.full((L, qn), -1, np.int32)
+    qv = np.zeros((L, qn), np.float32)
+    for l in range(L):
+        if empty_rows and rng.random() < 0.25:
+            continue
+        src = docs[int(rng.integers(len(docs)))][1][:qn]
+        for j, (w, c) in enumerate(src):
+            qi[l, j] = w
+            qv[l, j] = c
+    return qi, qv
+
+
+# ---------------------------------------------------------------------------
+# tile_stream: host boundary pass vs the staged decoder
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_tile_stream_truncation_parity_with_decode_to_ell(seed):
+    """The fused tiler must apply decode_to_ell's exact truncation rule
+    (pairs beyond nnz_pad dropped, same count reported) or warm/cold
+    stats diverge between the backends."""
+    rng = np.random.default_rng(seed)
+    docs = _rand_docs(rng, int(rng.integers(1, 40)), max_nnz=14)
+    stream = sf.encode(docs)
+    nnz_pad = int(rng.integers(1, 12))
+    bd = int(2 ** rng.integers(2, 6))
+    tiles, n_docs, n_trunc = fused.tile_stream(stream, block_docs=bd,
+                                               nnz_pad=nnz_pad)
+    doc_ids, ids, vals, _, n_trunc_ref = sf.decode_to_ell(stream, nnz_pad)
+    assert n_docs == doc_ids.size
+    assert n_trunc == n_trunc_ref
+    assert tiles.shape == (-(-n_docs // bd), bd * (1 + nnz_pad))
+    # decode every tile back and compare with the staged ELL rows
+    got_rows = {}
+    for t in range(tiles.shape[0]):
+        kept = tiles[t][tiles[t] != fused.PAD_WORD]
+        for doc_id, pairs in sf.decode(kept):
+            got_rows[doc_id] = pairs
+    for r, doc_id in enumerate(doc_ids):
+        want = [(int(w), int(v)) for w, v in zip(ids[r], vals[r]) if w >= 0]
+        assert got_rows[int(doc_id)] == want
+
+
+def test_tile_stream_pad_and_empty():
+    tiles, n_docs, n_trunc = fused.tile_stream(
+        np.empty(0, np.uint32), block_docs=8, nnz_pad=4, pad_docs_to=20)
+    assert (tiles == fused.PAD_WORD).all() and tiles.shape == (3, 40)
+    assert n_docs == 0 and n_trunc == 0
+    stream = sf.encode([(5, [(1, 2)])])
+    with pytest.raises(ValueError, match="pad_docs_to"):
+        fused.tile_stream(stream, block_docs=8, nnz_pad=4, pad_docs_to=0)
+
+
+def test_tile_stream_rejects_pad_aliasing_doc_id():
+    """doc_id 2^31-1 encodes to the word 0xFFFFFFFF — the fused pad
+    sentinel. The staged decoder handles it; the tiler must refuse
+    loudly instead of silently dropping the document."""
+    stream = sf.encode([(sf.MAX_DOC_ID, [(1, 2)])])
+    with pytest.raises(ValueError, match="alias"):
+        fused.tile_stream(stream, block_docs=8, nnz_pad=4)
+
+
+def test_corpus_to_stream_round_trip_and_validation():
+    rng = np.random.default_rng(7)
+    docs = _rand_docs(rng, 20)
+    corpus = _corpus_from_docs(docs, 16).pad_docs_to(24)
+    stream = fused.corpus_to_stream(corpus)
+    decoded = sf.decode(stream)
+    assert len(decoded) == 20          # pad rows skipped
+    for (doc_id, pairs), (want_id, want_pairs) in zip(decoded, docs):
+        assert doc_id == want_id and pairs == want_pairs
+    bad = Corpus(np.array([0]), np.array([[3]], np.int32),
+                 np.array([[1.5]], np.float32), np.array([1.5], np.float32))
+    with pytest.raises(ValueError, match="integral"):
+        fused.corpus_to_stream(bad)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: engine / streaming / storage / ingest surfaces
+# ---------------------------------------------------------------------------
+def _assert_same(a, b, label=""):
+    np.testing.assert_array_equal(a.doc_ids, b.doc_ids, err_msg=label)
+    np.testing.assert_array_equal(a.scores, b.scores, err_msg=label)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_engine_fused_bit_identical_to_jnp(seed):
+    rng = np.random.default_rng(seed)
+    cfg = _cfg()
+    docs = _rand_docs(rng, int(rng.integers(1, 80)))
+    corpus = _corpus_from_docs(docs, cfg.nnz_pad)
+    ctx = single_device_ctx()
+    qi, qv = _rand_queries(rng, docs, L=int(rng.integers(1, 5)))
+    ref = PatternSearchEngine(corpus, cfg, ctx, backend="jnp").search(qi, qv)
+    got = PatternSearchEngine(corpus, cfg, ctx,
+                              backend="pallas_fused").search(qi, qv)
+    _assert_same(ref, got, "engine")
+
+
+def test_engine_fused_streaming_slabs_match_jnp():
+    rng = np.random.default_rng(11)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 60)
+    corpus = _corpus_from_docs(docs, cfg.nnz_pad)
+    slabs = [corpus.slice_rows(i, i + 20) for i in range(0, 60, 20)]
+    ctx = single_device_ctx()
+    qi, qv = _rand_queries(rng, docs, L=2, empty_rows=False)
+    engines = {b: PatternSearchEngine(None, cfg, ctx, backend=b)
+               for b in ("jnp", "pallas_fused")}
+    ref = engines["jnp"].search_streaming(qi, qv, iter(slabs))
+    got = engines["pallas_fused"].search_streaming(qi, qv, iter(slabs))
+    _assert_same(ref, got, "streaming")
+    # and the no-slab path returns the (-1, -inf) sentinel
+    empty = engines["pallas_fused"].search_streaming(qi, qv, iter([]))
+    assert (empty.doc_ids == -1).all()
+
+
+def test_engine_fused_rejects_multi_device_mesh():
+    from repro.distributed.meshctx import MeshCtx
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="single-device"):
+        PatternSearchEngine(None, cfg, MeshCtx.create(), "pallas_fused")
+
+
+def test_session_fused_cold_warm_ingest_match_jnp(tmp_path):
+    rng = np.random.default_rng(13)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 150)
+    qi, qv = _rand_queries(rng, docs, L=3)
+    runs = {}
+    for b in ("jnp", "pallas_fused"):
+        store = FlashStore.create(str(tmp_path / b), vocab_size=VOCAB,
+                                  docs_per_segment=40)
+        store.append_docs(docs)
+        sess = FlashSearchSession(store, cfg, backend=b)
+        cold = sess.search(qi, qv)
+        st_cold = sess.last_stats
+        warm = sess.search(qi, qv)
+        st_warm = sess.last_stats
+        assert st_warm.cache_hits == st_warm.segments_scored > 0
+        # warm stats replay the cold decode exactly (n_docs + truncation
+        # ride the cache entry, for the fused tiler too)
+        assert st_warm.docs_scored == st_cold.docs_scored
+        assert st_warm.pairs_truncated == st_cold.pairs_truncated
+        _assert_same(cold, warm, f"{b} warm")
+        sess.enable_ingest()
+        sess.append(9000, [(5, 3), (17, 2), (100, 1)])
+        live = sess.search(qi, qv)
+        assert sess.last_stats.memtable_docs == 1
+        runs[b] = (cold, live, st_cold.docs_scored, st_cold.pairs_truncated)
+        sess.close()
+    _assert_same(runs["jnp"][0], runs["pallas_fused"][0], "cold")
+    _assert_same(runs["jnp"][1], runs["pallas_fused"][1], "ingest snapshot")
+    assert runs["jnp"][2:] == runs["pallas_fused"][2:]
+
+
+def test_fused_cache_entries_cannot_alias_ell_entries(tmp_path):
+    """One shared SlabCache serving an ELL session and a fused session
+    over the same store must key their slabs apart — a PackedSlab
+    satisfying an ELL lookup would crash (or worse) at score time."""
+    from repro.storage.slabcache import SlabCache
+    rng = np.random.default_rng(17)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 80)
+    store = FlashStore.create(str(tmp_path / "s"), vocab_size=VOCAB,
+                              docs_per_segment=40)
+    store.append_docs(docs)
+    shared = SlabCache()
+    qi, qv = _rand_queries(rng, docs, L=1, empty_rows=False)
+    s_ell = FlashSearchSession(store, cfg, backend="jnp", slab_cache=shared)
+    s_fus = FlashSearchSession(store, cfg, backend="pallas_fused",
+                               slab_cache=shared)
+    r1 = s_ell.search(qi, qv)
+    assert s_ell.last_stats.cache_hits == 0
+    r2 = s_fus.search(qi, qv)           # same store, different layout:
+    assert s_fus.last_stats.cache_hits == 0   # all misses, no aliasing
+    _assert_same(r1, r2, "shared cache")
+    fmts = {k[-1] for k in shared.keys()}
+    assert fmts == {"ell", s_fus.engine.slab_fmt}
+    s_fus.close()
+    s_ell.close()
+
+
+def test_put_stream_slab_counts_match_staged_decode():
+    rng = np.random.default_rng(19)
+    cfg = _cfg(nnz_pad=4)              # force truncation
+    docs = _rand_docs(rng, 30, max_nnz=10)
+    stream = sf.encode(docs)
+    eng = PatternSearchEngine(None, cfg, single_device_ctx(),
+                              backend="pallas_fused")
+    slab, n_docs, n_trunc = eng.put_stream_slab(stream, pad_docs_to=32)
+    _, _, _, _, want_trunc = sf.decode_to_ell(stream, cfg.nnz_pad)
+    assert (n_docs, n_trunc) == (30, want_trunc)
+    assert slab.tiles.shape[0] == 2    # ceil(32 / block_docs=16)
+    ell_eng = PatternSearchEngine(None, cfg, single_device_ctx())
+    with pytest.raises(ValueError, match="fused"):
+        ell_eng.put_stream_slab(stream)
+
+
+def test_fused_compile_cache_bound():
+    """Varying L within one bucket family reuses programs: the fused
+    path keeps the serving bound of <= log2(max_batch)+1 traces."""
+    rng = np.random.default_rng(23)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 40)
+    corpus = _corpus_from_docs(docs, cfg.nnz_pad)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(),
+                              backend="pallas_fused")
+    max_batch = 8
+    for L in range(1, max_batch + 1):
+        qi, qv = _rand_queries(rng, docs, L=L, empty_rows=False)
+        eng.search(qi, qv)
+    import math
+    assert eng.compile_stats["n_traces"] <= math.log2(max_batch) + 1
+
+
+def test_fused_partial_topk_fold_matches_flat_topk():
+    """k > block_docs: per-tile candidate lists are min(k, bd) wide, so
+    no mid-stream pad entry can outrank a later tile's real document —
+    the fold must equal a flat top-k even when most scores are -inf."""
+    cfg = _cfg(top_k=16, block_docs=8)
+    # 20 docs, most empty (score -inf vs any query), ids still real
+    docs = [(d, [(d % 7, 1)] if d % 3 == 0 else []) for d in range(20)]
+    corpus = _corpus_from_docs(docs, cfg.nnz_pad)
+    qi = np.array([[3, -1]], np.int32)
+    qv = np.array([[2.0, 0.0]], np.float32)
+    ctx = single_device_ctx()
+    ref = PatternSearchEngine(corpus, cfg, ctx, backend="jnp").search(qi, qv)
+    got = PatternSearchEngine(corpus, cfg, ctx,
+                              backend="pallas_fused").search(qi, qv)
+    _assert_same(ref, got, "k>bd fold")
+
+
+def test_fold_topk_pads_and_orders():
+    vals = jnp.asarray([[1.0, 3.0, 2.0]])
+    ids = jnp.asarray([[10, 30, 20]])
+    v, i = topk_lib.fold_topk(vals, ids, 5)
+    np.testing.assert_array_equal(np.asarray(i[0]), [30, 20, 10, -1, -1])
+    assert np.asarray(v)[0, 3] == -np.inf
+
+
+# ---------------------------------------------------------------------------
+# remaining differential surfaces: cluster scatter/gather and the
+# coalesced-submit service path (ISSUE 7 acceptance)
+# ---------------------------------------------------------------------------
+def test_cluster_fused_matches_jnp(tmp_path):
+    from repro.cluster import FlashClusterSession, build_sharded_store
+    rng = np.random.default_rng(23)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 120)
+    qi, qv = _rand_queries(rng, docs, L=3)
+    runs = {}
+    for b in ("jnp", "pallas_fused"):
+        cl = build_sharded_store(str(tmp_path / b), docs, n_shards=3,
+                                 replicas=1, policy="hash",
+                                 vocab_size=VOCAB, docs_per_segment=32)
+        with FlashClusterSession(cl, cfg, backend=b) as sess:
+            runs[b] = sess.search(qi, qv)
+    _assert_same(runs["jnp"], runs["pallas_fused"], "cluster")
+
+
+def test_service_fused_coalesced_submit_matches_jnp(tmp_path):
+    """Coalesced ``submit`` rows through a fused-backend session must be
+    bit-identical to serial jnp searches — including a client that
+    legitimately submits a zero-term query (all pad ids), which must
+    resolve to real doc ids at zero score rather than a shape error."""
+    from repro.serve import SearchService
+    rng = np.random.default_rng(29)
+    cfg = _cfg()
+    docs = _rand_docs(rng, 90)
+    qi, qv = _rand_queries(rng, docs, L=4, empty_rows=False)
+    qi[2, :] = -1                       # zero-term client
+    qv[2, :] = 0.0
+    store = FlashStore.create(str(tmp_path / "svc"), vocab_size=VOCAB,
+                              docs_per_segment=30)
+    store.append_docs(docs)
+    ref_sess = FlashSearchSession(store, cfg, backend="jnp")
+    ref = ref_sess.search(qi, qv)
+    sess = FlashSearchSession(store, cfg, backend="pallas_fused")
+    svc = SearchService(sess, max_batch=4, max_delay_ms=1.0)
+    futs = [svc.submit(qi[l], qv[l]) for l in range(4)]
+    rows = [f.result(timeout=30) for f in futs]
+    for l, row in enumerate(rows):
+        np.testing.assert_array_equal(row.doc_ids, ref.doc_ids[l],
+                                      err_msg=f"submit row {l}")
+        np.testing.assert_array_equal(row.scores, ref.scores[l],
+                                      err_msg=f"submit row {l}")
+    # the zero-term row carries real ids at exactly-zero score
+    assert np.all(np.asarray(rows[2].scores) == 0.0)
+    assert np.all(np.asarray(rows[2].doc_ids) >= 0)
+    svc.close()
+    sess.close()
+    ref_sess.close()

@@ -2,6 +2,8 @@
 cache-first scan order, warm-vs-cold bit-equivalence on every scoring
 surface, byte-budget eviction, precise invalidation, and the idempotent
 close satellites."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -278,8 +280,19 @@ def test_shared_cache_across_sessions(tmp_path, corpus):
     assert s2.last_stats.cache_hits == s2.last_stats.segments_scored > 0
     np.testing.assert_array_equal(r1.doc_ids, r2.doc_ids)
     np.testing.assert_array_equal(r1.scores, r2.scores)
-    # sessions share lifetime stats through the one cache object
-    assert s1.cache_stats is s2.cache_stats
+    # sessions share lifetime stats through the one cache object;
+    # cache_stats returns a locked *snapshot* (not the live mutating
+    # dataclass), so shared state is proven by value, and the snapshot
+    # must be detached from subsequent cache activity
+    snap = s1.cache_stats
+    assert snap == s2.cache_stats
+    assert snap is not shared.stats
+    shared.stats.hits += 1
+    try:
+        assert s1.cache_stats.hits == snap.hits + 1  # live counters moved
+        assert snap == dataclasses.replace(snap)     # snapshot did not
+    finally:
+        shared.stats.hits -= 1
     # registrations are refcounted: closing one session must neither
     # stop the store's invalidations for the survivor nor wipe the
     # survivor's warm set

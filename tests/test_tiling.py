@@ -1,0 +1,101 @@
+"""Tiling strategies for the fused kernel (DESIGN.md §12.3): shape
+selection, the per-bucket memoization that preserves the §7
+compile-cache bound, and bit-identity of an AutoTiling engine with the
+jnp reference."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import SearchConfig
+from repro.core.corpus import from_stream
+from repro.core.engine import PatternSearchEngine
+from repro.core.stream_format import encode
+from repro.distributed.meshctx import single_device_ctx
+from repro.kernels.tiling import (AutoTiling, DEFAULT_VMEM_BUDGET,
+                                  FixedTiling, TileShape)
+
+
+def test_fixed_tiling_returns_config_shapes():
+    t = FixedTiling(64, 256)
+    assert t.doc_tile(nnz_pad=4, n_docs=10) == 64
+    assert t.doc_tile(nnz_pad=4096, n_docs=10**9) == 64
+    assert t.query_tile(1) == 256 and t.query_tile(1024) == 256
+    with pytest.raises(ValueError):
+        FixedTiling(0, 256)
+
+
+def test_query_tile_memoized_per_bucket():
+    t = AutoTiling(64, 256)
+    buckets = [1, 2, 4, 8, 8, 4, 2, 1, 16]
+    shapes = [t.query_tile(b) for b in buckets]
+    # revisiting a bucket returns the memoized choice — identical value,
+    # no new entry — so the program count is bounded by distinct buckets
+    assert shapes[0] == shapes[7] and shapes[2] == shapes[5]
+    assert set(t.bucket_shapes) == {1, 2, 4, 8, 16}
+    assert len(t.bucket_shapes) == 5
+
+
+def test_auto_tiling_doc_side_shrinks_with_density():
+    t = AutoTiling(1024, 256, vmem_budget=64 * 1024)
+    wide = t.doc_tile(nnz_pad=4, n_docs=10**6)
+    narrow = t.doc_tile(nnz_pad=512, n_docs=10**6)
+    assert narrow < wide <= 1024
+    assert wide & (wide - 1) == 0 and narrow & (narrow - 1) == 0
+    assert narrow >= 8
+    # never exceeds the config's static upper bound
+    assert AutoTiling(16, 256).doc_tile(nnz_pad=1, n_docs=10**6) == 16
+
+
+def test_auto_tiling_query_side_divides_block_query():
+    bq = 384                       # non-power-of-two static shape
+    t = AutoTiling(64, bq, vmem_budget=16 * 1024)
+    for Lp in (1, 2, 4, 8, 64, 512):
+        tq = t.query_tile(Lp)
+        assert bq % tq == 0        # merged capacity (k * bq) stays divisible
+        assert tq >= 8
+    # wider buckets never get wider tiles
+    picks = [t.query_tile(Lp) for Lp in (1, 4, 16, 64, 256)]
+    assert picks == sorted(picks, reverse=True)
+    assert picks[-1] < picks[0]    # the budget actually binds
+    # a generous budget keeps the config shape
+    assert AutoTiling(64, bq, vmem_budget=DEFAULT_VMEM_BUDGET).query_tile(1) \
+        == bq
+
+
+def test_tile_shape_is_frozen_value_type():
+    s = TileShape(64, 256)
+    assert (s.block_docs, s.block_query) == (64, 256)
+    with pytest.raises(Exception):
+        s.block_docs = 8
+
+
+def test_engine_with_auto_tiling_matches_jnp_and_keeps_compile_bound():
+    rng = np.random.default_rng(31)
+    cfg = SearchConfig(name="tiling-test", vocab_size=128,
+                       avg_nnz_per_doc=6, nnz_pad=8, top_k=4,
+                       block_docs=32, block_query=64)
+    docs = [(d, [(int(w), int(rng.integers(1, 9)))
+                 for w in sorted(rng.choice(128, 5, replace=False))])
+            for d in range(50)]
+    corpus = from_stream(encode(docs), cfg.nnz_pad)
+    ctx = single_device_ctx()
+    ref = PatternSearchEngine(corpus, cfg, ctx, backend="jnp")
+    tiling = AutoTiling(cfg.block_docs, cfg.block_query,
+                        vmem_budget=32 * 1024)
+    got = PatternSearchEngine(corpus, cfg, ctx, backend="pallas_fused",
+                              tiling=tiling)
+    max_batch = 8
+    for L in range(1, max_batch + 1):
+        qi = np.full((L, 4), -1, np.int32)
+        qv = np.zeros((L, 4), np.float32)
+        for l in range(L):
+            w, _ = docs[(L * 7 + l) % 50][1][0]
+            qi[l, 0], qv[l, 0] = w, 2.0
+        r = ref.search(qi, qv)
+        g = got.search(qi, qv)
+        np.testing.assert_array_equal(r.doc_ids, g.doc_ids, err_msg=f"L={L}")
+        np.testing.assert_array_equal(r.scores, g.scores, err_msg=f"L={L}")
+    # the autotuner added no program shapes beyond the L buckets
+    assert got.compile_stats["n_traces"] <= math.log2(max_batch) + 1
+    assert len(tiling.bucket_shapes) <= math.log2(max_batch) + 1

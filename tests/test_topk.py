@@ -31,6 +31,30 @@ def test_local_topk_masks_padding_rows():
     np.testing.assert_array_equal(i[1], [11, 10, -1])
 
 
+def test_local_topk_nonfinite_scores_keep_real_ids():
+    """Overflow regression (the isfinite -> row-validity mask fix): a
+    *real* document whose score overflowed to +inf (or went NaN through
+    inf/inf) must keep its doc id — the old ``isfinite(vals)`` mask
+    renamed it to -1, silently reporting "no result" for the best hit.
+    Padding rows must still be masked, whatever their scores."""
+    scores = np.array([[np.inf, 1.0],
+                       [np.nan, 2.0],
+                       [0.5, np.inf],
+                       [7.0, 7.0]], np.float32)      # row 3 is padding
+    doc_ids = np.array([10, 11, 12, -1], np.int32)
+    v, i = topk_lib.local_topk(jax.numpy.asarray(scores),
+                               jax.numpy.asarray(doc_ids), 3)
+    v, i = np.asarray(v), np.asarray(i)
+    # XLA top_k total order: NaN > inf > finite; ids follow the scores
+    np.testing.assert_array_equal(i[0], [11, 10, 12])
+    np.testing.assert_array_equal(i[1], [12, 11, 10])
+    assert np.isnan(v[0, 0]) and np.isposinf(v[0, 1])
+    assert np.isposinf(v[1, 0])
+    # the padding row (which held the highest finite scores) never
+    # surfaces, under either column's ordering
+    assert -1 not in i
+
+
 def test_local_topk_k_exceeds_rows():
     scores = np.array([[0.3], [0.7]], np.float32)    # [D=2, L=1]
     doc_ids = np.array([4, 9], np.int32)
