@@ -390,6 +390,11 @@ class ShardRouter:
                     continue
                 walls[s] = wall_ms
                 h_shard.observe(wall_ms)
+                # per-shard series feed the per-shard latency SLOs
+                # (§8.4) and make a straggling shard visible in /metrics
+                # without joining against the trace attrs
+                reg.histogram("cluster_shard_ms", shard=str(s)).observe(
+                    wall_ms)
                 stats.per_shard[s] = st
                 best = res if best is None else _merge_results(
                     best, res, self.cfg.top_k)
@@ -407,6 +412,10 @@ class ShardRouter:
         stats.failovers = self.failovers
         self.last_stats = stats
         if err is not None:
+            # the cluster availability-SLO bad-event stream (§8.4);
+            # queries_total for the surface counts in publish_search_stats
+            reg.counter("query_errors_total", surface="cluster").inc()
+            reg.counter("queries_total", surface="cluster").inc()
             raise err
         assert best is not None          # n_shards >= 1
         self.obs.note_query(

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Iterable, NamedTuple, Optional, Tuple, Union
 
 import jax
@@ -259,6 +260,12 @@ class PatternSearchEngine:
         mv = np.pad(mv, ((0, pad - mv.shape[0]), (0, 0)))
         q_norms = np.sqrt((np.where(q_vals > 0, q_vals, 0) ** 2).sum(1))
         q_norms = np.maximum(q_norms, 1e-12).astype(np.float32)
+        # optional device-stage split (DESIGN.md §8.5): with the fence
+        # on, the async dispatch is timed separately from the device
+        # compute it enqueues. Off by default — block_until_ready
+        # serializes work the np.asarray below would have overlapped.
+        fence = getattr(self.obs, "device_fence", False)
+        t0 = time.perf_counter() if fence else 0.0
         if self.backend == "pallas_fused":
             tq = self.tiling.query_tile(Lp)
             v, i = self._search_fn(self.f_tiles, jnp.asarray(mi),
@@ -268,6 +275,15 @@ class PatternSearchEngine:
             v, i = self._search_fn(
                 self.d_ids, self.d_vals, self.d_norms, self.d_docids,
                 jnp.asarray(mi), jnp.asarray(mv), jnp.asarray(q_norms))
+        if fence:
+            t1 = time.perf_counter()
+            jax.block_until_ready((v, i))
+            t2 = time.perf_counter()
+            reg = self.obs.registry
+            reg.histogram("stage_ms", stage="score_dispatch").observe(
+                (t1 - t0) * 1e3)
+            reg.histogram("stage_ms", stage="score_device").observe(
+                (t2 - t1) * 1e3)
         v = np.asarray(v)[:L_]
         # ids come from local_topk / the fused epilogue already masked by
         # row validity; re-masking by isfinite here renamed real docs

@@ -32,6 +32,15 @@ query/stage latency percentiles, cache state, compile traces, slow
 queries. ``--metrics-out PATH`` dumps the registry in Prometheus text
 format (plus ``PATH.traces.json`` when tracing); ``--trace-sample N``
 samples every Nth query into a QueryTrace and prints the last one.
+
+The *live* plane (DESIGN.md §8.4–§8.5): ``--telemetry-port PORT``
+serves ``/metrics`` (Prometheus text with rolling-window gauges),
+``/healthz`` (replica + ingest liveness), ``/slo`` (burn states for the
+stock latency/availability objectives; tune with ``--slo-ms`` /
+``--slo-target``) and ``/debug/traces`` on 127.0.0.1 while the load
+runs. ``--profile-dir DIR`` arms ``/debug/profile`` (jax.profiler
+capture); ``--device-fence`` splits ``stage_ms{score}`` into dispatch
+vs device time.
 """
 import argparse
 import threading
@@ -129,6 +138,25 @@ def main():
                          "(0 = tracing off, the default)")
     ap.add_argument("--slow-ms", type=float, default=250.0,
                     help="slow-query log threshold for the summary")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve the live telemetry plane (/metrics, "
+                         "/healthz, /slo, /debug/traces — DESIGN.md "
+                         "§8.5) on 127.0.0.1:PORT for the run's "
+                         "duration (0 picks a free port)")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="latency-SLO threshold for the telemetry "
+                         "plane's stock objectives")
+    ap.add_argument("--slo-target", type=float, default=0.99,
+                    help="latency-SLO good fraction target")
+    ap.add_argument("--profile-dir", metavar="DIR",
+                    help="arm /debug/profile: GET it to capture a "
+                         "jax.profiler trace into DIR (needs "
+                         "--telemetry-port)")
+    ap.add_argument("--device-fence", action="store_true",
+                    help="fence the score dispatch (block_until_ready) "
+                         "so stage_ms splits score into dispatch vs "
+                         "device time — measurement mode, adds sync")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.ingest and not (args.store or args.cluster):
@@ -142,7 +170,8 @@ def main():
         else int(args.cache_mb * 1e6)
     # one Obs bundle for the whole process: every target publishes into
     # the same registry, so the post-run summary is target-agnostic
-    obs = Obs(trace_sample=args.trace_sample, slow_ms=args.slow_ms)
+    obs = Obs(trace_sample=args.trace_sample, slow_ms=args.slow_ms,
+              device_fence=args.device_fence)
     if args.store:
         from repro.storage import FlashSearchSession, FlashStore
         store = FlashStore.open(args.store)
@@ -166,6 +195,26 @@ def main():
                                        args.nnz_pad, seed=args.seed)
         searcher = PatternSearchEngine(corpus, cfg, single_device_ctx(),
                                        backend=args.backend, obs=obs)
+
+    # live telemetry plane (DESIGN.md §8.5): HTTP thread on the shared
+    # Obs bundle, up for the whole run so an operator (or the cluster
+    # stress test) can scrape mid-load
+    telemetry = None
+    slo_monitor = None
+    if args.telemetry_port is not None:
+        from repro.obs.server import TelemetryServer, register_searcher_health
+        from repro.obs.slo import SLOMonitor, default_slos
+        surface = ("cluster" if args.cluster
+                   else "store" if args.store else "serve")
+        slo_monitor = SLOMonitor(obs, default_slos(
+            surface, latency_ms=args.slo_ms,
+            latency_target=args.slo_target))
+        telemetry = TelemetryServer(obs, port=args.telemetry_port,
+                                    slo_monitor=slo_monitor,
+                                    profile_dir=args.profile_dir)
+        register_searcher_health(telemetry, searcher)
+        print(f"[serve] telemetry: {telemetry.url('/metrics')}  "
+              f"{telemetry.url('/healthz')}  {telemetry.url('/slo')}")
 
     def draw_query(rng):
         qi, qv = corpus_lib.make_query(corpus, int(rng.integers(corpus.n_docs)),
@@ -262,7 +311,7 @@ def main():
               f"(snapshot incl. memtable)")
     # unified post-run block (DESIGN.md §8.3): one summary whichever
     # target served — resident engine, store session, or cluster
-    print(render_summary(searcher, obs))
+    print(render_summary(searcher, obs, slo_monitor=slo_monitor))
     if args.cluster:
         down = sum(not ok for row in searcher.router.health() for ok in row)
         print(f"router lifetime: {searcher.router.failovers} replicas "
@@ -277,6 +326,8 @@ def main():
         if args.trace_sample:
             n = write_traces(obs, args.metrics_out + ".traces.json")
             print(f"traces  -> {args.metrics_out}.traces.json ({n} trace(s))")
+    if telemetry is not None:
+        telemetry.close()
     if args.store or args.cluster:
         searcher.close()
 

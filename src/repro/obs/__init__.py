@@ -13,6 +13,13 @@ fall back to the process-wide ``default_obs()``, so sharing one
 registry across a cluster's shard sessions needs no plumbing, while a
 benchmark that wants clean numbers passes its own ``Obs()`` (or
 ``Obs.disabled()`` to measure the instrumentation floor).
+
+PR 8 adds the live plane on top: every counter/histogram carries a
+rolling-window twin (``obs/window.py``, §8.4), SLO burn states evaluate
+against those windows (``obs/slo.py``), and ``obs/server.py`` serves
+the whole bundle over HTTP. ``device_fence=True`` opts the engine into
+``block_until_ready`` fencing so ``stage_ms`` splits score time into
+dispatch vs device (default off: fencing serializes the pipeline).
 """
 from __future__ import annotations
 
@@ -44,11 +51,16 @@ class Obs:
 
     def __init__(self, *, registry: Optional[MetricsRegistry] = None,
                  trace_sample: int = 0, slow_ms: float = 250.0,
-                 keep_traces: int = 32, keep_queries: int = 256):
+                 keep_traces: int = 32, keep_queries: int = 256,
+                 window_s: float = 60.0, window_slices: int = 6,
+                 device_fence: bool = False):
         self.enabled = True
-        self.registry = MetricsRegistry() if registry is None else registry
+        self.registry = (MetricsRegistry(window_s=window_s,
+                                         window_slices=window_slices)
+                         if registry is None else registry)
         self.tracer = Tracer(sample_every=trace_sample, keep=keep_traces)
         self.slow_ms = float(slow_ms)
+        self.device_fence = bool(device_fence)
         self._queries: deque = deque(maxlen=keep_queries)
         self._q_lock = threading.Lock()
 
@@ -62,6 +74,7 @@ class Obs:
         obs.registry = NULL_REGISTRY
         obs.tracer = Tracer(sample_every=0, keep=1)
         obs.slow_ms = math.inf
+        obs.device_fence = False
         obs._queries = deque(maxlen=1)
         obs._q_lock = threading.Lock()
         return obs

@@ -13,29 +13,55 @@ Three consumers, one data source (the ``Obs`` bundle):
 
 Everything here only *reads* instruments; nothing in this module is on
 a query path.
+
+The file writers are atomic (write a ``.tmp`` sibling, fsync, then
+``os.replace`` — the store-manifest publish idiom): a concurrent reader
+of ``metrics.prom`` sees the previous complete file or the new one,
+never a torn prefix.
 """
 from __future__ import annotations
 
 import json
+import os
 from typing import List, Optional
 
 from . import Obs
 from .trace import QueryTrace
 
 
+def _atomic_write(path: str, text: str) -> None:
+    """tmp + fsync + rename, same durability contract as the store
+    manifest: readers never observe a partially-written file."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def write_metrics(obs: Obs, path: str, prefix: str = "repro") -> None:
-    """Dump the registry in Prometheus text exposition format."""
-    with open(path, "w") as f:
-        f.write(obs.registry.to_prometheus(prefix=prefix))
+    """Dump the registry in Prometheus text exposition format
+    (atomically — scrapers tailing the file never see a torn dump)."""
+    _atomic_write(path, obs.registry.to_prometheus(prefix=prefix))
 
 
 def write_traces(obs: Obs, path: str) -> int:
-    """Dump the tracer's retained traces as JSON; returns how many."""
+    """Dump the tracer's retained traces as JSON (atomically);
+    returns how many."""
     traces = obs.tracer.export()
-    with open(path, "w") as f:
-        json.dump({"schema": "repro-traces-v1", "traces": traces}, f,
-                  indent=1)
+    _atomic_write(path, json.dumps(
+        {"schema": "repro-traces-v1", "traces": traces}, indent=1))
     return len(traces)
+
+
+def _fmt_ms(v: float, width: int = 9) -> str:
+    """A span duration for the timeline. Sub-0.1 ms spans (an all-
+    cache-hit load, a no-op merge) rendered at ms precision collapse to
+    ``0.000ms`` — print those in µs so the timeline stays readable."""
+    if 0 < abs(v) < 0.1:
+        return f"{v * 1e3:>{width}.1f}µs"
+    return f"{v:>{width}.3f}ms"
 
 
 def render_trace(trace: Optional[QueryTrace]) -> str:
@@ -48,8 +74,8 @@ def render_trace(trace: Optional[QueryTrace]) -> str:
     def walk(node: dict, depth: int) -> None:
         attrs = " ".join(f"{k}={v}" for k, v in node["attrs"].items())
         lines.append(f"{'  ' * depth}{node['name']:<8} "
-                     f"+{node['start_ms']:>8.3f}ms "
-                     f"{node['dur_ms']:>9.3f}ms  {attrs}".rstrip())
+                     f"+{_fmt_ms(node['start_ms'], 8)} "
+                     f"{_fmt_ms(node['dur_ms'])}  {attrs}".rstrip())
         for child in node["children"]:
             walk(child, depth + 1)
 
@@ -61,9 +87,11 @@ def _fmt_labels(labels: dict) -> str:
     return ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
 
 
-def render_summary(searcher, obs: Optional[Obs] = None) -> str:
+def render_summary(searcher, obs: Optional[Obs] = None,
+                   slo_monitor=None) -> str:
     """The unified post-run block: query/stage latency percentiles from
-    the registry, slab cache state, engine compile traces, and the slow
+    the registry, rolling-window rates, SLO burn states (when a monitor
+    is passed), slab cache state, engine compile traces, and the slow
     query ring — identical shape whichever target ``searcher`` is (the
     resident engine, a FlashSearchSession, a FlashClusterSession, or a
     SearchService wrapping any of them)."""
@@ -77,12 +105,33 @@ def render_summary(searcher, obs: Optional[Obs] = None) -> str:
     hists = [(name, labels, m)
              for name, labels, kind, m in obs.registry.items()
              if kind == "histogram" and m.count]
+    served = False
     for name, labels, m in hists:
         if name != "query_ms":
             continue
+        served = True
         lines.append(
             f"queries[{_fmt_labels(labels)}]: n={m.count} "
             f"p50={m.p50:.2f}ms p95={m.p95:.2f}ms p99={m.p99:.2f}ms")
+        w = obs.registry.windowed(name, **labels)
+        if w is not None and w.count:
+            ws = w.stats()
+            lines.append(
+                f"  last {w.window_s:g}s: n={ws['count']} "
+                f"rate={ws['rate_per_s']:.2f}/s p50={ws['p50']:.2f}ms "
+                f"p95={ws['p95']:.2f}ms p99={ws['p99']:.2f}ms")
+    if not served:
+        # a run that served zero queries still prints a complete,
+        # well-formed block — not a bare header (and never a divide)
+        lines.append("no queries served")
+    if slo_monitor is not None:
+        for st in slo_monitor.evaluate():
+            gf = ("-" if st.good_fraction is None
+                  else f"{st.good_fraction:.4f}")
+            lines.append(
+                f"slo {st.name}: {st.state} good={gf} "
+                f"burn={st.burn_rate:.2f} "
+                f"budget={st.budget_remaining:.3f} ({st.detail})")
     stage = [(labels.get("stage", "?"), m) for name, labels, m in hists
              if name == "stage_ms"]
     if stage:

@@ -1,0 +1,269 @@
+"""Telemetry HTTP server: /metrics, /healthz, /slo, /debug/traces,
+/debug/profile (DESIGN.md §8.5).
+
+A stdlib ``ThreadingHTTPServer`` on a daemon thread — no new
+dependencies — turning the in-process ``Obs`` bundle into the
+scrapeable surface a multi-process cluster needs (ROADMAP "scale-out"):
+
+- ``GET /metrics``   Prometheus text exposition, rolling-window gauges
+  included. Rendering is snapshot-atomic per instrument (one locked
+  ``state()`` read per histogram), so a scrape never observes a torn
+  registry — a ``_count`` that disagrees with its bucket vector.
+- ``GET /healthz``   JSON aggregation of registered health sources
+  (ShardRouter replica rotation, ingest WAL/compactor liveness).
+  Status ``ok``/``degraded`` answer 200, ``down`` answers 503, so a
+  load balancer can act on the code alone.
+- ``GET /slo``       JSON of every objective's burn state (§8.4).
+- ``GET /debug/traces``  JSON dump of the tracer's retained traces.
+- ``GET /debug/profile?ms=N``  opt-in ``jax.profiler`` capture: writes
+  a trace of the next N ms (default 500, capped at 10 s) under the
+  server's ``profile_dir``. 409 when profiling wasn't enabled, 423
+  while another capture is running.
+
+Handlers only *read* instruments (capture aside); nothing here is on a
+query path. The server binds loopback by default — operators proxy it,
+the repo never exposes raw telemetry on all interfaces by accident.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Dict, List, Optional
+from urllib.parse import parse_qs, urlparse
+
+HealthSource = Callable[[], Dict]
+
+_STATUS_RANK = {"ok": 0, "degraded": 1, "down": 2}
+
+
+def aggregate_health(components: Dict[str, Dict]) -> str:
+    """Worst-of component statuses (missing/invalid counts as down)."""
+    worst = "ok"
+    for comp in components.values():
+        s = comp.get("status", "down")
+        if s not in _STATUS_RANK:       # an unknown status is not healthy
+            s = "down"
+        if _STATUS_RANK[s] > _STATUS_RANK[worst]:
+            worst = s
+    return worst
+
+
+def router_health_source(router) -> HealthSource:
+    """ShardRouter replica rotation -> health component. A shard with
+    every replica out of rotation cannot serve: ``down``. Any replica
+    out while a sibling covers it: ``degraded``."""
+    def probe() -> Dict:
+        health = router.health()          # [[in_rotation per replica]]
+        dead_shards = [s for s, row in enumerate(health) if not any(row)]
+        down_reps = sum(not ok for row in health for ok in row)
+        status = ("down" if dead_shards
+                  else "degraded" if down_reps else "ok")
+        return {"status": status,
+                "shards": len(health),
+                "replicas_down": down_reps,
+                "dead_shards": dead_shards,
+                "failovers": router.failovers,
+                "rotation": health}
+    return probe
+
+
+def ingest_health_source(pipelines_fn: Callable[[], List]) -> HealthSource:
+    """Ingest pipeline liveness: WAL open + compactor thread alive for
+    every live pipeline. ``pipelines_fn`` is called per probe so a
+    pipeline attached after the server started is still covered."""
+    def probe() -> Dict:
+        pipes = [p for p in pipelines_fn() if p is not None]
+        detail = []
+        status = "ok"
+        for p in pipes:
+            closed = bool(getattr(p, "_closed", False))
+            compactor = getattr(p, "_compactor", None)
+            wants_compactor = bool(getattr(p.cfg, "auto_compact", False))
+            compactor_ok = (not wants_compactor
+                            or (compactor is not None and
+                                compactor.is_alive()))
+            if closed or not compactor_ok:
+                status = "down" if closed else "degraded"
+            detail.append({"root": getattr(p.store, "root", "?"),
+                           "closed": closed,
+                           "compactor_alive": bool(
+                               compactor is not None and
+                               compactor.is_alive()),
+                           "wal_seq": getattr(p.wal, "last_seq", None),
+                           "memtable_docs": len(p.memtable)})
+        return {"status": status, "pipelines": len(pipes),
+                "detail": detail}
+    return probe
+
+
+def register_searcher_health(server: "TelemetryServer", searcher) -> None:
+    """Wire whichever health surfaces ``searcher`` exposes: a cluster
+    session's router, or a store session's ingest pipeline(s)."""
+    router = getattr(searcher, "router", None)
+    if router is not None:
+        server.add_health_source("router", router_health_source(router))
+        server.add_health_source(
+            "ingest", ingest_health_source(router.ingest_pipelines))
+    elif hasattr(searcher, "ingest"):
+        server.add_health_source(
+            "ingest",
+            ingest_health_source(lambda: [getattr(searcher, "ingest",
+                                                  None)]))
+
+
+class TelemetryServer:
+    """The live scrape surface for one ``Obs`` bundle. ``port=0`` binds
+    an ephemeral port (tests); the bound one is ``self.port``."""
+
+    def __init__(self, obs, *, host: str = "127.0.0.1", port: int = 0,
+                 slo_monitor=None, profile_dir: Optional[str] = None,
+                 prefix: str = "repro"):
+        self.obs = obs
+        self.slo_monitor = slo_monitor
+        self.profile_dir = profile_dir
+        self.prefix = prefix
+        self._health_sources: Dict[str, HealthSource] = {}
+        self._health_lock = threading.Lock()
+        self._profile_lock = threading.Lock()
+        server = self
+
+        class _Handler(BaseHTTPRequestHandler):
+            def log_message(self, *a):      # quiet: scrapes are periodic
+                pass
+
+            def do_GET(self):
+                try:
+                    server._route(self)
+                except BrokenPipeError:     # scraper went away mid-write
+                    pass
+                except Exception as e:      # a probe must never kill the
+                    try:                    # serving thread
+                        self.send_error(500, explain=repr(e))
+                    except Exception:
+                        pass
+
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.2},
+            daemon=True, name=f"telemetry-:{self.port}")
+        self._thread.start()
+
+    # -- wiring --------------------------------------------------------
+    def add_health_source(self, name: str, source: HealthSource) -> None:
+        with self._health_lock:
+            self._health_sources[name] = source
+
+    def url(self, path: str = "/metrics") -> str:
+        return f"http://{self.host}:{self.port}{path}"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- routing -------------------------------------------------------
+    def _route(self, h: BaseHTTPRequestHandler) -> None:
+        parsed = urlparse(h.path)
+        path = parsed.path.rstrip("/") or "/"
+        if path == "/metrics":
+            body = self.obs.registry.to_prometheus(
+                prefix=self.prefix, include_windows=True)
+            self._send(h, 200, body, "text/plain; version=0.0.4")
+        elif path == "/healthz":
+            status, payload = self.healthz()
+            self._send_json(h, 200 if status != "down" else 503, payload)
+        elif path == "/slo":
+            self._send_json(h, 200, self.slo_snapshot())
+        elif path == "/debug/traces":
+            self._send_json(h, 200, {
+                "schema": "repro-traces-v1",
+                "traces": self.obs.tracer.export()})
+        elif path == "/debug/profile":
+            self._profile(h, parse_qs(parsed.query))
+        else:
+            self._send_json(h, 404, {
+                "error": f"no route {path!r}",
+                "routes": ["/metrics", "/healthz", "/slo",
+                           "/debug/traces", "/debug/profile"]})
+
+    # -- endpoint bodies (callable without HTTP for tests/summaries) ---
+    def healthz(self):
+        with self._health_lock:
+            sources = dict(self._health_sources)
+        components: Dict[str, Dict] = {}
+        for name, probe in sources.items():
+            try:
+                components[name] = probe()
+            except Exception as e:          # a broken probe is itself a
+                components[name] = {"status": "down",   # health signal
+                                    "error": repr(e)}
+        status = aggregate_health(components) if components else "ok"
+        return status, {"status": status, "components": components}
+
+    def slo_snapshot(self) -> Dict:
+        if self.slo_monitor is None:
+            return {"slos": [], "note": "no SLO objectives configured"}
+        return {"slos": [s.to_dict() for s in self.slo_monitor.evaluate()]}
+
+    def _profile(self, h, query: Dict) -> None:
+        if not self.profile_dir:
+            self._send_json(h, 409, {
+                "error": "profiling disabled: start the server with "
+                         "profile_dir (search_serve --profile-dir)"})
+            return
+        ms = max(1, min(int(query.get("ms", ["500"])[0]), 10_000))
+        if not self._profile_lock.acquire(blocking=False):
+            self._send_json(h, 423, {"error": "capture already running"})
+            return
+        try:
+            import time as _time
+
+            import jax
+            with jax.profiler.trace(self.profile_dir):
+                _time.sleep(ms / 1e3)
+        except Exception as e:
+            self._send_json(h, 500, {"error": f"profiler failed: {e!r}"})
+            return
+        finally:
+            self._profile_lock.release()
+        self._send_json(h, 200, {"captured_ms": ms,
+                                 "dir": self.profile_dir})
+
+    # -- plumbing ------------------------------------------------------
+    @staticmethod
+    def _send(h, code: int, body: str, ctype: str) -> None:
+        data = body.encode()
+        h.send_response(code)
+        h.send_header("Content-Type", ctype)
+        h.send_header("Content-Length", str(len(data)))
+        h.end_headers()
+        h.wfile.write(data)
+
+    @classmethod
+    def _send_json(cls, h, code: int, payload) -> None:
+        cls._send(h, code, json.dumps(payload, indent=1),
+                  "application/json")
+
+
+def start_telemetry(searcher, *, port: int = 0, host: str = "127.0.0.1",
+                    slo_monitor=None,
+                    profile_dir: Optional[str] = None) -> TelemetryServer:
+    """One-call wiring for any serving target: build a server on the
+    searcher's ``Obs`` bundle and register its health surfaces."""
+    obs = getattr(searcher, "obs", None)
+    if obs is None:
+        raise ValueError("searcher has no obs bundle to serve")
+    server = TelemetryServer(obs, host=host, port=port,
+                             slo_monitor=slo_monitor,
+                             profile_dir=profile_dir)
+    register_searcher_health(server, searcher)
+    return server

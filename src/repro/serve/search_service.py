@@ -24,6 +24,7 @@ scheduler thread performs all scoring, so non-thread-safe searchers
 from __future__ import annotations
 
 import dataclasses
+import time
 from concurrent.futures import Future
 from typing import List
 
@@ -113,6 +114,12 @@ class SearchService:
         reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
         if not reqs:
             return
+        # per-request serving accounting (queue wait + scoring wall):
+        # the serve-surface query_ms series feeds the latency SLO the
+        # same way the session tiers feed store/cluster (DESIGN.md
+        # §8.4). Guarded so Obs.disabled() reads no clock.
+        timed = self.obs is not None and getattr(self.obs, "enabled", False)
+        t0 = time.perf_counter() if timed else 0.0
         try:
             Qn = max(max(r.q_ids.size for r in reqs), 1)
             qi = np.full((len(reqs), Qn), -1, np.int32)
@@ -132,10 +139,25 @@ class SearchService:
                     queue_wait_ms_max=round(max(waits), 3),
                     queue_wait_ms_mean=round(sum(waits) / len(waits), 3))
         except BaseException as e:
+            if timed:
+                reg = self.obs.registry
+                # the whole batch's clients see the failure: each is one
+                # bad event on the serve availability SLO
+                reg.counter("queries_total", surface="serve").inc(len(reqs))
+                reg.counter("query_errors_total",
+                            surface="serve").inc(len(reqs))
             for r in reqs:
                 if not r.future.done():
                     r.future.set_exception(e)
             return
+        if timed:
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            reg = self.obs.registry
+            h = reg.histogram("query_ms", surface="serve")
+            aligned = waits if len(waits) == len(reqs) else None
+            for l in range(len(reqs)):
+                h.observe(wall_ms + (aligned[l] if aligned else 0.0))
+            reg.counter("queries_total", surface="serve").inc(len(reqs))
         for l, r in enumerate(reqs):
             r.future.set_result(SearchResult(
                 doc_ids=np.array(res.doc_ids[l]),

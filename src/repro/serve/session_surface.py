@@ -20,6 +20,30 @@ class ServingSessionMixin:
         self._service = None
         self._service_lock = threading.Lock()
         self._closed = False
+        self._telemetry = None
+
+    def start_telemetry(self, *, port: int = 0, host: str = "127.0.0.1",
+                        slo_monitor=None, profile_dir=None):
+        """Start the live telemetry plane for this session (DESIGN.md
+        §8.5): an HTTP thread serving /metrics, /healthz, /slo, and
+        /debug/traces off the session's ``Obs`` bundle, with the
+        session's health surfaces (router replicas, ingest liveness)
+        registered. One server per session; a second call returns the
+        running one. Closed with the session."""
+        with self._service_lock:
+            if self._closed:
+                raise RuntimeError(f"{type(self).__name__} is closed")
+            if self._telemetry is None:
+                from repro.obs.server import start_telemetry
+                self._telemetry = start_telemetry(
+                    self, port=port, host=host, slo_monitor=slo_monitor,
+                    profile_dir=profile_dir)
+            return self._telemetry
+
+    @property
+    def telemetry(self):
+        """The running TelemetryServer, or None."""
+        return self._telemetry
 
     def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
         """The session's lazily-created SearchService (DESIGN.md §7):
@@ -53,6 +77,9 @@ class ServingSessionMixin:
             if self._service is not None:
                 self._service.close()
                 self._service = None
+            telemetry, self._telemetry = self._telemetry, None
+        if telemetry is not None:
+            telemetry.close()
         if first:
             self._close_resources()
 

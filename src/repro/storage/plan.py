@@ -187,6 +187,10 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
     h_decode = reg.histogram("stage_ms", stage="decode")
     h_upload = reg.histogram("stage_ms", stage="upload")
     h_score = reg.histogram("stage_ms", stage="score")
+    # the Obs.disabled() floor (§8.1): with a null registry AND no trace
+    # span, every perf_counter() read below is dead weight — skip them
+    # all, so the disabled path costs zero clock syscalls per slab
+    timed = not (reg is NULL_REGISTRY and span is NULL_SPAN)
 
     def load(step: PlanStep):
         """Prefetch-thread body: cache lookup, else mmap read -> ELL
@@ -202,7 +206,7 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
                 lspan.end(source=SOURCE_CACHE)
                 return step, hit.slab
             stats.cache_misses += 1
-        t0 = time.perf_counter()
+        t0 = time.perf_counter() if timed else 0.0
         seg = view.segment(step.name)
         if plan.fmt.startswith("fused"):
             # the fused kernel decodes the Fig. 8 words on-device: the
@@ -213,22 +217,23 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
             slab, n_docs, n_trunc = engine.put_stream_slab(
                 seg.stream(), pad_docs_to=plan.slab_docs)
             view.release(step.name)
-            t1 = t2 = time.perf_counter()
+            t1 = t2 = time.perf_counter() if timed else 0.0
             stats.docs_scored += n_docs
             stats.pairs_truncated += n_trunc
         else:
             doc_ids, ids, vals, norms, n_trunc = stream_format.decode_to_ell(
                 seg.stream(), plan.nnz_pad)
             view.release(step.name)
-            t1 = time.perf_counter()
+            t1 = time.perf_counter() if timed else 0.0
             n_docs = int(doc_ids.size)
             stats.docs_scored += n_docs
             stats.pairs_truncated += n_trunc
             corpus = Corpus(doc_ids, ids, vals, norms)
             slab = engine.put_slab(corpus.pad_docs_to(plan.slab_docs))
-            t2 = time.perf_counter()
-        h_decode.observe((t1 - t0) * 1e3)
-        h_upload.observe((t2 - t1) * 1e3)
+            t2 = time.perf_counter() if timed else 0.0
+        if timed:
+            h_decode.observe((t1 - t0) * 1e3)
+            h_upload.observe((t2 - t1) * 1e3)
         # admission is gated on the LIVE store generation still matching
         # the generation the plan's segment list was captured at: once a
         # fold/compact has moved it, this segment may be a graveyard
@@ -241,9 +246,10 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
                 plan.key_for(step.name), slab,
                 n_docs=n_docs, n_trunc=n_trunc,
                 admit=lambda: view.live_generation == plan.generation)
-        lspan.end(source=SOURCE_DISK,
-                  decode_ms=round((t1 - t0) * 1e3, 3),
-                  upload_ms=round((t2 - t1) * 1e3, 3))
+        if timed:
+            lspan.end(source=SOURCE_DISK,
+                      decode_ms=round((t1 - t0) * 1e3, 3),
+                      upload_ms=round((t2 - t1) * 1e3, 3))
         return step, slab
 
     if plan.is_empty:
@@ -259,41 +265,45 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
         stats.docs_scored += plan.memtable.n_docs
         stats.pairs_truncated += plan.memtable_trunc
         mem_slab = plan.memtable.pad_docs_to(plan.memtable_pad)
-    pf = Prefetcher(plan.steps, load, depth=prefetch_depth) \
+    pf = Prefetcher(plan.steps, load, depth=prefetch_depth,
+                    timed=timed) \
         if plan.steps else None
     try:
         if mem_slab is not None:
             # scored while the prefetcher's worker loads the first slabs
             sspan = span.child("score", segment="memtable")
-            t0 = time.perf_counter()
+            t0 = time.perf_counter() if timed else 0.0
             folds[-1] = engine.search_streaming(q_ids, q_vals, [mem_slab])
-            h_score.observe((time.perf_counter() - t0) * 1e3)
+            if timed:
+                h_score.observe((time.perf_counter() - t0) * 1e3)
             sspan.end(source="memtable", docs=stats.memtable_docs)
         if pf is not None:
             for step, slab in pf:
                 sspan = span.child("score", segment=step.name,
                                    rank=step.rank)
-                t0 = time.perf_counter()
+                t0 = time.perf_counter() if timed else 0.0
                 folds[step.rank] = engine.search_streaming(
                     q_ids, q_vals, [slab])
-                h_score.observe((time.perf_counter() - t0) * 1e3)
+                if timed:
+                    h_score.observe((time.perf_counter() - t0) * 1e3)
                 sspan.end()
     finally:
         if pf is not None:
             pf.close()
-    if pf is not None:
+    if pf is not None and timed:
         wait_ms = pf.consumer_wait_s * 1e3
         reg.histogram("stage_ms", stage="prefetch_wait").observe(wait_ms)
         span.set(prefetch_wait_ms=round(wait_ms, 3))
     mspan = span.child("merge")
-    t0 = time.perf_counter()
+    t0 = time.perf_counter() if timed else 0.0
     best = None
     for r in folds:
         if r is None:
             continue
         best = r if best is None else _merge_results(best, r,
                                                      engine.cfg.top_k)
-    reg.histogram("stage_ms", stage="merge").observe(
-        (time.perf_counter() - t0) * 1e3)
+    if timed:
+        reg.histogram("stage_ms", stage="merge").observe(
+            (time.perf_counter() - t0) * 1e3)
     mspan.end(folds=sum(r is not None for r in folds))
     return best

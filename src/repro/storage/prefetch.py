@@ -34,13 +34,17 @@ class _WorkerError:
 
 class Prefetcher(Generic[T, U]):
     def __init__(self, items: Iterable[T], load: Callable[[T], U],
-                 depth: int = 2):
+                 depth: int = 2, timed: bool = True):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._finished = False
         self._closed = False
+        # timed=False is the Obs.disabled() floor: the blocking path
+        # skips its perf_counter pair too, so a fully-disabled scan does
+        # zero clock reads in this module (consumer_wait_s stays 0.0)
+        self._timed = timed
         # seconds the consumer spent blocked waiting on the worker: the
         # overlap telemetry (DESIGN.md §8.2) — 0 means the prefetcher
         # fully hid the disk+decode latency behind scoring
@@ -80,9 +84,12 @@ class Prefetcher(Generic[T, U]):
         try:                        # fast path: slab already queued —
             v = self._q.get_nowait()   # no clock reads on full overlap
         except queue.Empty:
-            t0 = time.perf_counter()
-            v = self._q.get()
-            self.consumer_wait_s += time.perf_counter() - t0
+            if self._timed:
+                t0 = time.perf_counter()
+                v = self._q.get()
+                self.consumer_wait_s += time.perf_counter() - t0
+            else:
+                v = self._q.get()
         if v is _DONE:
             self._finished = True
             raise StopIteration

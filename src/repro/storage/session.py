@@ -37,7 +37,7 @@ import numpy as np
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import MeshCtx, single_device_ctx
-from repro.obs import NULL_SPAN, Obs, default_obs
+from repro.obs import NULL_REGISTRY, NULL_SPAN, Obs, default_obs
 from repro.serve.session_surface import ServingSessionMixin
 from repro.storage.plan import Planner, execute_plan
 from repro.storage.slabcache import CacheStats, SlabCache
@@ -153,7 +153,11 @@ class FlashSearchSession(ServingSessionMixin):
         cluster router hands each shard session a child span of the
         cluster trace): when set, this query joins the parent's trace
         and the parent owns the query-level accounting."""
-        t0 = time.perf_counter()
+        # the wall clock only matters when this call owns the query-level
+        # accounting AND the bundle is live (Obs.disabled() floor: zero
+        # clock reads on the whole path, asserted by test_obs_disabled)
+        timed = self.obs.enabled and _span is None
+        t0 = time.perf_counter() if timed else 0.0
         trace = None
         if _span is None:
             trace = self.obs.tracer.start("query", surface="store",
@@ -172,10 +176,17 @@ class FlashSearchSession(ServingSessionMixin):
                                             span)
                 finally:
                     snap.close()
+        except BaseException:
+            if _span is None:
+                # the availability-SLO bad-event stream (§8.4); nested
+                # calls leave the error to the router's cluster counter
+                self.obs.registry.counter(
+                    "query_errors_total", surface="store").inc()
+            raise
         finally:
             if trace is not None:
                 trace.finish()
-        if _span is None:
+        if timed:
             # nested (per-shard) calls skip this: the router publishes
             # the cluster aggregate, so counting here would double it
             st = self.last_stats
@@ -193,11 +204,13 @@ class FlashSearchSession(ServingSessionMixin):
         ``snap`` carries the memtable when the view is a snapshot):
         plan, then run the shared executor (DESIGN.md §4.1)."""
         reg = self.obs.registry
+        timed = not (reg is NULL_REGISTRY and span is NULL_SPAN)
         pspan = span.child("plan")
-        t0 = time.perf_counter()
+        t0 = time.perf_counter() if timed else 0.0
         plan = self._planner.plan(view, q_ids, snap)
-        reg.histogram("stage_ms", stage="plan").observe(
-            (time.perf_counter() - t0) * 1e3)
+        if timed:
+            reg.histogram("stage_ms", stage="plan").observe(
+                (time.perf_counter() - t0) * 1e3)
         pspan.end(segments_total=plan.segments_total,
                   skipped=len(plan.skipped), cached=plan.n_cached,
                   disk=plan.n_disk,

@@ -1,0 +1,144 @@
+"""The CI perf-regression gate (DESIGN.md §13): per-row tolerance
+bands, the absolute noise floor, informational new/missing rows,
+schema validation, and the end-to-end exit status of bench_compare."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from bench_compare import (DEFAULT_TOL, GATES, compare, compare_row,
+                           load_rows)  # noqa: E402
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+
+
+def _report(rows):
+    return {"schema": "repro-bench-v1",
+            "benches": {"storage": {
+                "rows": [{"name": n, "us_per_call": v, "derived": {}}
+                         for n, v in rows.items()]}}}
+
+
+def _write(path, rows):
+    path.write_text(json.dumps(_report(rows)))
+    return str(path)
+
+
+# -- per-row verdicts --------------------------------------------------
+
+def test_warm_row_band_is_15_percent():
+    name = "storage/warm_query_ms"
+    assert GATES[name] == 0.15
+    st, delta, tol = compare_row(name, 10_000.0, 12_000.0)   # +20%
+    assert st == "FAIL" and delta == pytest.approx(0.20) and tol == 0.15
+    st, *_ = compare_row(name, 10_000.0, 11_000.0)           # +10%: inside
+    assert st == "ok"
+    st, *_ = compare_row(name, 10_000.0, 8_000.0)            # -20%
+    assert st == "improved"
+
+
+def test_cold_and_unlisted_rows_get_loose_bands():
+    st, _, tol = compare_row("storage/cold_query_ms", 10_000.0, 14_000.0)
+    assert st == "ok" and tol == 0.50                        # +40% < 50%
+    st, _, tol = compare_row("some/new_row", 10_000.0, 14_000.0)
+    assert st == "ok" and tol == DEFAULT_TOL
+    st, *_ = compare_row("some/new_row", 10_000.0, 16_000.0)
+    assert st == "FAIL"
+
+
+def test_noise_floor_suppresses_tiny_rows():
+    # 120 us -> 400 us is a +233% "regression" made of scheduler jitter
+    st, delta, _ = compare_row("storage/warm_query_ms", 120.0, 400.0)
+    assert st == "noise" and delta > 2.0
+    # but a row that *crosses* the floor still gates
+    st, *_ = compare_row("storage/warm_query_ms", 450.0, 900.0)
+    assert st == "FAIL"
+    # and the floor is tunable
+    st, *_ = compare_row("storage/warm_query_ms", 120.0, 400.0, min_us=50.0)
+    assert st == "FAIL"
+
+
+def test_zero_baseline_is_noise():
+    st, delta, _ = compare_row("x", 0.0, 5000.0)
+    assert st == "noise" and delta == 0.0
+
+
+# -- full-report diff --------------------------------------------------
+
+def test_new_and_missing_rows_are_informational():
+    base = {"storage/warm_query_ms": 10_000.0, "storage/gone": 9_000.0}
+    cur = {"storage/warm_query_ms": 10_100.0, "storage/added": 7_000.0}
+    lines, failed = compare(base, cur)
+    assert failed == []
+    joined = "\n".join(lines)
+    assert "only in baseline" in joined and "new row" in joined
+    assert "informational" in joined
+
+
+def test_compare_collects_failures():
+    base = {"storage/warm_query_ms": 10_000.0,
+            "storage/fused_warm_query_ms": 10_000.0}
+    cur = {"storage/warm_query_ms": 12_000.0,          # +20%: fails
+           "storage/fused_warm_query_ms": 10_500.0}    # +5%: ok
+    lines, failed = compare(base, cur)
+    assert failed == ["storage/warm_query_ms"]
+    assert any(l.strip().startswith("FAIL") for l in lines)
+
+
+# -- file loading ------------------------------------------------------
+
+def test_load_rows_flattens_report(tmp_path):
+    p = _write(tmp_path / "a.json", {"x": 1.0, "y": 2.0})
+    assert load_rows(p) == {"x": 1.0, "y": 2.0}
+
+
+def test_load_rows_rejects_unknown_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "other-v9", "benches": {}}))
+    with pytest.raises(SystemExit):
+        load_rows(str(p))
+
+
+def test_committed_baseline_loads_and_self_compares():
+    baseline = os.path.join(BENCH_DIR, "BENCH_baseline.json")
+    rows = load_rows(baseline)
+    assert "storage/warm_query_ms" in rows
+    assert all(g in rows for g in GATES if g.startswith("storage/"))
+    lines, failed = compare(rows, rows)        # identity: nothing gates
+    assert failed == []
+
+
+# -- CLI end-to-end ----------------------------------------------------
+
+def _run(*argv):
+    return subprocess.run(
+        [sys.executable, os.path.join(BENCH_DIR, "bench_compare.py"),
+         *argv], capture_output=True, text=True)
+
+
+def test_cli_exit_codes(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  {"storage/warm_query_ms": 10_000.0})
+    good = _write(tmp_path / "good.json",
+                  {"storage/warm_query_ms": 10_800.0})
+    bad = _write(tmp_path / "bad.json",
+                 {"storage/warm_query_ms": 13_000.0})
+    r = _run(base, good)
+    assert r.returncode == 0 and "no gated regressions" in r.stdout
+    r = _run(base, bad)
+    assert r.returncode == 1
+    assert "regressed beyond tolerance" in r.stderr
+
+
+def test_cli_update_baseline(tmp_path):
+    base = _write(tmp_path / "base.json",
+                  {"storage/warm_query_ms": 10_000.0})
+    cur = _write(tmp_path / "cur.json",
+                 {"storage/warm_query_ms": 13_000.0})
+    r = _run(base, cur, "--update-baseline")
+    assert r.returncode == 0
+    assert load_rows(base) == {"storage/warm_query_ms": 13_000.0}

@@ -1,0 +1,282 @@
+"""Telemetry HTTP server (DESIGN.md §8.5): endpoint well-formedness
+over live sessions, the /healthz flip when a cluster replica is killed,
+the telemetry-on differential (scraped mid-query vs Obs.disabled()),
+atomic exporters, and the summary/timeline rendering edge cases."""
+import json
+import os
+import shutil
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.cluster import FlashClusterSession
+from repro.cluster.store import build_sharded_store
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.obs import Obs, QueryTrace
+from repro.obs.export import (render_summary, render_trace, write_metrics,
+                              write_traces)
+from repro.obs.server import TelemetryServer, aggregate_health
+from repro.obs.slo import SLOMonitor, default_slos
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    corpus = corpus_lib.synthesize(400, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                   CFG.nnz_pad, seed=11)
+    root = str(tmp_path_factory.mktemp("srv") / "store")
+    store = FlashStore.create(root, vocab_size=CFG.vocab_size,
+                              docs_per_segment=100)
+    store.append_corpus(corpus)
+    return corpus, root
+
+
+def _query(corpus, idx=7):
+    qi, qv = corpus_lib.make_query(corpus, idx, CFG.max_query_nnz)
+    return qi[None], qv[None]
+
+
+def _get(url):
+    """(status, body) — urllib raises on 4xx/5xx but the HTTPError *is*
+    the response."""
+    try:
+        with urllib.request.urlopen(url, timeout=10) as resp:
+            return resp.status, resp.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+# -- health aggregation ------------------------------------------------
+
+def test_aggregate_health_worst_of():
+    assert aggregate_health({}) == "ok"
+    assert aggregate_health({"a": {"status": "ok"}}) == "ok"
+    assert aggregate_health({"a": {"status": "ok"},
+                             "b": {"status": "degraded"}}) == "degraded"
+    assert aggregate_health({"a": {"status": "degraded"},
+                             "b": {"status": "down"}}) == "down"
+    assert aggregate_health({"a": {}}) == "down"          # missing status
+    assert aggregate_health({"a": {"status": "garbage"}}) == "down"
+
+
+# -- store session endpoints -------------------------------------------
+
+def test_store_endpoints_well_formed(setup):
+    corpus, root = setup
+    obs = Obs(trace_sample=1)
+    # threshold far above a cold first query (compile included), so the
+    # endpoint assertions are about plumbing, not machine speed
+    mon = SLOMonitor(obs, default_slos("store", latency_ms=60_000.0))
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    srv = sess.start_telemetry(slo_monitor=mon)
+    assert sess.start_telemetry() is srv       # idempotent
+    assert sess.telemetry is srv
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+
+    code, body = _get(srv.url("/metrics"))
+    assert code == 200
+    assert "# TYPE repro_query_ms histogram" in body
+    assert 'repro_queries_total{surface="store"} 1' in body
+    assert 'stat="p99"' in body                # window gauges included
+
+    code, body = _get(srv.url("/healthz"))
+    health = json.loads(body)
+    assert code == 200 and health["status"] == "ok"
+    assert "ingest" in health["components"]    # store surface: WAL probe
+
+    code, body = _get(srv.url("/slo"))
+    slos = json.loads(body)["slos"]
+    assert code == 200 and len(slos) == 2
+    assert {s["kind"] for s in slos} == {"latency", "availability"}
+    assert all(s["state"] == "ok" for s in slos)
+
+    code, body = _get(srv.url("/debug/traces"))
+    dump = json.loads(body)
+    assert code == 200 and dump["schema"] == "repro-traces-v1"
+    assert dump["traces"][0]["root"]["name"] == "query"
+
+    code, body = _get(srv.url("/debug/profile"))
+    assert code == 409                         # no profile_dir configured
+    assert "profiling disabled" in json.loads(body)["error"]
+
+    code, body = _get(srv.url("/nope"))
+    assert code == 404
+    assert "/metrics" in json.loads(body)["routes"]
+
+    port = srv.port
+    sess.close()                               # closes the server too
+    assert sess.telemetry is None
+    with pytest.raises(OSError):
+        urllib.request.urlopen(f"http://127.0.0.1:{port}/metrics",
+                               timeout=2)
+    with pytest.raises(RuntimeError):
+        sess.start_telemetry()                 # closed session refuses
+
+
+# -- the killed-replica /healthz flip ----------------------------------
+
+def test_cluster_healthz_flips_on_killed_replica(setup, tmp_path):
+    corpus, _ = setup
+    cl = build_sharded_store(str(tmp_path / "c"), _corpus_docs(corpus),
+                             n_shards=2, replicas=2,
+                             vocab_size=CFG.vocab_size, docs_per_segment=100)
+    obs = Obs()
+    sess = FlashClusterSession(cl, CFG, obs=obs)
+    srv = sess.start_telemetry()
+    qi, qv = _query(corpus)
+    baseline = sess.search(qi, qv)
+
+    code, body = _get(srv.url("/healthz"))
+    health = json.loads(body)
+    assert code == 200 and health["status"] == "ok"
+    router = health["components"]["router"]
+    assert router["shards"] == 2 and router["replicas_down"] == 0
+
+    # kill shard 0 replica 0 on disk; the next query fails over to the
+    # sibling, health-marks the dead replica, and /healthz degrades —
+    # while results stay bit-identical (replicas are byte-wise copies)
+    shutil.rmtree(cl.shard_path(0, 0))
+    # drop the cached handles so the replica re-opens (and fails) — an
+    # already-mmapped store would keep serving the unlinked bytes
+    cl._open_stores.pop((0, 0), None)
+    with sess.router._lock:
+        stale, sess.router._sessions[0][0] = sess.router._sessions[0][0], \
+            None
+    if stale is not None:
+        stale.close()
+    r = sess.search(qi, qv)
+    np.testing.assert_array_equal(r.doc_ids, baseline.doc_ids)
+    np.testing.assert_array_equal(r.scores, baseline.scores)
+
+    code, body = _get(srv.url("/healthz"))
+    health = json.loads(body)
+    assert code == 200                         # degraded still serves
+    assert health["status"] == "degraded"
+    router = health["components"]["router"]
+    assert router["replicas_down"] == 1 and router["dead_shards"] == []
+    assert router["failovers"] >= 1
+    assert router["rotation"][0] == [False, True]
+
+    # every replica of a shard out of rotation: down, and the HTTP code
+    # flips to 503 so a load balancer can eject the node
+    sess.router.mark_down(0, 1)
+    code, body = _get(srv.url("/healthz"))
+    health = json.loads(body)
+    assert code == 503 and health["status"] == "down"
+    assert health["components"]["router"]["dead_shards"] == [0]
+
+    # /metrics and /slo stay well-formed while degraded
+    code, body = _get(srv.url("/metrics"))
+    assert code == 200 and "repro_cluster_shard_ms" in body
+    code, body = _get(srv.url("/slo"))
+    assert code == 200 and json.loads(body)["slos"] == []
+    sess.close()
+
+
+# -- the live-scrape differential --------------------------------------
+
+def test_results_bit_identical_while_scraped(setup):
+    # the §8 acceptance differential extended to the live plane: a
+    # server being scraped concurrently with queries must not change
+    # results vs Obs.disabled() with no server at all
+    corpus, root = setup
+    off = FlashSearchSession(FlashStore.open(root), CFG, obs=Obs.disabled())
+    on = FlashSearchSession(FlashStore.open(root), CFG,
+                            obs=Obs(trace_sample=1))
+    srv = on.start_telemetry()
+
+    stop = threading.Event()
+    scrapes = [0]
+
+    def scraper():
+        while not stop.is_set():
+            code, body = _get(srv.url("/metrics"))
+            assert code == 200 and body.endswith("\n")
+            scrapes[0] += 1
+            _get(srv.url("/healthz"))
+            stop.wait(0.005)
+
+    t = threading.Thread(target=scraper, daemon=True)
+    t.start()
+    try:
+        for idx in (0, 57, 123, 399):
+            qi, qv = _query(corpus, idx)
+            a, b = on.search(qi, qv), off.search(qi, qv)
+            np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+            np.testing.assert_array_equal(a.scores, b.scores)
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    assert scrapes[0] > 0
+    on.close()
+    off.close()
+
+
+# -- atomic exporters --------------------------------------------------
+
+def test_exporters_are_atomic_no_tmp_residue(setup, tmp_path):
+    corpus, root = setup
+    obs = Obs(trace_sample=1)
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+    mpath = str(tmp_path / "metrics.prom")
+    tpath = str(tmp_path / "traces.json")
+    for _ in range(3):                         # overwrite path too
+        write_metrics(obs, mpath)
+        assert write_traces(obs, tpath) >= 1
+    assert not os.path.exists(mpath + ".tmp")
+    assert not os.path.exists(tpath + ".tmp")
+    assert "repro_query_ms" in open(mpath).read()
+    assert json.load(open(tpath))["schema"] == "repro-traces-v1"
+    sess.close()
+
+
+# -- rendering edge cases ----------------------------------------------
+
+def test_render_summary_zero_queries_is_complete():
+    class Bare:
+        pass
+    out = render_summary(Bare(), Obs())
+    assert "== observability summary ==" in out
+    assert "no queries served" in out          # not a bare header
+
+
+def test_render_summary_includes_window_and_slo_lines(setup):
+    corpus, root = setup
+    obs = Obs()
+    mon = SLOMonitor(obs, default_slos("store", latency_ms=60_000.0))
+    sess = FlashSearchSession(FlashStore.open(root), CFG, obs=obs)
+    qi, qv = _query(corpus)
+    sess.search(qi, qv)
+    out = render_summary(sess, obs, slo_monitor=mon)
+    assert "last 60s: n=1" in out              # the rolling-window line
+    assert "slo store-latency: ok" in out
+    assert "slo store-availability: ok" in out
+    sess.close()
+
+
+def test_render_trace_sub_100us_spans_in_microseconds():
+    tr = QueryTrace("query", surface="test")
+    with tr.root.child("merge") as m:
+        m.set(docs=0)
+    tr.finish()
+    d = tr.to_dict()["root"]
+    d["children"][0]["dur_ms"] = 0.0123        # a 12.3 µs no-op merge
+    d["dur_ms"] = 1.5
+
+    class Fake:
+        def to_dict(self):
+            return {"root": d}
+
+    out = render_trace(Fake())
+    assert "12.3µs" in out                     # not 0.000ms
+    assert "1.500ms" in out

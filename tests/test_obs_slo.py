@@ -1,0 +1,166 @@
+"""SLO objectives and burn-state accounting (DESIGN.md §8.4): builder
+validation, latency/availability good-fraction math, the
+ok -> burning -> exhausted transitions under a synthetic latency step,
+recovery semantics, and the published gauges."""
+import pytest
+
+from repro.obs import Obs, MetricsRegistry
+from repro.obs.slo import (SLOMonitor, SLObjective, availability_slo,
+                           default_slos, latency_slo,
+                           STATE_BURNING, STATE_EXHAUSTED, STATE_OK)
+from tests.test_obs_window import FakeClock
+
+
+def _obs(clock, window_s=10.0, slices=5):
+    return Obs(registry=MetricsRegistry(window_s=window_s,
+                                        window_slices=slices, clock=clock))
+
+
+# -- objective declaration ---------------------------------------------
+
+def test_builders_and_validation():
+    o = latency_slo("store-latency", threshold_ms=250.0, target=0.99,
+                    surface="store")
+    assert o.kind == "latency" and o.threshold_ms == 250.0
+    assert o.label_dict == {"surface": "store"}
+    a = availability_slo("cluster-avail", target=0.999, surface="cluster")
+    assert a.error_metric == "query_errors_total"
+    with pytest.raises(ValueError):
+        latency_slo("bad", threshold_ms=10.0, target=0.0)
+    with pytest.raises(ValueError):
+        latency_slo("bad", threshold_ms=10.0, target=1.5)
+    with pytest.raises(ValueError):
+        SLObjective(name="x", kind="nonsense", metric="m", labels=(),
+                    target=0.9)
+    stock = default_slos("store", latency_ms=100.0)
+    assert [s.kind for s in stock] == ["latency", "availability"]
+
+
+def test_no_traffic_is_ok():
+    obs = _obs(FakeClock())
+    mon = SLOMonitor(obs, default_slos("store"))
+    for st in mon.evaluate():
+        assert st.state == STATE_OK
+        assert st.good_fraction is None
+        assert st.burn_rate == 0.0
+        assert st.window_events == 0
+
+
+# -- the latency-step transition ---------------------------------------
+
+def test_latency_step_ok_to_burning_to_recovered():
+    clk = FakeClock()
+    obs = _obs(clk)
+    mon = SLOMonitor(obs, [latency_slo(
+        "store-latency", threshold_ms=100.0, target=0.90, surface="store")])
+    h = obs.registry.histogram("query_ms", surface="store")
+
+    for _ in range(1000):         # healthy: everything under threshold
+        h.observe(10.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_OK
+    assert st.good_fraction == pytest.approx(1.0)
+
+    clk.advance(20.0)             # healthy burst ages out of the window
+    for _ in range(170):          # the synthetic latency step: 15% slow
+        h.observe(10.0)
+    for _ in range(30):
+        h.observe(5000.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_BURNING
+    assert st.window_events == 200
+    # window bad fraction 30/200 vs allowed 10% -> burn 1.5; lifetime
+    # bad 30/1200 -> budget 1 - 0.025/0.10 = 0.75, still in budget
+    assert st.burn_rate == pytest.approx(0.15 / 0.10, rel=1e-6)
+    assert st.budget_remaining == pytest.approx(0.75, rel=1e-6)
+
+    clk.advance(50.0)             # the step ages out of the window...
+    for _ in range(100):
+        h.observe(10.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_OK   # ...and the burn state recovers
+    assert st.good_fraction == pytest.approx(1.0)
+    # ...but the lifetime budget stays spent (error budgets accumulate)
+    assert st.budget_remaining < 1.0
+
+
+def test_sustained_burn_exhausts_budget_and_stays_exhausted():
+    clk = FakeClock()
+    obs = _obs(clk)
+    mon = SLOMonitor(obs, [latency_slo(
+        "tight", threshold_ms=1.0, target=0.99, surface="store")])
+    h = obs.registry.histogram("query_ms", surface="store")
+    for _ in range(100):          # every event bad vs a 1% allowance
+        h.observe(500.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_EXHAUSTED
+    assert st.budget_remaining <= 0.0
+    clk.advance(100.0)            # idle window: burn 0, budget still gone
+    (st,) = mon.evaluate()
+    assert st.state == STATE_EXHAUSTED
+    assert st.burn_rate == 0.0
+
+
+def test_target_one_edge():
+    # target=1.0 allows zero bad events: one failure is instant
+    # exhaustion, zero failures stay ok (no division by the 0 allowance)
+    clk = FakeClock()
+    obs = _obs(clk)
+    mon = SLOMonitor(obs, [latency_slo(
+        "perfect", threshold_ms=100.0, target=1.0, surface="store")])
+    h = obs.registry.histogram("query_ms", surface="store")
+    h.observe(1.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_OK
+    h.observe(5000.0)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_EXHAUSTED
+
+
+# -- availability ------------------------------------------------------
+
+def test_availability_counts_errors():
+    clk = FakeClock()
+    obs = _obs(clk)
+    mon = SLOMonitor(obs, [availability_slo(
+        "cluster-avail", target=0.90, surface="cluster")])
+    total = obs.registry.counter("queries_total", surface="cluster")
+    errs = obs.registry.counter("query_errors_total", surface="cluster")
+    total.inc(100)
+    (st,) = mon.evaluate()
+    assert st.state == STATE_OK and st.good_fraction == pytest.approx(1.0)
+    errs.inc(50)                  # 50% errors vs 10% allowance
+    (st,) = mon.evaluate()
+    assert st.state in (STATE_BURNING, STATE_EXHAUSTED)
+    assert st.good_fraction == pytest.approx(0.5)
+    assert st.burn_rate == pytest.approx(5.0)
+    clk.advance(100.0)            # errors age out of the window
+    total.inc(100)
+    (st,) = mon.evaluate()
+    assert st.good_fraction == pytest.approx(1.0)
+    assert st.burn_rate == 0.0
+
+
+# -- gauge publication -------------------------------------------------
+
+def test_evaluate_publishes_gauges_and_dict():
+    clk = FakeClock()
+    obs = _obs(clk)
+    mon = SLOMonitor(obs, [latency_slo(
+        "store-latency", threshold_ms=100.0, target=0.90, surface="store")])
+    h = obs.registry.histogram("query_ms", surface="store")
+    for _ in range(10):
+        h.observe(5000.0)
+    (st,) = mon.evaluate()
+    reg = obs.registry
+    assert reg.gauge("slo_state", slo="store-latency").value == 2.0
+    assert reg.gauge("slo_burn_rate", slo="store-latency").value >= 1.0
+    assert reg.gauge("slo_good_fraction",
+                     slo="store-latency").value == pytest.approx(0.0)
+    d = st.to_dict()
+    assert d["name"] == "store-latency" and d["state"] == STATE_EXHAUSTED
+    assert set(d) >= {"kind", "target", "good_fraction", "burn_rate",
+                      "budget_remaining", "window_events",
+                      "lifetime_events", "detail"}
+    text = reg.to_prometheus()
+    assert 'repro_slo_state{slo="store-latency"} 2' in text
