@@ -12,6 +12,21 @@ Prints the same ``name,us_per_call,derived`` CSV rows as run.py:
     serve/recompiles           engine programs traced across the whole
                                sweep (acceptance: <= log2(max_batch)+1)
 
+plus the closed-loop *overload* scenario (DESIGN.md §7.3): demand is
+pushed far past a deterministic searcher's capacity, first through the
+legacy unbounded FIFO queue, then with the scheduling layer on
+(bounded pending queue + per-request deadlines):
+
+    serve/overload_fifo_p99_ms   what unbounded queueing does to tails
+    serve/overload_sched_p99_ms  p99 of *served* requests (acceptance:
+                                 <= the SLO — overload must not leak
+                                 into the latency of admitted work)
+    serve/overload_shed_rate     fraction refused/expired with a typed
+                                 error (acceptance: > 0 — the layer
+                                 sheds instead of queueing)
+    serve/sched_bit_identity     scheduling on (no pressure) vs legacy
+                                 positional results (acceptance: exact)
+
 The sweep warms every L-bucket program first, so rows measure steady
 state; the recompile row shows what the L-bucket cache held compilation
 to across every batch size served.
@@ -34,13 +49,73 @@ import numpy as np
 
 from repro.configs.paper_search import SearchConfig
 from repro.core import corpus as corpus_lib
-from repro.core.engine import PatternSearchEngine
+from repro.core.engine import PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import single_device_ctx
-from repro.serve import SearchService
+from repro.serve import (DeadlineExceeded, OverloadError, Query,
+                         QueryOptions, SearchService)
+
+# overload scenario knobs: a deterministic 5ms/batch searcher at
+# max_batch=4 caps capacity at ~800 q/s; 48 closed-loop clients demand
+# far more, so FIFO queueing stretches waits to ~(48/4)*5ms while the
+# scheduled run bounds the pending set at 12 and sheds the rest
+OVERLOAD_CLIENTS = 48
+OVERLOAD_REQUESTS = 20
+OVERLOAD_BATCH = 4
+OVERLOAD_SERVICE_MS = 5.0
+OVERLOAD_MAX_PENDING = 12
+OVERLOAD_DEADLINE_MS = 25.0
+OVERLOAD_SLO_MS = 40.0
 
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+
+
+class _SlowSearcher:
+    """Deterministic stand-in for the engine: every batch costs exactly
+    ``service_ms`` of wall time, so the overload rows measure the
+    scheduler, not scoring noise."""
+
+    def __init__(self, service_ms, top_k=4):
+        self.service_s = service_ms / 1e3
+        self.top_k = top_k
+
+    def search(self, qi, qv):
+        time.sleep(self.service_s)
+        L = qi.shape[0]
+        return SearchResult(np.zeros((L, self.top_k), np.int64),
+                            np.zeros((L, self.top_k), np.float32))
+
+
+def _overload_run(svc, options):
+    """Closed-loop overload: every client immediately re-submits when
+    its previous request resolves (served, shed, or expired). Returns
+    (served latencies [s], n_shed, n_expired)."""
+    lats = [[] for _ in range(OVERLOAD_CLIENTS)]
+    shed = [0] * OVERLOAD_CLIENTS
+    expired = [0] * OVERLOAD_CLIENTS
+    qi = np.array([3, 7, 11], np.int32)
+    qv = np.array([1.0, 2.0, 1.0], np.float32)
+
+    def client(tid):
+        for _ in range(OVERLOAD_REQUESTS):
+            t0 = time.perf_counter()
+            try:
+                svc.submit(Query(qi, qv), options=options).result()
+                lats[tid].append(time.perf_counter() - t0)
+            except OverloadError:
+                shed[tid] += 1
+            except DeadlineExceeded:
+                expired[tid] += 1
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(OVERLOAD_CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return (np.concatenate([np.asarray(l) for l in lats if l]),
+            sum(shed), sum(expired))
 
 
 def _run_clients(n_clients, n_requests, do_query):
@@ -146,6 +221,53 @@ def main():
           f"{'PASS' if ok else 'FAIL'} (speedup {speedup:.2f}x >= 2x, "
           f"{n_traces} traces <= {bound})")
     if not ok and not args.no_gate:
+        sys.exit(1)
+
+    # -- overload: FIFO baseline vs the scheduling layer ----------------
+    # baseline: unbounded queue, no deadlines — overload becomes tail
+    # latency for everyone (every request waits out the whole backlog)
+    with SearchService(_SlowSearcher(OVERLOAD_SERVICE_MS),
+                       max_batch=OVERLOAD_BATCH, max_delay_ms=1.0) as svc:
+        fifo_lats, _, _ = _overload_run(svc, options=None)
+    fifo_p99 = float(np.percentile(fifo_lats, 99) * 1e3)
+    _row("serve/overload_fifo_p99_ms", 0.0, f"{fifo_p99:.1f}")
+
+    # scheduled: bounded pending queue + per-request deadlines — the
+    # same demand sheds at the door, and what IS served stays fast
+    with SearchService(_SlowSearcher(OVERLOAD_SERVICE_MS),
+                       max_batch=OVERLOAD_BATCH, max_delay_ms=1.0,
+                       max_pending=OVERLOAD_MAX_PENDING) as svc:
+        opts = QueryOptions(deadline_ms=OVERLOAD_DEADLINE_MS)
+        sched_lats, n_shed, n_expired = _overload_run(svc, options=opts)
+    total = OVERLOAD_CLIENTS * OVERLOAD_REQUESTS
+    sched_p99 = float(np.percentile(sched_lats, 99) * 1e3)
+    shed_rate = (n_shed + n_expired) / total
+    _row("serve/overload_sched_p99_ms", 0.0, f"{sched_p99:.1f}")
+    _row("serve/overload_shed_rate", 0.0,
+         f"{shed_rate:.3f} ({n_shed} shed + {n_expired} expired / {total})")
+
+    # bit-identity: scheduling without pressure changes nothing
+    rng = np.random.default_rng(23)
+    ident = True
+    with SearchService(eng, max_batch=4, max_delay_ms=1.0) as svc:
+        for _ in range(8):
+            qi, qv = draw(rng)
+            legacy = eng.search_typed(Query(qi[None], qv[None]))
+            resp = svc.submit(Query(qi, qv), options=QueryOptions(
+                deadline_ms=60_000.0)).result()
+            ident &= bool(np.array_equal(resp.doc_ids, legacy.doc_ids[0])
+                          and np.array_equal(resp.scores,
+                                             legacy.scores[0]))
+    _row("serve/sched_bit_identity", 0.0, "exact" if ident else "DIVERGED")
+
+    ok2 = (sched_p99 <= OVERLOAD_SLO_MS and shed_rate > 0.0
+           and sched_p99 < fifo_p99 and ident)
+    print(f"serve/overload_acceptance,{0.0:.1f},"
+          f"{'PASS' if ok2 else 'FAIL'} "
+          f"(sched p99 {sched_p99:.1f}ms <= SLO {OVERLOAD_SLO_MS:.0f}ms "
+          f"< fifo p99 {fifo_p99:.1f}ms, shed rate {shed_rate:.3f} > 0, "
+          f"bit-identity {'exact' if ident else 'DIVERGED'})")
+    if not ok2 and not args.no_gate:
         sys.exit(1)
 
 

@@ -1,11 +1,16 @@
 """Concurrent query serving: 16 blocking clients, one engine, coalesced
-micro-batches (DESIGN.md §7).
+micro-batches (DESIGN.md §7) — driven through the typed Query /
+QueryOptions request API (DESIGN.md §7.3).
 
 Each "user" thread submits single queries and blocks on its Future —
 the closed-loop shape of real traffic. The SearchService coalesces
 whatever is pending into one L-column batch per corpus pass, so
 throughput scales with concurrency while every client still gets
-exactly the result a serial engine.search would have returned.
+exactly the result a serial engine search would have returned. Passing
+QueryOptions opts a request into the scheduling plane: it gets a
+latency budget (the EDF batcher flushes early to honor it), a tenant
+for admission accounting, and a SearchResponse back whose QueryStats
+report the queue wait the scheduler actually charged it.
 
     PYTHONPATH=src python examples/serve_search.py
 """
@@ -18,7 +23,7 @@ from repro.configs.paper_search import SearchConfig
 from repro.core import corpus as corpus_lib
 from repro.core.engine import PatternSearchEngine
 from repro.distributed.meshctx import single_device_ctx
-from repro.serve import SearchService
+from repro.serve import Query, QueryOptions, SearchService
 
 
 def main():
@@ -38,21 +43,27 @@ def main():
     while L <= 8:
         qs = [corpus_lib.make_query(corpus, int(rng.integers(n_docs)), 48)
               for _ in range(L)]
-        engine.search(np.stack([q[0] for q in qs]),
-                      np.stack([q[1] for q in qs]))
+        engine.search(Query(np.stack([q[0] for q in qs]),
+                            np.stack([q[1] for q in qs])))
         L *= 2
 
     hits = []
+    waits = []
     lock = threading.Lock()
+    # every request runs under a generous 250ms budget; the EDF batcher
+    # flushes early rather than let one miss it
+    opts = QueryOptions(deadline_ms=250.0, tenant="demo")
     with SearchService(engine, max_batch=8, max_delay_ms=2.0) as svc:
         def client(tid):
             crng = np.random.default_rng(100 + tid)
             for _ in range(per_client):
                 want = int(crng.integers(n_docs))
                 qi, qv = corpus_lib.make_query(corpus, want, 48)
-                res = svc.submit(qi, qv).result()   # blocking Future
+                resp = svc.submit(Query(qi, qv),
+                                  options=opts).result()  # blocking Future
                 with lock:
-                    hits.append(res.doc_ids[0] == want)
+                    hits.append(resp.doc_ids[0] == want)
+                    waits.append(resp.stats.queue_wait_ms)
 
         threads = [threading.Thread(target=client, args=(t,))
                    for t in range(n_clients)]
@@ -68,6 +79,8 @@ def main():
     print(f"\n{n} queries in {wall:.2f}s -> {n / wall:.0f} QPS")
     print(f"batches: {st.n_batches}, mean occupancy "
           f"{st.mean_occupancy:.2f}, flushes {st.flushes}")
+    print(f"queue wait (scheduler-attributed): mean "
+          f"{np.mean(waits):.2f} ms, max {np.max(waits):.2f} ms")
     print(f"engine programs compiled: "
           f"{engine.compile_stats['n_traces']} (L-bucket cache)")
     assert all(hits), "every self-query must rank its own document first"

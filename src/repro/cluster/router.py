@@ -21,6 +21,22 @@ sibling succeeds on the same query, which localizes the fault to the
 replica rather than the query. Only when every replica of a shard
 fails does the query raise ``ClusterSearchError`` — and then nothing
 is marked, so one malformed request cannot brick the cluster.
+
+PR 9 makes the gather deadline-aware (DESIGN.md §7.3): a query carrying
+``QueryOptions(deadline_ms=..., allow_partial=True)`` stops waiting on
+stragglers at its budget and returns the merged top-k of the shards
+that responded, flagged ``partial=True`` with the missing shard list in
+``last_stats`` — bit-identical to the full gather whenever every shard
+responds in time, because the merge still folds in shard order over
+exactly the same per-shard candidates. Replica *hedging* attacks the
+straggler before the budget does: when a replica attempt outlives the
+straggler threshold (a percentile of the rolling-window
+``cluster_shard_ms`` distribution — serve/hedging.py), the same query
+fires at the next replica and the first result wins; replicas are
+byte-identical, so a hedged result is still bit-identical. Abandoned
+and losing attempts run to completion on their executor; per-replica
+session locks serialize them against subsequent queries, so the
+stateful FlashSearchSession is never raced.
 """
 from __future__ import annotations
 
@@ -29,8 +45,8 @@ import logging
 import os
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import List, Optional, Tuple
+from concurrent.futures import ThreadPoolExecutor, wait
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,6 +54,9 @@ from repro.cluster.store import ShardedStore
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import SearchResult, _merge_results
 from repro.obs import NULL_SPAN, Obs, default_obs
+from repro.serve.api import (Query, QueryOptions, QueryStats, SearchResponse,
+                             coerce_request, truncate_k)
+from repro.serve.hedging import HedgePolicy, SpawnExecutor, run_hedged
 from repro.storage.session import FlashSearchSession, SearchStats
 from repro.storage.slabcache import CacheStats, SlabCache
 
@@ -45,7 +64,20 @@ log = logging.getLogger(__name__)
 
 
 class ClusterSearchError(RuntimeError):
-    """Every replica of one shard failed the query."""
+    """Every replica of one shard failed the query (or no replica was
+    in rotation to take it). Carries structured context so the partial
+    and hedged paths — and operators reading logs — can attribute the
+    failure: ``shard``, ``replica_errors`` (replica index -> exception
+    summary), and the ``trace_id`` of the sampled cluster trace (None
+    when this query wasn't sampled)."""
+
+    def __init__(self, msg: str, *, shard: Optional[int] = None,
+                 replica_errors: Optional[Dict[int, str]] = None,
+                 trace_id: Optional[int] = None):
+        super().__init__(msg)
+        self.shard = shard
+        self.replica_errors = dict(replica_errors or {})
+        self.trace_id = trace_id
 
 
 @dataclasses.dataclass
@@ -54,9 +86,17 @@ class ClusterStats:
     ``per_shard[s]`` is None until shard s has served a query.
     ``failovers`` snapshots the router's *lifetime* count of replicas
     taken out of rotation (confirmed failovers plus manual
-    ``mark_down`` calls), not a per-batch figure."""
+    ``mark_down`` calls), not a per-batch figure. The scheduling fields
+    (DESIGN.md §7.3) are per-batch: ``partial``/``shards_missing``
+    record a deadline-bound gather that returned without every shard
+    (a missing shard's ``per_shard`` slot stays None), ``hedges``/
+    ``hedge_wins`` count straggler hedges fired and won."""
     per_shard: List[Optional[SearchStats]]
     failovers: int = 0
+    partial: bool = False
+    shards_missing: Tuple[int, ...] = ()
+    hedges: int = 0
+    hedge_wins: int = 0
 
     def _sum(self, field: str) -> int:
         # `or 0` tolerates shards reporting partial stats (e.g. a
@@ -128,7 +168,8 @@ class ShardRouter:
                  max_workers: Optional[int] = None,
                  slab_cache: Optional[SlabCache] = None,
                  cache_bytes: Optional[int] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 hedge_policy: Optional[HedgePolicy] = None):
         self.store = store
         self.cfg = cfg
         self.backend = backend
@@ -146,7 +187,25 @@ class ShardRouter:
         self._sessions: List[List[Optional[FlashSearchSession]]] = \
             [[None] * r for _ in range(n)]
         self._down: List[List[bool]] = [[False] * r for _ in range(n)]
+        # per-(shard, replica) locks: a shard session is stateful, so a
+        # hedge loser or an abandoned partial-gather straggler still
+        # running must serialize against the next query's attempt on
+        # the same replica (DESIGN.md §7.3)
+        self._sess_locks: List[List[threading.Lock]] = \
+            [[threading.Lock() for _ in range(r)] for _ in range(n)]
         self._lock = threading.Lock()    # session creation + health marks
+        # the router's default straggler policy; per-query
+        # QueryOptions.hedging overrides (False pins off, True forces
+        # on with a default policy when none is configured)
+        self.hedge_policy = hedge_policy
+        # hedge attempts run on their own lazy spawn-per-attempt
+        # executor: launching them on self._pool could deadlock (every
+        # worker blocked in a gather waiting for a hedge that can't get
+        # a thread), and a *bounded* hedge pool starves — an abandoned
+        # loser sleeping inside a straggler holds a worker, so the next
+        # query's hedge would queue behind the very straggler it was
+        # meant to outrun
+        self._hedge_pool: Optional[SpawnExecutor] = None
         # default concurrency adapts to the host: concurrent jax CPU
         # dispatch *loses* to serial below ~4 cores (client contention),
         # so small hosts get one worker (serialized shards, still correct)
@@ -184,6 +243,8 @@ class ShardRouter:
                 n, r = self.store.n_shards, self.store.replicas
                 self._sessions = [[None] * r for _ in range(n)]
                 self._down = [[False] * r for _ in range(n)]
+                self._sess_locks = [[threading.Lock() for _ in range(r)]
+                                    for _ in range(n)]
                 self.last_stats = ClusterStats([None] * n)
                 self._gen = self.store.generation
         for sess in stale:
@@ -306,88 +367,212 @@ class ShardRouter:
             return [[not d for d in row] for row in self._down]
 
     # -- scatter/gather ------------------------------------------------
-    def _search_shard(self, shard: int, q_ids: np.ndarray,
-                      q_vals: np.ndarray, span=NULL_SPAN
-                      ) -> Tuple[SearchResult, SearchStats, float]:
-        """Pool-thread body: primary replica first, fail over in replica
-        order. A failed attempt contributes nothing to the merge (its
-        candidates are discarded whole), so retried shards can never
-        duplicate documents.
+    def _hedge_executor(self) -> SpawnExecutor:
+        with self._lock:
+            if self._hedge_pool is None:
+                self._hedge_pool = SpawnExecutor()
+            return self._hedge_pool
+
+    def _attempt(self, shard: int, rep: int, query: Query, span
+                 ) -> Tuple[SearchResult, SearchStats, int]:
+        """One replica attempt, serialized per (shard, replica): the
+        session is stateful, so a losing hedge or an abandoned straggler
+        still scoring must finish before the next query's attempt on
+        the same replica starts. The stats snapshot is taken under the
+        same lock, so it can't pair with a later query's counters."""
+        rspan = span.child("replica", replica=rep)
+        try:
+            with self._sess_locks[shard][rep]:
+                sess = self._session(shard, rep)
+                # dispatch via .search (typed form: no shim, no warning)
+                # so fault-injecting wrappers that intercept .search see
+                # every replica attempt
+                res = sess.search(query, _span=rspan)
+                st = dataclasses.replace(sess.last_stats)
+        except BaseException as e:
+            rspan.end(error=repr(e))
+            raise
+        rspan.end()
+        return res, st, rep
+
+    def _search_shard(self, shard: int, query: Query, span=NULL_SPAN,
+                      hedge_after_s: Optional[float] = None,
+                      trace_id: Optional[int] = None
+                      ) -> Tuple[SearchResult, SearchStats, float, int, int]:
+        """Pool-thread body: primary replica first, then the next in
+        replica order — *sequentially* on failure (the fail-over path),
+        and additionally *concurrently* after ``hedge_after_s`` of
+        silence when hedging is armed (the straggler path; replicas are
+        byte-identical, so first-result-wins is still bit-identical). A
+        failed attempt contributes nothing to the merge (its candidates
+        are discarded whole), so retried shards can never duplicate
+        documents.
 
         A replica is health-marked down only when a *sibling* replica
         then succeeds on the same query — that localizes the fault to
-        the replica. When every replica fails, the error almost
-        certainly travels with the query (bad shape, poisoned input),
-        so no marks are recorded and the next query gets every replica
-        back: one malformed request must never brick the cluster.
+        the replica. A hedge that merely *outruns* a slow primary marks
+        nothing: slow is not failed. When every replica fails, the
+        error almost certainly travels with the query (bad shape,
+        poisoned input), so no marks are recorded and the next query
+        gets every replica back: one malformed request must never brick
+        the cluster — the raised ``ClusterSearchError`` carries the
+        shard id, per-replica error summaries, and the trace id.
 
         ``span`` is this shard's child of the cluster trace; each
-        replica attempt nests one level deeper, so a fail-over shows up
-        as sibling replica spans (the failed one attr'd with its
-        error). Returns the shard wall time for straggler attribution."""
+        replica attempt nests one level deeper, so fail-overs and
+        hedges show up as sibling replica spans (failed ones attr'd
+        with their error). Returns (result, stats, wall_ms,
+        hedges_fired, hedge_won)."""
         t0 = time.perf_counter()
+        reps = [r for r in range(self.store.replicas)
+                if not self._down[shard][r]]
         try:
-            last: Optional[Exception] = None
-            failed: list = []
-            for rep in range(self.store.replicas):
-                if self._down[shard][rep]:
-                    continue
-                rspan = span.child("replica", replica=rep)
+            if not reps:
+                raise ClusterSearchError(
+                    f"shard {shard}: no replica in rotation",
+                    shard=shard, trace_id=trace_id)
+            errs: Dict[int, BaseException] = {}
+            fired = won = 0
+            if hedge_after_s is not None and len(reps) > 1:
+                def make(rep: int):
+                    def attempt():
+                        try:
+                            return self._attempt(shard, rep, query, span)
+                        except BaseException as e:
+                            errs[rep] = e
+                            raise
+                    return attempt
+
                 try:
-                    sess = self._session(shard, rep)
-                    res = sess.search(q_ids, q_vals, _span=rspan)
-                except Exception as e:
-                    rspan.end(error=repr(e))
-                    last = e
-                    log.warning(
-                        "shard %d replica %d failed (%s); failing over",
-                        shard, rep, e)
-                    failed.append(rep)
-                    continue
-                rspan.end()
-                for r in failed:
+                    out = run_hedged(
+                        [make(r) for r in reps], self._hedge_executor(),
+                        hedge_after_s=hedge_after_s,
+                        on_hedge=lambda i: log.debug(
+                            "shard %d: hedging to replica %d", shard,
+                            reps[i]))
+                except ClusterSearchError:
+                    raise
+                except BaseException as e:
+                    raise ClusterSearchError(
+                        f"shard {shard}: all {len(reps)} in-rotation "
+                        f"replicas failed",
+                        shard=shard, trace_id=trace_id,
+                        replica_errors={r: repr(x)
+                                        for r, x in errs.items()}) from e
+                res, st, rep = out.result
+                fired, won = out.hedges_fired, int(out.hedge_won)
+            else:
+                res = None
+                for rep in reps:
+                    try:
+                        res, st, _ = self._attempt(shard, rep, query, span)
+                        break
+                    except Exception as e:
+                        errs[rep] = e
+                        log.warning(
+                            "shard %d replica %d failed (%s); failing over",
+                            shard, rep, e)
+                if res is None:
+                    raise ClusterSearchError(
+                        f"shard {shard}: all {len(reps)} in-rotation "
+                        f"replicas failed",
+                        shard=shard, trace_id=trace_id,
+                        replica_errors={r: repr(x) for r, x in errs.items()}
+                    ) from (errs[reps[-1]] if reps[-1] in errs else None)
+            # the winner proves the query is serveable: errored siblings
+            # (fail-overs in either path) leave rotation
+            for r in errs:
+                if r != rep:
                     self.mark_down(shard, r)
-                wall_ms = (time.perf_counter() - t0) * 1e3
-                span.end(replica=rep, wall_ms=round(wall_ms, 3))
-                return res, dataclasses.replace(sess.last_stats), wall_ms
-            raise ClusterSearchError(
-                f"shard {shard}: all {self.store.replicas} replicas failed"
-            ) from last
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            span.end(replica=rep, wall_ms=round(wall_ms, 3),
+                     **({"hedges": fired} if fired else {}))
+            return res, st, wall_ms, fired, won
         except BaseException as e:
             span.end(error=repr(e))
             raise
 
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
-        """q_ids/q_vals ``[L, Qn]`` (pad < 0) -> global ``[L, k]`` top-k
-        over every shard. Shards run concurrently; the merge folds in
-        shard order, so results are deterministic regardless of which
-        shard finishes first."""
+    def search_typed(self, query: Query,
+                     options: Optional[QueryOptions] = None, *,
+                     _span=None) -> SearchResult:
+        """Typed scatter/gather: ``Query`` rows ``[L, Qn]`` (pad < 0) ->
+        global ``[L, k]`` top-k over every shard. Shards run
+        concurrently; the merge folds in shard order, so results are
+        deterministic regardless of which shard finishes first.
+
+        ``options`` is the scheduling contract (DESIGN.md §7.3):
+        ``deadline_ms`` + ``allow_partial=True`` cap the gather wait —
+        shards that haven't answered at the budget are dropped from the
+        merge and listed in ``last_stats.shards_missing`` (and a failed
+        shard becomes a missing shard instead of an error);
+        ``hedging`` overrides the router's straggler policy. Per-query
+        ``k`` truncation and ``SearchResponse`` wrapping belong to the
+        public ``search`` shim — this method always returns the raw
+        merged ``SearchResult`` (what the coalescing service demuxes)."""
         self._reconcile_generation()
+        opts = options if options is not None else QueryOptions()
+        q_rows = query.rows()
         t_start = time.perf_counter()
+        deadline = (t_start + opts.deadline_ms / 1e3
+                    if opts.deadline_ms is not None else None)
         n = self.store.n_shards
         trace = self.obs.tracer.start("query", surface="cluster",
-                                      L=int(q_ids.shape[0]), shards=n)
+                                      L=int(q_rows[0].shape[0]), shards=n)
         root = trace.root if trace is not None else NULL_SPAN
+        trace_id = trace.trace_id if trace is not None else None
         reg = self.obs.registry
         h_shard = reg.histogram("cluster_shard_ms")
+        # resolve the straggler policy: per-query override beats the
+        # router default; hedging needs a second replica to fire at
+        policy = self.hedge_policy
+        if opts.hedging is False:
+            policy = None
+        elif opts.hedging is True and policy is None:
+            policy = HedgePolicy()
+        hedge_after_s = (policy.hedge_after_ms(reg) / 1e3
+                         if policy is not None and self.store.replicas > 1
+                         else None)
         stats = ClusterStats([None] * n)
         walls: List[Optional[float]] = [None] * n
+        missing: List[int] = []
         try:
-            futs = [self._pool.submit(self._search_shard, s, q_ids, q_vals,
-                                      root.child("shard", shard=s))
+            shard_spans = [root.child("shard", shard=s) for s in range(n)]
+            futs = [self._pool.submit(self._search_shard, s, query,
+                                      shard_spans[s], hedge_after_s,
+                                      trace_id)
                     for s in range(n)]
             # the gather span covers waiting out the stragglers plus the
             # shard-order fold — the scatter itself lives in the shard
             # children above
             gspan = root.child("gather")
+            partial_ok = opts.allow_partial and deadline is not None
+            if partial_ok:
+                # one bounded wait for the whole scatter; anything not
+                # done at the budget is abandoned (it keeps running on
+                # the pool — the per-replica locks serialize it against
+                # the next query — but contributes nothing here)
+                wait(futs, timeout=max(0.0, deadline - time.perf_counter()))
             best: Optional[SearchResult] = None
             err: Optional[BaseException] = None
             for s, fut in enumerate(futs):
+                if partial_ok and not fut.done():
+                    missing.append(s)
+                    shard_spans[s].end(abandoned=True)
+                    continue
                 try:
-                    res, st, wall_ms = fut.result()
+                    # without partial consent this blocks for the shard:
+                    # the legacy full-gather contract
+                    res, st, wall_ms, fired, won = fut.result()
                 except BaseException as e:
+                    if opts.allow_partial:
+                        # degraded, not failed: SpANNS-style flagged
+                        # partial answer — the caller consented
+                        missing.append(s)
+                        continue
                     err = err or e
                     continue
+                stats.hedges += fired
+                stats.hedge_wins += won
                 walls[s] = wall_ms
                 h_shard.observe(wall_ms)
                 # per-shard series feed the per-shard latency SLOs
@@ -405,11 +590,22 @@ class ShardRouter:
                     walls[straggler])
                 root.set(straggler_shard=straggler,
                          straggler_ms=round(walls[straggler], 3))
-            gspan.end(shards_merged=len(done))
+            gspan.end(shards_merged=len(done),
+                      **({"shards_missing": missing} if missing else {}))
         finally:
             if trace is not None:
                 trace.finish()
         stats.failovers = self.failovers
+        stats.partial = bool(missing)
+        stats.shards_missing = tuple(missing)
+        if missing:
+            reg.counter("cluster_partial_total").inc()
+            log.warning("cluster gather partial: shards %s missed the "
+                        "%.1fms budget", missing, opts.deadline_ms or 0.0)
+        if stats.hedges:
+            reg.counter("cluster_hedges_total").inc(stats.hedges)
+        if stats.hedge_wins:
+            reg.counter("cluster_hedge_wins_total").inc(stats.hedge_wins)
         self.last_stats = stats
         if err is not None:
             # the cluster availability-SLO bad-event stream (§8.4);
@@ -417,13 +613,44 @@ class ShardRouter:
             reg.counter("query_errors_total", surface="cluster").inc()
             reg.counter("queries_total", surface="cluster").inc()
             raise err
-        assert best is not None          # n_shards >= 1
+        if best is None:
+            # every shard missed the budget: a well-formed no-result
+            # answer ([L, k] sentinel rows), flagged partial above —
+            # never a hang, never a malformed shape
+            L, k = q_rows[0].shape[0], self.cfg.top_k
+            best = SearchResult(np.full((L, k), -1, np.int64),
+                                np.full((L, k), -np.inf, np.float32))
         self.obs.note_query(
             "cluster", (time.perf_counter() - t_start) * 1e3,
             shards=n, segments_scored=stats.segments_scored,
             cache_hits=stats.cache_hits)
         self.obs.publish_search_stats(stats, surface="cluster")
         return best
+
+    def search(self, query, q_vals=None, *,
+               options: Optional[QueryOptions] = None):
+        """Public search surface. Typed form — ``search(Query(ids,
+        vals), options=QueryOptions(...))`` — returns a
+        ``SearchResponse`` carrying this query's scheduling stats;
+        positional ``search(q_ids, q_vals)`` arrays remain as a
+        deprecation shim returning the bare ``SearchResult``
+        (repro/serve/api.py)."""
+        try:
+            q, options = coerce_request(query, q_vals, options,
+                                        surface="ShardRouter.search")
+        except ValueError as e:
+            # a malformed query is still a ClusterSearchError at this
+            # surface (the pre-redesign contract): it fails before any
+            # shard work, so replica health is never marked
+            raise ClusterSearchError(f"malformed query: {e}") from e
+        res = self.search_typed(q, options=options)
+        if options is None:
+            return res
+        st = self.last_stats
+        return SearchResponse(truncate_k(res, options.k), QueryStats(
+            partial=st.partial, hedged=bool(st.hedge_wins),
+            shards_missing=st.shards_missing,
+            deadline_ms=options.deadline_ms, tenant=options.tenant))
 
     # -- introspection -------------------------------------------------
     @property
@@ -451,6 +678,10 @@ class ShardRouter:
 
     def close(self):
         self._pool.shutdown(wait=True)
+        with self._lock:
+            hedge_pool, self._hedge_pool = self._hedge_pool, None
+        if hedge_pool is not None:
+            hedge_pool.shutdown(wait=True)
         with self._lock:
             for row in self._sessions:
                 for sess in row:

@@ -14,12 +14,11 @@ from __future__ import annotations
 
 from typing import Optional, Union
 
-import numpy as np
-
-from repro.cluster.router import ClusterStats, ShardRouter
+from repro.cluster.router import ClusterStats, HedgePolicy, ShardRouter
 from repro.cluster.store import ShardedStore
 from repro.configs.paper_search import SearchConfig
 from repro.core.engine import SearchResult
+from repro.serve.api import Query, QueryOptions
 from repro.serve.session_surface import ServingSessionMixin
 
 
@@ -29,12 +28,15 @@ class FlashClusterSession(ServingSessionMixin):
                  prefetch_depth: int = 2,
                  max_workers: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
-                 obs=None):
+                 obs=None, hedge_policy: Optional[HedgePolicy] = None):
         """``cache_bytes`` sizes the cluster-shared device slab cache
         (DESIGN.md §4.2) every shard-replica session draws on
         (None = default budget, 0 = disabled). ``obs`` shares one
         observability bundle (DESIGN.md §8) across the router and every
-        shard session; None falls back to the process default."""
+        shard session; None falls back to the process default.
+        ``hedge_policy`` arms replica hedging as the router default
+        (DESIGN.md §7.3); per-query ``QueryOptions.hedging``
+        overrides."""
         if isinstance(store, str):
             store = ShardedStore.open(store)
         if store.vocab_size > cfg.vocab_size:
@@ -47,7 +49,7 @@ class FlashClusterSession(ServingSessionMixin):
         self.router = ShardRouter(
             store, cfg, backend=backend, use_filter=use_filter,
             prefetch_depth=prefetch_depth, max_workers=max_workers,
-            cache_bytes=cache_bytes, obs=obs)
+            cache_bytes=cache_bytes, obs=obs, hedge_policy=hedge_policy)
         self._init_serving()
 
     @property
@@ -56,10 +58,23 @@ class FlashClusterSession(ServingSessionMixin):
         return self.router.obs
 
     # ------------------------------------------------------------------
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
-        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over every
-        shard (scatter/gather; see ShardRouter.search)."""
-        return self.router.search(q_ids, q_vals)
+    def search(self, query, q_vals=None, *,
+               options: Optional[QueryOptions] = None):
+        """Global top-k over every shard (scatter/gather; see
+        ShardRouter.search). Typed form — ``search(Query(ids, vals),
+        options=QueryOptions(...))`` — returns a ``SearchResponse``
+        with this query's scheduling stats (partial/hedged/missing
+        shards); positional ``(q_ids, q_vals)`` arrays remain as a
+        deprecation shim returning the bare ``SearchResult``."""
+        return self.router.search(query, q_vals, options=options)
+
+    def search_typed(self, query: Query,
+                     options: Optional[QueryOptions] = None, *,
+                     _span=None) -> SearchResult:
+        """The raw typed surface the coalescing service dispatches to
+        (no wrapping, no deprecation shim); see ShardRouter.search_typed
+        for the deadline/partial/hedging contract."""
+        return self.router.search_typed(query, options=options)
 
     # -- live ingestion (DESIGN.md §6.3) -------------------------------
     def enable_ingest(self, **knobs) -> "FlashClusterSession":

@@ -236,7 +236,36 @@ class PatternSearchEngine:
         cap = Lp * self.cfg.block_query
         return _next_pow2(-(-max(q_items, 1) // cap)) * cap
 
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray) -> SearchResult:
+    def search(self, query, q_vals=None, *, options=None):
+        """Public search surface. Typed form — ``search(Query(ids,
+        vals), options=QueryOptions(...))`` — returns a
+        ``SearchResponse``; positional ``search(q_ids, q_vals)``
+        ``[L, Qn]`` arrays (pad < 0) remain as a deprecation shim
+        returning the bare ``SearchResult`` (repro/serve/api.py). The
+        resident engine is pure compute, so of the scheduling options
+        only ``k`` applies here; deadlines/admission act in the serving
+        layer above (DESIGN.md §7.3)."""
+        # serve.api imported lazily: repro.serve imports this module
+        # (SearchService stacks batches into engine calls), so a
+        # module-level import here would be circular
+        from repro.serve.api import (QueryStats, SearchResponse,
+                                     coerce_request, truncate_k)
+        q, options = coerce_request(query, q_vals, options,
+                                    surface="PatternSearchEngine.search")
+        res = self._search_arrays(*q.rows())
+        if options is None:
+            return res
+        return SearchResponse(truncate_k(res, options.k), QueryStats(
+            deadline_ms=options.deadline_ms, tenant=options.tenant))
+
+    def search_typed(self, query, options=None, *, _span=None
+                     ) -> SearchResult:
+        """The raw typed surface the coalescing service dispatches to:
+        no wrapping, no shim warning (see serve/search_service.py)."""
+        return self._search_arrays(*query.rows())
+
+    def _search_arrays(self, q_ids: np.ndarray,
+                       q_vals: np.ndarray) -> SearchResult:
         """q_ids/q_vals: [L, Qn] (pad < 0). L is padded to its compile
         bucket (next power-of-two multiple of the model-axis size — the
         paper's L query batch, bucketed so the serving layer's variable
@@ -397,7 +426,9 @@ class PatternSearchEngine:
 
 
 def eng_search(eng: PatternSearchEngine, q_ids, q_vals) -> SearchResult:
-    return PatternSearchEngine.search(eng, q_ids, q_vals)
+    # the streaming hot loop's internal entry: positional arrays without
+    # the public shim's deprecation machinery
+    return PatternSearchEngine._search_arrays(eng, q_ids, q_vals)
 
 
 def _merge_results(a: SearchResult, b: SearchResult, k: int) -> SearchResult:

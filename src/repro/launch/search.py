@@ -12,6 +12,7 @@ from repro.configs.paper_search import SearchConfig
 from repro.core import corpus as corpus_lib
 from repro.core.engine import PatternSearchEngine
 from repro.distributed.meshctx import single_device_ctx
+from repro.serve import Query
 
 
 def main():
@@ -43,9 +44,10 @@ def main():
     qi = np.stack([q[0] for q in qs])
     qv = np.stack([q[1] for q in qs])
 
-    eng.search(qi, qv)            # warm up / compile
+    batch = Query(qi, qv)
+    eng.search(batch)             # warm up / compile
     t0 = time.time()
-    res = eng.search(qi, qv)
+    res = eng.search(batch)
     dt = time.time() - t0
     print(f"[search] {args.queries} queries x {args.n_docs} docs in "
           f"{dt*1e3:.1f} ms ({args.n_docs*args.queries/dt:.3e} "

@@ -55,7 +55,8 @@ from repro.distributed.meshctx import single_device_ctx
 from repro.obs import Obs
 from repro.obs.export import (render_summary, render_trace, write_metrics,
                               write_traces)
-from repro.serve import SearchService
+from repro.serve import (DeadlineExceeded, HedgePolicy, OverloadError, Query,
+                         QueryOptions, SearchService)
 
 
 def run_clients(n_clients, n_requests, do_query):
@@ -113,6 +114,29 @@ def main():
     ap.add_argument("--serial", action="store_true",
                     help="bypass the coalescer: engine.search per query "
                          "under a lock (the one-at-a-time baseline)")
+    # scheduling plane (DESIGN.md §7.3): deadlines, admission, hedging
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query latency budget: the EDF batcher "
+                         "flushes early to meet it and drops expired "
+                         "requests (DeadlineExceeded) before scoring")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission bound on queued+scoring requests; "
+                         "beyond it submits shed with OverloadError")
+    ap.add_argument("--tenant-qps", type=float, default=None,
+                    help="per-tenant token-bucket quota (tokens/s); "
+                         "over-quota submits shed with OverloadError")
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="consent to best-effort gathers: a cluster "
+                         "query that hits --deadline-ms returns the "
+                         "merged top-k of the responsive shards, "
+                         "flagged partial")
+    ap.add_argument("--hedge-percentile", type=float, default=None,
+                    metavar="P",
+                    help="arm replica hedging on the cluster: fire the "
+                         "next replica once a shard attempt outlives "
+                         "the rolling-window P-quantile of shard "
+                         "latency (e.g. 0.95; needs --cluster with "
+                         "replicas >= 2)")
     tgt = ap.add_mutually_exclusive_group()
     tgt.add_argument("--store", help="serve this FlashStore path through a "
                                      "FlashSearchSession")
@@ -183,8 +207,11 @@ def main():
     elif args.cluster:
         from repro.cluster import FlashClusterSession, ShardedStore
         cstore = ShardedStore.open(args.cluster)
+        hedge = (HedgePolicy(percentile=args.hedge_percentile)
+                 if args.hedge_percentile is not None else None)
         searcher = FlashClusterSession(cstore, cfg, backend=args.backend,
-                                       cache_bytes=cache_bytes, obs=obs)
+                                       cache_bytes=cache_bytes, obs=obs,
+                                       hedge_policy=hedge)
         corpus = cstore.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] cluster {args.cluster}: {cstore.n_shards} shards x "
               f"{cstore.replicas} replicas, {cstore.n_docs} docs")
@@ -257,9 +284,18 @@ def main():
         L = 1
         while L <= max_l:
             qs = [draw_query(rng) for _ in range(L)]
-            searcher.search(np.stack([q[0] for q in qs]),
-                            np.stack([q[1] for q in qs]))
+            searcher.search(Query(np.stack([q[0] for q in qs]),
+                                  np.stack([q[1] for q in qs])))
             L *= 2
+
+    # the per-query scheduling contract (None = legacy FIFO/unbounded)
+    q_opts = None
+    if (args.deadline_ms is not None or args.allow_partial
+            or args.hedge_percentile is not None):
+        q_opts = QueryOptions(deadline_ms=args.deadline_ms,
+                              allow_partial=args.allow_partial)
+    sched = {"shed": 0, "expired": 0}
+    sched_lock = threading.Lock()
 
     if args.serial:
         lock = threading.Lock()          # engines serve one call at a time
@@ -267,7 +303,7 @@ def main():
         def do_query(rng):
             qi, qv = draw_query(rng)
             with lock:
-                searcher.search(qi[None], qv[None])
+                searcher.search(Query(qi[None], qv[None]))
 
         warm_buckets(1)
         if writer_thread is not None:
@@ -276,11 +312,20 @@ def main():
         report("serial", lats, wall)
     else:
         svc = SearchService(searcher, max_batch=args.max_batch,
-                            max_delay_ms=args.max_delay_ms)
+                            max_delay_ms=args.max_delay_ms,
+                            max_pending=args.max_pending,
+                            tenant_qps=args.tenant_qps)
 
         def do_query(rng):
             qi, qv = draw_query(rng)
-            svc.submit(qi, qv).result()
+            try:
+                svc.submit(Query(qi, qv), options=q_opts).result()
+            except OverloadError:        # shed at the door — counted,
+                with sched_lock:         # not fatal: backpressure is
+                    sched["shed"] += 1   # the feature under test
+            except DeadlineExceeded:
+                with sched_lock:
+                    sched["expired"] += 1
 
         warm_buckets(args.max_batch)
         if writer_thread is not None:
@@ -290,6 +335,13 @@ def main():
         st = svc.stats
         print(f"  batches {st.n_batches}  mean occupancy "
               f"{st.mean_occupancy:.2f}  flushes {st.flushes}")
+        if svc.admission is not None or q_opts is not None:
+            n_total = args.clients * args.requests
+            print(f"  scheduling: {sched['shed']} shed "
+                  f"({100 * sched['shed'] / max(n_total, 1):.1f}%) "
+                  f"{st.flushes.get('deadline', 0)} deadline flushes, "
+                  f"{st.n_expired} expired; "
+                  f"by reason {svc.shed_counts()}")
         svc.close()
     if writer_thread is not None:
         writer_thread.join()                 # let a slow writer finish
@@ -305,7 +357,7 @@ def main():
         print(f"  ingest: {seals} seal(s), {folds} background fold(s); "
               f"memtable tail {sum(len(p.memtable) for p in pipes)} docs")
         qi, qv = corpus_lib.make_query(corpus, 0, args.query_nnz)
-        searcher.search(qi[None], qv[None])  # post-run sanity pass
+        searcher.search(Query(qi[None], qv[None]))  # post-run sanity pass
         st = searcher.last_stats
         print(f"  post-ingest store: {st.docs_scored} docs scored "
               f"(snapshot incl. memtable)")

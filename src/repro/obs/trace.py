@@ -27,6 +27,7 @@ recent ``QueryTrace`` without plumbing.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from collections import deque
@@ -126,14 +127,20 @@ class _NullSpan:
 NULL_SPAN = _NullSpan()
 
 
+_trace_ids = itertools.count(1)
+
+
 class QueryTrace:
     """One sampled query: a root span plus the wall-clock timestamp the
     export needs. ``finish()`` closes the root and files the trace with
-    the owning tracer."""
+    the owning tracer. ``trace_id`` is a process-unique ordinal so logs
+    and structured errors (ClusterSearchError) can name the trace they
+    belong to without holding a reference."""
 
     def __init__(self, name: str, tracer: "Optional[Tracer]" = None,
                  **attrs):
         self._tracer = tracer
+        self.trace_id = next(_trace_ids)
         self.wall_time = time.time()
         self._lock = threading.Lock()
         self.root = Span(name, self._lock, **attrs)
@@ -149,7 +156,7 @@ class QueryTrace:
         return self.root.duration_ms
 
     def to_dict(self) -> Dict:
-        return {"wall_time": self.wall_time,
+        return {"wall_time": self.wall_time, "trace_id": self.trace_id,
                 "root": self.root.to_dict(self.root.t0)}
 
     def well_formed(self) -> bool:

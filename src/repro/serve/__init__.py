@@ -1,6 +1,18 @@
-"""Serving layer: LM decode steps (step.py) and the sparse-search
-micro-batching service (DESIGN.md §7)."""
+"""Serving layer: LM decode steps (step.py), the sparse-search
+micro-batching service (DESIGN.md §7), and the scheduling plane —
+typed Query/QueryOptions API, admission control, EDF deadline
+batching, replica hedging (DESIGN.md §7.3)."""
+from repro.serve.admission import AdmissionController, TokenBucket
+from repro.serve.api import (DeadlineExceeded, OverloadError, Query,
+                             QueryOptions, QueryStats, SearchResponse)
 from repro.serve.batcher import BatcherStats, MicroBatcher
+from repro.serve.hedging import (HedgeOutcome, HedgePolicy, SpawnExecutor,
+                                 run_hedged)
 from repro.serve.search_service import SearchService
 
-__all__ = ["BatcherStats", "MicroBatcher", "SearchService"]
+__all__ = [
+    "AdmissionController", "BatcherStats", "DeadlineExceeded",
+    "HedgeOutcome", "HedgePolicy", "MicroBatcher", "OverloadError",
+    "Query", "QueryOptions", "QueryStats", "SearchResponse",
+    "SearchService", "SpawnExecutor", "TokenBucket", "run_hedged",
+]

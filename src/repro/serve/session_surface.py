@@ -12,8 +12,6 @@ from __future__ import annotations
 import threading
 from concurrent.futures import Future
 
-import numpy as np
-
 
 class ServingSessionMixin:
     def _init_serving(self):
@@ -45,27 +43,38 @@ class ServingSessionMixin:
         """The running TelemetryServer, or None."""
         return self._telemetry
 
-    def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0):
+    def service(self, *, max_batch: int = 8, max_delay_ms: float = 2.0,
+                admission=None, max_pending=None, tenant_qps=None,
+                tenant_burst=None):
         """The session's lazily-created SearchService (DESIGN.md §7):
         one micro-batching scheduler whose flushed batches run
         ``self.search`` — each coalesced batch costs one pass over the
         backing store(s) instead of one per client. The knobs apply on
-        first call; later calls return the same service."""
+        first call; later calls return the same service. The admission
+        knobs (DESIGN.md §7.3) bound the pending queue and meter
+        tenants; all-None keeps the legacy admit-everything door."""
         with self._service_lock:
             if self._closed:
                 raise RuntimeError(f"{type(self).__name__} is closed")
             if self._service is None:
                 from repro.serve.search_service import SearchService
                 self._service = SearchService(
-                    self, max_batch=max_batch, max_delay_ms=max_delay_ms)
+                    self, max_batch=max_batch, max_delay_ms=max_delay_ms,
+                    admission=admission, max_pending=max_pending,
+                    tenant_qps=tenant_qps, tenant_burst=tenant_burst)
             return self._service
 
-    def submit(self, q_ids: np.ndarray, q_vals: np.ndarray) -> Future:
-        """Non-blocking single-query search: route one 1-D query through
+    def submit(self, query, q_vals=None, *, options=None) -> Future:
+        """Non-blocking single-query search: route one query through
         the session's coalescing service and return its Future. Also the
         thread-safe entry point — the scheduler serializes scoring, so
-        non-thread-safe session internals are never raced."""
-        return self.service().submit(q_ids, q_vals)
+        non-thread-safe session internals are never raced.
+
+        Typed form ``submit(Query(...), options=QueryOptions(...))``
+        resolves to a ``SearchResponse``; positional ``(q_ids, q_vals)``
+        arrays remain as a deprecation shim resolving to the bare
+        ``SearchResult`` row (see repro/serve/api.py)."""
+        return self.service().submit(query, q_vals, options=options)
 
     def close(self):
         """Idempotent: only the first close tears down the session's

@@ -38,6 +38,8 @@ from repro.configs.paper_search import SearchConfig
 from repro.core.engine import PatternSearchEngine, SearchResult
 from repro.distributed.meshctx import MeshCtx, single_device_ctx
 from repro.obs import NULL_REGISTRY, NULL_SPAN, Obs, default_obs
+from repro.serve.api import (Query, QueryOptions, QueryStats, SearchResponse,
+                             coerce_request, truncate_k)
 from repro.serve.session_surface import ServingSessionMixin
 from repro.storage.plan import Planner, execute_plan
 from repro.storage.slabcache import CacheStats, SlabCache
@@ -143,16 +145,38 @@ class FlashSearchSession(ServingSessionMixin):
         return self._ingest.seal() if self._ingest is not None else 0
 
     # ------------------------------------------------------------------
-    def search(self, q_ids: np.ndarray, q_vals: np.ndarray,
-               _span=None) -> SearchResult:
-        """q_ids/q_vals: [L, Qn] (pad < 0) -> global top-k over the store
+    def search(self, query, q_vals=None, *,
+               options: Optional[QueryOptions] = None, _span=None):
+        """Public search surface. Typed form — ``search(Query(ids,
+        vals), options=QueryOptions(...))`` — returns a
+        ``SearchResponse``; positional ``search(q_ids, q_vals)`` arrays
+        remain as a deprecation shim returning the bare
+        ``SearchResult`` (repro/serve/api.py). A single store has no
+        shards to gather, so of the scheduling options only ``k``
+        applies here; deadlines act in the coalescing service's queue
+        (serve/batcher.py)."""
+        q, options = coerce_request(query, q_vals, options,
+                                    surface="FlashSearchSession.search")
+        res = self.search_typed(q, options=options, _span=_span)
+        if options is None:
+            return res
+        return SearchResponse(truncate_k(res, options.k), QueryStats(
+            deadline_ms=options.deadline_ms, tenant=options.tenant))
+
+    def search_typed(self, query: Query,
+                     options: Optional[QueryOptions] = None, *,
+                     _span=None) -> SearchResult:
+        """Query rows [L, Qn] (pad < 0) -> global top-k over the store
         (plus, with ingest enabled, the sealed deltas and memtable of an
-        atomic snapshot taken now).
+        atomic snapshot taken now). Always returns the raw
+        ``SearchResult`` — wrapping/truncation belong to the public
+        ``search`` shim.
 
         ``_span`` is the observability hook for nesting callers (the
         cluster router hands each shard session a child span of the
         cluster trace): when set, this query joins the parent's trace
         and the parent owns the query-level accounting."""
+        q_ids, q_vals = query.rows()
         # the wall clock only matters when this call owns the query-level
         # accounting AND the bundle is live (Obs.disabled() floor: zero
         # clock reads on the whole path, asserted by test_obs_disabled)

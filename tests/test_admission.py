@@ -1,0 +1,193 @@
+"""Admission control (DESIGN.md §7.3): token-bucket quotas, the bounded
+pending queue, exactly-once slot release, and the SearchService wiring —
+overload is shed at the door with a typed error, never absorbed as a
+hang."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.obs import MetricsRegistry
+from repro.serve import (AdmissionController, OverloadError, Query,
+                         QueryOptions, SearchService, TokenBucket)
+
+
+class _FakeClock:
+    """Injectable monotonic clock: quota refill and the rolling-window
+    instruments age off the same timebase, advanced by hand."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket
+# ---------------------------------------------------------------------------
+def test_token_bucket_burst_then_refill():
+    b = TokenBucket(rate=2.0, burst=3.0)
+    assert [b.try_take(0.0) for _ in range(3)] == [True, True, True]
+    assert not b.try_take(0.0)              # burst drained
+    assert b.try_take(0.5)                  # 0.5s * 2/s = 1 token back
+    assert not b.try_take(0.5)
+    # refill caps at burst: a long idle gap doesn't bank unlimited tokens
+    assert [b.try_take(100.0) for _ in range(4)] == [True, True, True, False]
+
+
+def test_token_bucket_validates():
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate=1.0, burst=0.5)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController
+# ---------------------------------------------------------------------------
+def test_admission_queue_full_sheds_typed():
+    adm = AdmissionController(max_pending=2)
+    r1, r2 = adm.admit(), adm.admit()
+    with pytest.raises(OverloadError) as ei:
+        adm.admit()
+    assert ei.value.reason == "queue_full"
+    assert ei.value.depth == 2 and ei.value.limit == 2
+    r1()
+    adm.admit()                             # slot came back
+    assert adm.shed_counts()["queue_full"] == 1
+    r2()
+
+
+def test_admission_quota_refills_on_injected_clock():
+    clk = _FakeClock()
+    adm = AdmissionController(tenant_qps=1.0, tenant_burst=2.0, clock=clk)
+    adm.admit("a")()
+    adm.admit("a")()
+    with pytest.raises(OverloadError) as ei:
+        adm.admit("a")
+    assert ei.value.reason == "quota" and ei.value.tenant == "a"
+    # a different tenant has its own bucket
+    adm.admit("b")()
+    clk.advance(1.0)                        # 1s at 1 qps = 1 token
+    adm.admit("a")()
+    with pytest.raises(OverloadError):
+        adm.admit("a")
+    assert adm.shed_counts()["quota"] == 2
+
+
+def test_admission_explicit_quota_overrides_default():
+    clk = _FakeClock()
+    adm = AdmissionController(tenant_qps=1.0,
+                              quotas={"vip": (100.0, 10.0)}, clock=clk)
+    for _ in range(10):
+        adm.admit("vip")()
+    adm.admit("other")()
+    with pytest.raises(OverloadError):
+        adm.admit("other")
+
+
+def test_admission_release_is_exactly_once():
+    adm = AdmissionController(max_pending=4)
+    rel = adm.admit()
+    rel()
+    rel()                                   # double release must not
+    rel()                                   # underflow the depth
+    assert adm.depth == 0
+    adm.admit()
+    assert adm.depth == 1
+
+
+def test_admission_all_none_admits_everything():
+    adm = AdmissionController()
+    rels = [adm.admit(f"t{i}") for i in range(64)]
+    assert adm.depth == 64
+    for r in rels:
+        r()
+    assert adm.shed_counts() == {"queue_full": 0, "quota": 0}
+
+
+def test_admission_feeds_registry_counters():
+    reg = MetricsRegistry()
+    adm = AdmissionController(max_pending=1, registry=reg)
+    rel = adm.admit()
+    for _ in range(3):
+        with pytest.raises(OverloadError):
+            adm.admit()
+    assert reg.counter("serve_shed_total", reason="queue_full").value == 3
+    assert reg.counter("serve_admitted_total").value == 1
+    rel()
+
+
+# ---------------------------------------------------------------------------
+# SearchService wiring: shed at submit, slot back on completion
+# ---------------------------------------------------------------------------
+def _tiny_engine():
+    cfg = SearchConfig(name="adm", vocab_size=500, avg_nnz_per_doc=8,
+                       nnz_pad=16, top_k=3)
+    corpus = corpus_lib.synthesize(60, cfg.vocab_size, 8, cfg.nnz_pad, seed=1)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    qi, qv = corpus_lib.make_query(corpus, 0, 8)
+    return eng, qi, qv
+
+
+class _GatedSearcher:
+    """Blocks every batch on an event so the pending queue backs up
+    deterministically."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.gate = threading.Event()
+
+    def search(self, qi, qv):
+        self.gate.wait(timeout=10)
+        return self._inner._search_arrays(qi, qv)
+
+
+def test_admission_service_sheds_then_recovers():
+    eng, qi, qv = _tiny_engine()
+    gated = _GatedSearcher(eng)
+    svc = SearchService(gated, max_batch=1, max_delay_ms=0.0, max_pending=2)
+    try:
+        futs = [svc.submit(Query(qi, qv)) for _ in range(2)]
+        with pytest.raises(OverloadError):
+            svc.submit(Query(qi, qv))
+        gated.gate.set()                    # serve the backlog
+        rows = [f.result(timeout=10) for f in futs]
+        # completion fired the done-callback releases: slots are back
+        deadline = time.monotonic() + 5
+        while svc.admission.depth and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert svc.admission.depth == 0
+        f = svc.submit(Query(qi, qv), options=QueryOptions(tenant="late"))
+        resp = f.result(timeout=10)
+        np.testing.assert_array_equal(resp.doc_ids, rows[0].doc_ids)
+        assert svc.shed_counts()["queue_full"] == 1
+    finally:
+        gated.gate.set()
+        svc.close()
+
+
+def test_admission_quota_sheds_per_tenant_via_service():
+    eng, qi, qv = _tiny_engine()
+    svc = SearchService(eng, max_batch=4, max_delay_ms=0.5,
+                        tenant_qps=1.0, tenant_burst=1.0)
+    try:
+        ok = svc.submit(Query(qi, qv), options=QueryOptions(tenant="hot"))
+        with pytest.raises(OverloadError) as ei:
+            svc.submit(Query(qi, qv), options=QueryOptions(tenant="hot"))
+        assert ei.value.reason == "quota" and ei.value.tenant == "hot"
+        # the hot tenant can't starve a cold one
+        other = svc.submit(Query(qi, qv), options=QueryOptions(tenant="cold"))
+        ok.result(timeout=10)
+        other.result(timeout=10)
+    finally:
+        svc.close()

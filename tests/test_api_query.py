@@ -1,0 +1,145 @@
+"""The typed request/response surface (repro/serve/api.py): Query and
+QueryOptions validation, the positional deprecation shim (exercised
+exactly once here, per the migration contract), SearchResponse duck
+compatibility, and truncate_k."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine, SearchResult
+from repro.distributed.meshctx import single_device_ctx
+from repro.serve.api import (DeadlineExceeded, OverloadError, Query,
+                             QueryOptions, QueryStats, SearchResponse,
+                             coerce_request, truncate_k)
+
+
+# ---------------------------------------------------------------------------
+# Query
+# ---------------------------------------------------------------------------
+def test_query_validates_and_normalizes():
+    q = Query([3, 7, -1], [1.0, 2.0, 0.0])
+    assert q.ids.dtype == np.int32 and q.vals.dtype == np.float32
+    assert q.is_single and q.n_rows == 1
+    qi, qv = q.rows()
+    assert qi.shape == (1, 3) == qv.shape
+    fi, fv = q.flat()
+    assert fi.shape == (3,) == fv.shape
+
+
+def test_query_copies_its_arrays():
+    ids = np.array([1, 2], np.int32)
+    q = Query(ids, np.ones(2, np.float32))
+    ids[0] = 99
+    assert q.ids[0] == 1                    # caller mutation can't leak in
+
+
+def test_query_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="differ"):
+        Query(np.zeros((1, 4), np.int32), np.zeros((1, 3), np.float32))
+    with pytest.raises(ValueError, match="1-D .* or 2-D"):
+        Query(np.zeros((1, 1, 4), np.int32), np.zeros((1, 1, 4), np.float32))
+
+
+def test_query_batch_rows_and_flat():
+    q = Query(np.zeros((3, 4), np.int32), np.zeros((3, 4), np.float32))
+    assert not q.is_single and q.n_rows == 3
+    assert q.rows()[0].shape == (3, 4)
+    with pytest.raises(ValueError, match="one query per Future"):
+        q.flat()
+    one = Query(np.zeros((1, 4), np.int32), np.zeros((1, 4), np.float32))
+    assert one.flat()[0].shape == (4,)      # [1, Qn] flattens
+
+
+# ---------------------------------------------------------------------------
+# QueryOptions
+# ---------------------------------------------------------------------------
+def test_query_options_defaults_are_legacy():
+    o = QueryOptions()
+    assert o.deadline_ms is None and o.priority == 0
+    assert o.tenant == "default" and o.k is None
+    assert not o.allow_partial and o.hedging is None
+
+
+def test_query_options_validate():
+    with pytest.raises(ValueError):
+        QueryOptions(k=0)
+    with pytest.raises(ValueError):
+        QueryOptions(tenant="")
+    QueryOptions(deadline_ms=5.0, priority=2, k=1, allow_partial=True,
+                 hedging=False)             # all knobs accepted
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim (the one sanctioned exercise of the legacy form)
+# ---------------------------------------------------------------------------
+def test_query_coerce_positional_warns_once_and_matches_typed():
+    ids = np.array([5, 9, -1], np.int32)
+    vals = np.array([2.0, 1.0, 0.0], np.float32)
+    with pytest.warns(DeprecationWarning, match="positional arrays"):
+        q, opts = coerce_request(ids, vals, None, surface="test.search")
+    assert opts is None
+    np.testing.assert_array_equal(q.ids, ids)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        q2, o2 = coerce_request(Query(ids, vals), None,
+                                QueryOptions(k=2))  # typed: silent
+    assert o2.k == 2
+    np.testing.assert_array_equal(q2.ids, q.ids)
+
+
+def test_query_coerce_rejects_ambiguous_and_incomplete():
+    q = Query(np.zeros(2, np.int32), np.zeros(2, np.float32))
+    with pytest.raises(TypeError, match="not both"):
+        coerce_request(q, np.zeros(2, np.float32), None)
+    with pytest.raises(TypeError, match="needs both"):
+        coerce_request(np.zeros(2, np.int32), None, None)
+
+
+def test_query_engine_shim_end_to_end():
+    cfg = SearchConfig(name="api", vocab_size=400, avg_nnz_per_doc=8,
+                       nnz_pad=16, top_k=3)
+    corpus = corpus_lib.synthesize(40, cfg.vocab_size, 8, cfg.nnz_pad, seed=2)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    qi, qv = corpus_lib.make_query(corpus, 1, 8)
+    typed = eng.search(Query(qi[None], qv[None]))
+    with pytest.warns(DeprecationWarning):
+        legacy = eng.search(qi[None], qv[None])
+    np.testing.assert_array_equal(typed.doc_ids, legacy.doc_ids)
+    np.testing.assert_array_equal(typed.scores, legacy.scores)
+    resp = eng.search(Query(qi[None], qv[None]), options=QueryOptions(k=2))
+    assert isinstance(resp, SearchResponse)
+    np.testing.assert_array_equal(resp.doc_ids, typed.doc_ids[:, :2])
+
+
+# ---------------------------------------------------------------------------
+# SearchResponse / QueryStats / truncate_k
+# ---------------------------------------------------------------------------
+def test_query_response_quacks_like_search_result():
+    res = SearchResult(np.arange(6).reshape(2, 3),
+                       np.ones((2, 3), np.float32))
+    resp = SearchResponse(res, QueryStats(queue_wait_ms=1.5))
+    np.testing.assert_array_equal(resp.doc_ids, res.doc_ids)
+    np.testing.assert_array_equal(resp.scores, res.scores)
+    assert resp.stats.queue_wait_ms == 1.5
+
+
+def test_query_truncate_k_prefix_only():
+    res = SearchResult(np.arange(8).reshape(2, 4),
+                       np.arange(8, dtype=np.float32).reshape(2, 4))
+    assert truncate_k(res, None) is res
+    assert truncate_k(res, 4) is res        # not smaller: no copy
+    cut = truncate_k(res, 2)
+    np.testing.assert_array_equal(cut.doc_ids, res.doc_ids[:, :2])
+    np.testing.assert_array_equal(cut.scores, res.scores[:, :2])
+
+
+def test_query_scheduling_errors_are_typed():
+    assert issubclass(OverloadError, RuntimeError)
+    assert issubclass(DeadlineExceeded, TimeoutError)
+    e = OverloadError("full", tenant="t", reason="quota", depth=3, limit=4)
+    assert (e.tenant, e.reason, e.depth, e.limit) == ("t", "quota", 3, 4)
+    d = DeadlineExceeded("late", deadline_ms=10.0, late_ms=2.5, where="queue")
+    assert (d.deadline_ms, d.late_ms, d.where) == (10.0, 2.5, "queue")

@@ -1,0 +1,225 @@
+"""Deadline/priority-aware batching (DESIGN.md §7.3): EDF ordering,
+early deadline flushes, typed expiry before device work, and the
+bit-identity guarantee — no deadline pressure means exactly the legacy
+FIFO schedule and exactly the legacy results."""
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_search import SearchConfig
+from repro.core import corpus as corpus_lib
+from repro.core.engine import PatternSearchEngine
+from repro.distributed.meshctx import single_device_ctx
+from repro.serve import (DeadlineExceeded, MicroBatcher, Query, QueryOptions,
+                         SearchService)
+
+
+class _Req:
+    def __init__(self, tag, deadline=None, priority=0):
+        self.tag = tag
+        self.deadline = deadline
+        self.priority = priority
+        self.future = Future()
+
+
+def _collecting_batcher(batches, **kw):
+    def run(reqs):
+        batches.append([r.tag for r in reqs])
+        for r in reqs:
+            r.future.set_result(r.tag)
+    return MicroBatcher(run, **kw)
+
+
+# ---------------------------------------------------------------------------
+# expiry: typed, before any device work
+# ---------------------------------------------------------------------------
+def test_deadline_expired_at_submit_never_queues():
+    batches = []
+    with _collecting_batcher(batches, max_batch=4, max_delay_ms=5.0) as mb:
+        r = _Req("late", deadline=time.monotonic() - 0.01)
+        mb.submit(r)
+        with pytest.raises(DeadlineExceeded) as ei:
+            r.future.result(timeout=5)
+        assert ei.value.where == "submit"
+        assert ei.value.late_ms >= 0.0
+        assert mb.pending_count == 0
+    assert batches == []                    # no batch ever formed
+    assert mb.stats.n_expired == 1
+
+
+def test_deadline_expired_in_queue_drops_before_scoring():
+    """A request that ages out behind a long-running batch is dropped at
+    flush time (where="queue"), and the batch that does run never sees
+    it."""
+    gate = threading.Event()
+    batches = []
+
+    def run(reqs):
+        batches.append([r.tag for r in reqs])
+        for r in reqs:
+            r.future.set_result(r.tag)
+        gate.wait(timeout=10)               # first batch blocks the loop
+
+    with MicroBatcher(run, max_batch=1, max_delay_ms=0.0) as mb:
+        plug = _Req("plug")
+        mb.submit(plug)
+        plug.future.result(timeout=5)       # the loop is now inside run()
+        doomed = _Req("doomed", deadline=time.monotonic() + 0.02)
+        alive = _Req("alive")
+        mb.submit(doomed)
+        mb.submit(alive)
+        time.sleep(0.06)                    # doomed expires while queued
+        gate.set()
+        assert alive.future.result(timeout=5) == "alive"
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.future.result(timeout=5)
+        assert ei.value.where == "queue"
+    assert all("doomed" not in b for b in batches)
+    assert mb.stats.n_expired == 1
+
+
+# ---------------------------------------------------------------------------
+# early flush: a deadline shorter than the flush interval still makes it
+# ---------------------------------------------------------------------------
+def test_deadline_shorter_than_flush_interval_flushes_early():
+    batches = []
+    with _collecting_batcher(batches, max_batch=64,
+                             max_delay_ms=500.0) as mb:
+        t0 = time.monotonic()
+        r = _Req("tight", deadline=t0 + 0.05)
+        mb.submit(r)
+        assert r.future.result(timeout=5) == "tight"
+        elapsed = time.monotonic() - t0
+        # served well inside the 500ms batching window, on the deadline
+        assert elapsed < 0.4, f"flushed at {elapsed*1e3:.0f}ms"
+    assert mb.stats.flushes["deadline"] >= 1
+    assert mb.stats.n_expired == 0
+
+
+def test_deadline_none_keeps_legacy_timeout_flush():
+    batches = []
+    with _collecting_batcher(batches, max_batch=64, max_delay_ms=20.0) as mb:
+        for i in range(3):
+            mb.submit(_Req(i))
+        time.sleep(0.2)
+    assert batches and batches[0] == [0, 1, 2]   # FIFO, one batch
+    assert mb.stats.flushes["deadline"] == 0
+    assert mb.stats.flushes["timeout"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# EDF ordering: priority class first, then deadline, then arrival
+# ---------------------------------------------------------------------------
+def test_deadline_and_priority_order_the_backlog():
+    gate = threading.Event()
+    batches = []
+
+    def run(reqs):
+        batches.append([r.tag for r in reqs])
+        for r in reqs:
+            r.future.set_result(r.tag)
+        if reqs[0].tag == "plug":
+            gate.wait(timeout=10)
+
+    with MicroBatcher(run, max_batch=1, max_delay_ms=0.0) as mb:
+        plug = _Req("plug")
+        mb.submit(plug)
+        plug.future.result(timeout=5)
+        far = time.monotonic() + 30.0
+        near = time.monotonic() + 10.0      # urgent but far from expiring
+        mb.submit(_Req("background", priority=5))       # arrives first
+        mb.submit(_Req("far", deadline=far))
+        mb.submit(_Req("near", deadline=near))
+        mb.submit(_Req("fifo"))                         # no deadline
+        gate.set()
+        mb.close()                          # drain flushes the backlog
+    # within priority 0: deadlines first (near, far), then no-deadline
+    # FIFO; priority 5 runs last regardless of arrival order
+    assert batches[1:] == [["near"], ["far"], ["fifo"], ["background"]]
+
+
+def test_deadline_flush_accounting_is_atomic_under_stress():
+    """The PR-9 race fix: reason counters, occupancy, and
+    last_queue_waits_ms are written in the lock'd section that claims
+    the batch, so their totals always reconcile."""
+    done = []
+
+    def run(reqs):
+        done.append(len(reqs))
+        for r in reqs:
+            r.future.set_result(r.tag)
+
+    mb = MicroBatcher(run, max_batch=4, max_delay_ms=0.2)
+    futs = []
+
+    def client(base):
+        for i in range(50):
+            r = _Req((base, i))
+            mb.submit(r)
+            futs.append(r.future)
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for f in list(futs):
+        f.result(timeout=10)
+    mb.close()
+    st = mb.stats
+    assert st.n_requests == 400 == sum(done)
+    assert sum(st.flushes.values()) == st.n_batches == len(done)
+    assert sum(st.occupancy) == st.n_requests    # window holds them all
+    assert len(mb.last_queue_waits_ms) <= 4
+    assert mb.pending_count == 0
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: no deadline pressure == the unscheduled path, exactly
+# ---------------------------------------------------------------------------
+def _engine():
+    cfg = SearchConfig(name="dl", vocab_size=600, avg_nnz_per_doc=10,
+                       nnz_pad=16, top_k=4)
+    corpus = corpus_lib.synthesize(80, cfg.vocab_size, 10, cfg.nnz_pad,
+                                   seed=3)
+    eng = PatternSearchEngine(corpus, cfg, single_device_ctx(), backend="jnp")
+    return eng, corpus, cfg
+
+
+def test_deadline_free_options_are_bit_identical_to_legacy():
+    eng, corpus, cfg = _engine()
+    queries = [corpus_lib.make_query(corpus, i, 10) for i in range(8)]
+    serial = [eng.search_typed(Query(qi, qv)) for qi, qv in queries]
+    with SearchService(eng, max_batch=4, max_delay_ms=1.0) as svc:
+        legacy = [svc.submit(Query(qi, qv)) for qi, qv in queries]
+        rows = [f.result(timeout=30) for f in legacy]
+        # a generous deadline exerts no pressure: same results, plus stats
+        opted = [svc.submit(Query(qi, qv),
+                            options=QueryOptions(deadline_ms=60_000.0))
+                 for qi, qv in queries]
+        resps = [f.result(timeout=30) for f in opted]
+    for l in range(8):
+        np.testing.assert_array_equal(rows[l].doc_ids,
+                                      serial[l].doc_ids[0])
+        np.testing.assert_array_equal(resps[l].doc_ids,
+                                      serial[l].doc_ids[0])
+        np.testing.assert_array_equal(resps[l].scores, serial[l].scores[0])
+        assert resps[l].stats.deadline_ms == 60_000.0
+        assert resps[l].stats.queue_wait_ms >= 0.0
+    assert svc.stats.n_expired == 0
+
+
+def test_deadline_expiry_through_service_is_typed():
+    eng, corpus, _ = _engine()
+    qi, qv = corpus_lib.make_query(corpus, 0, 10)
+    with SearchService(eng, max_batch=4, max_delay_ms=1.0) as svc:
+        f = svc.submit(Query(qi, qv),
+                       options=QueryOptions(deadline_ms=-1.0))
+        with pytest.raises(DeadlineExceeded) as ei:
+            f.result(timeout=10)
+        assert ei.value.where == "submit"
+        ok = svc.submit(Query(qi, qv))      # the service keeps serving
+        assert ok.result(timeout=10).doc_ids.shape == (4,)

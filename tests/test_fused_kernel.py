@@ -170,8 +170,11 @@ def test_engine_fused_rejects_multi_device_mesh():
     if jax.device_count() < 2:
         pytest.skip("needs >1 device")
     cfg = _cfg()
+    mesh = jax.make_mesh((jax.device_count() // 2, 2), ("data", "model"))
+    ctx = MeshCtx(mesh=mesh, dp_axes=("data",), fsdp_axis="data",
+                  tp_axis="model")
     with pytest.raises(ValueError, match="single-device"):
-        PatternSearchEngine(None, cfg, MeshCtx.create(), "pallas_fused")
+        PatternSearchEngine(None, cfg, ctx, "pallas_fused")
 
 
 def test_session_fused_cold_warm_ingest_match_jnp(tmp_path):

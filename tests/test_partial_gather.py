@@ -1,0 +1,179 @@
+"""Deadline-aware partial gather (DESIGN.md §7.3): a budget-bound
+scatter returns the best-effort merge of the responsive shards, flagged
+and attributed — and is bit-identical to the full gather whenever every
+shard answers in time. Plus the structured ClusterSearchError contract."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterSearchError, FlashClusterSession,
+                           build_sharded_store)
+from repro.cluster.router import ClusterStats
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.serve import Query, QueryOptions
+from repro.storage import FlashSearchSession, FlashStore
+from repro.storage.store import _corpus_docs
+
+
+class _Slow:
+    def __init__(self, inner, delay_s):
+        self._inner = inner
+        self._delay = delay_s
+
+    def search(self, *a, **k):
+        time.sleep(self._delay)
+        return self._inner.search(*a, **k)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+class _Boom:
+    def __init__(self, inner):
+        self._inner = inner                 # may be a never-opened slot
+
+    def search(self, *a, **k):
+        raise OSError("replica storage gone")
+
+    def close(self):
+        if self._inner is not None:
+            self._inner.close()
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _setup(tmp_path, cfg, n_shards=2, replicas=1):
+    corpus = corpus_lib.synthesize(150, cfg.vocab_size, cfg.avg_nnz_per_doc,
+                                   cfg.nnz_pad, seed=13)
+    docs = _corpus_docs(corpus)
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=n_shards,
+                             replicas=replicas, policy="hash",
+                             vocab_size=cfg.vocab_size, docs_per_segment=16)
+    union = FlashStore.create(str(tmp_path / "u"),
+                              vocab_size=cfg.vocab_size, docs_per_segment=64)
+    union.append_docs(docs)
+    return (corpus, FlashClusterSession(cl, cfg),
+            FlashSearchSession(union, cfg))
+
+
+def _q(corpus, cfg, idx=9):
+    qi, qv = corpus_lib.make_query(corpus, idx, cfg.max_query_nnz)
+    return Query(qi[None], qv[None])
+
+
+def test_partial_gather_drops_straggler_and_flags_it(tmp_path):
+    cfg = smoke()
+    corpus, sess, union = _setup(tmp_path, cfg)
+    try:
+        q = _q(corpus, cfg)
+        sess.search_typed(q)                # warm: every primary open
+        sess.router._sessions[1][0] = _Slow(sess.router._sessions[1][0], 0.8)
+        t0 = time.monotonic()
+        resp = sess.search(q, options=QueryOptions(
+            deadline_ms=80.0, allow_partial=True))
+        wall = time.monotonic() - t0
+        assert wall < 0.7, f"gather did not respect the budget " \
+                           f"({wall*1e3:.0f}ms)"
+        assert resp.stats.partial and resp.stats.shards_missing == (1,)
+        st = sess.last_stats
+        assert st.partial and st.shards_missing == (1,)
+        # the merge degraded to exactly the responsive shard's answer —
+        # intact, nothing invented
+        shard0 = sess.router._session(0, 0).search_typed(q)
+        np.testing.assert_array_equal(resp.doc_ids, shard0.doc_ids)
+        np.testing.assert_array_equal(resp.scores, shard0.scores)
+        assert (resp.doc_ids >= 0).any()    # shard 0 did contribute
+    finally:
+        sess.close()
+        union.close()
+
+
+def test_partial_gather_bit_identical_when_all_shards_respond(tmp_path):
+    cfg = smoke()
+    corpus, sess, union = _setup(tmp_path, cfg)
+    try:
+        q = _q(corpus, cfg, idx=4)
+        ref = union.search_typed(_q(corpus, cfg, idx=4))
+        plain = sess.search_typed(q)
+        resp = sess.search(q, options=QueryOptions(
+            deadline_ms=60_000.0, allow_partial=True))
+        assert not resp.stats.partial and resp.stats.shards_missing == ()
+        np.testing.assert_array_equal(resp.doc_ids, plain.doc_ids)
+        np.testing.assert_array_equal(resp.scores, plain.scores)
+        np.testing.assert_array_equal(resp.doc_ids, ref.doc_ids)
+        np.testing.assert_array_equal(resp.scores, ref.scores)
+    finally:
+        sess.close()
+        union.close()
+
+
+def test_partial_gather_every_shard_missing_returns_sentinel(tmp_path):
+    cfg = smoke()
+    corpus, sess, union = _setup(tmp_path, cfg)
+    try:
+        q = _q(corpus, cfg)
+        sess.search_typed(q)
+        for s in range(2):
+            sess.router._sessions[s][0] = _Slow(
+                sess.router._sessions[s][0], 0.6)
+        resp = sess.search(q, options=QueryOptions(
+            deadline_ms=40.0, allow_partial=True))
+        assert resp.stats.partial
+        assert resp.stats.shards_missing == (0, 1)
+        # a well-formed [L, k] no-result answer, never a hang or a crash
+        assert resp.doc_ids.shape == (1, cfg.top_k)
+        assert (resp.doc_ids == -1).all()
+        assert np.isneginf(resp.scores).all()
+    finally:
+        sess.close()
+        union.close()
+
+
+def test_partial_consent_turns_shard_failure_into_missing(tmp_path):
+    """With allow_partial, a *failed* shard (every replica dead) degrades
+    to a missing shard instead of failing the query."""
+    cfg = smoke()
+    corpus, sess, union = _setup(tmp_path, cfg)
+    try:
+        q = _q(corpus, cfg)
+        sess.search_typed(q)
+        sess.router._sessions[0][0] = _Boom(sess.router._sessions[0][0])
+        resp = sess.search(q, options=QueryOptions(
+            deadline_ms=60_000.0, allow_partial=True))
+        assert resp.stats.partial and resp.stats.shards_missing == (0,)
+        # without consent the same failure raises (the legacy contract)
+        with pytest.raises(ClusterSearchError):
+            sess.search_typed(q)
+    finally:
+        sess.close()
+        union.close()
+
+
+def test_partial_failure_without_consent_raises_structured_error(tmp_path):
+    cfg = smoke()
+    corpus, sess, union = _setup(tmp_path, cfg, replicas=2)
+    try:
+        q = _q(corpus, cfg)
+        sess.search_typed(q)
+        for r in range(2):
+            sess.router._sessions[1][r] = _Boom(sess.router._sessions[1][r])
+        with pytest.raises(ClusterSearchError) as ei:
+            sess.search_typed(q)
+        e = ei.value
+        assert e.shard == 1
+        assert set(e.replica_errors) == {0, 1}
+        assert all("OSError" in s for s in e.replica_errors.values())
+        assert hasattr(e, "trace_id")       # None unless tracing sampled
+        assert "shard 1" in str(e)
+    finally:
+        sess.close()
+        union.close()
+
+
+def test_partial_stats_fields_default_off():
+    st = ClusterStats([None])
+    assert not st.partial and st.shards_missing == ()
+    assert st.hedges == 0 and st.hedge_wins == 0
