@@ -46,6 +46,7 @@ SUITE_SCRIPTS = {
     "serve": "serve_bench.py",
     "cluster": "cluster_bench.py",
     "ingest": "ingest_bench.py",
+    "recall": "recall_bench.py",
 }
 
 # tiny configurations: the goal is rows-in-minutes on a 2-core runner,
@@ -61,12 +62,18 @@ TINY = {
     "ingest": ["--docs", "2000", "--append-docs", "600", "--docs-per-segment",
                "250", "--seal-docs", "100", "--vocab", "10000",
                "--repeats", "5"],
+    # --min-cores 999: the speedup half of the recall gate never votes
+    # in the tiny config (numbers are noise here); the recall half is
+    # deterministic and stays enforced
+    "recall": ["--docs", "2000", "--docs-per-segment", "400", "--vocab",
+               "15000", "--queries", "4", "--repeats", "1",
+               "--min-cores", "999"],
     "paper": [],
 }
 
 # the smoke subset CI runs on every change (cluster and paper stay
 # reachable via ``run.py --suite all`` — too slow for every commit)
-CI_TAGS = ("storage", "serve", "ingest")
+CI_TAGS = ("storage", "serve", "ingest", "recall")
 
 
 def make_env() -> dict:
@@ -154,6 +161,19 @@ def check_report(path: str) -> list:
         problems.append("missing storage/fused_vs_unfused_speedup row")
     elif "FAIL" in fgate["derived"]:
         problems.append(f"fused speedup gate failed: {fgate['derived']}")
+    # approximate-tier rows (DESIGN.md §15): the exact baseline, at
+    # least one recall@10 point of the candidate sweep, and a
+    # non-failing recall/QPS gate must be in every snapshot
+    if "recall/exact_query_ms" not in rows:
+        problems.append("missing recall/exact_query_ms row")
+    recalls = [n for n in rows if n.startswith("recall/recall_at_10@")]
+    if not recalls:
+        problems.append("expected >=1 recall/recall_at_10@c=* row, got none")
+    rgate = rows.get("recall/gate")
+    if rgate is None:
+        problems.append("missing recall/gate row")
+    elif "FAIL" in rgate["derived"]:
+        problems.append(f"recall gate failed: {rgate['derived']}")
     return problems
 
 

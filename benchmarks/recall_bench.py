@@ -1,0 +1,212 @@
+"""Recall@k vs QPS benchmark for the approximate candidate tier
+(DESIGN.md §15).
+
+The approximate tier answers a query in two phases: the per-segment
+posting index nominates a top-C candidate pool, and only those rows are
+gathered and re-ranked through the exact scoring stack. The bargain is
+recall-for-throughput, and this bench prices it: one exact
+(full-stream) baseline, then a sweep over candidate-pool sizes C, each
+reporting latency, recall@k against the exact top-k, and the speedup.
+
+Both sessions run with the slab cache disabled — a warm slab makes
+exact scoring free, so the cache-on steady state never takes the
+posting path by design (execute_plan consults the cache first); the
+interesting regime is the disk-bound one, which is exactly where the
+candidate tier pays.
+
+The corpus is *mixed* (every doc samples the whole vocabulary), the
+complement of storage_bench's clustered corpus: vocabulary filters
+prune by term overlap, so a mixed corpus degrades their skip-rate to 0
+and exact search must stream every segment. That is precisely the
+workload the posting tier exists for — it prunes by *score*, not by
+term presence, and keeps winning where the filter can't.
+
+Gate (the ISSUE's acceptance bar): some swept C must reach recall@10
+>= --recall-gate (default 0.95) AND speedup >= --speedup-gate (default
+2x) over the exact baseline. The recall half is deterministic and
+always enforced; the speedup half is a performance statement, so —
+like storage_bench's gates — it only votes on hosts with at least
+--min-cores cores and SKIPs elsewhere. --no-gate downgrades everything
+to informational (CI's tiny run).
+
+Prints the same ``name,us_per_call,derived`` CSV rows as run.py.
+
+Usage: PYTHONPATH=src python benchmarks/recall_bench.py [--docs 20000]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.paper_search import SearchConfig
+from repro.serve.api import Query, QueryOptions
+from repro.storage import FlashSearchSession, FlashStore
+
+TOP_K = 10                       # the recall@k axis is recall@10
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _mixed_docs(n_docs, vocab_size, nnz, rng):
+    """Fully-mixed corpus: every doc samples the whole vocabulary, so
+    the per-segment vocab filter skips nothing and exact search streams
+    every segment (see module docstring)."""
+    docs = []
+    for i in range(n_docs):
+        words = rng.choice(vocab_size, min(nnz, vocab_size), replace=False)
+        docs.append((i, sorted((int(w), int(rng.integers(1, 30)))
+                               for w in words)))
+    return docs
+
+
+def _queries(docs, n_queries, q_nnz, max_query_nnz, rng):
+    """Doc-derived queries (the realistic case: queries share the
+    corpus vocabulary, so posting lists actually match)."""
+    out = []
+    for idx in rng.choice(len(docs), n_queries, replace=False):
+        qi = np.full((1, max_query_nnz), -1, np.int32)
+        qv = np.zeros((1, max_query_nnz), np.float32)
+        pairs = docs[int(idx)][1][:q_nnz]
+        for j, (w, c) in enumerate(pairs):
+            qi[0, j] = w
+            qv[0, j] = c
+        out.append((qi, qv))
+    return out
+
+
+def _recall_at_k(exact_ids, approx_ids, k):
+    """|exact top-k ∩ approx top-k| / k for one query row."""
+    e = set(int(d) for d in np.asarray(exact_ids).ravel()[:k] if d >= 0)
+    a = set(int(d) for d in np.asarray(approx_ids).ravel()[:k] if d >= 0)
+    return len(e & a) / max(len(e), 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--docs-per-segment", type=int, default=2_000)
+    ap.add_argument("--vocab", type=int, default=141_000)
+    ap.add_argument("--nnz", type=int, default=60)
+    ap.add_argument("--q-nnz", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=10)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--candidates", type=int, nargs="+",
+                    default=[16, 64, 256],
+                    help="candidate-pool sizes C to sweep (row names "
+                         "embed these, so keep them stable for "
+                         "bench_compare)")
+    ap.add_argument("--recall-gate", type=float, default=0.95)
+    ap.add_argument("--speedup-gate", type=float, default=2.0)
+    ap.add_argument("--min-cores", type=int, default=8,
+                    help="enforce the speedup half of the gate only on "
+                         "hosts with at least this many cores")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report rows, never fail (CI tiny runs)")
+    args = ap.parse_args()
+
+    cfg = SearchConfig(name="recall-bench", vocab_size=args.vocab,
+                       avg_nnz_per_doc=args.nnz, nnz_pad=64, top_k=TOP_K,
+                       block_docs=128, block_query=512)
+    rng = np.random.default_rng(7)
+    docs = _mixed_docs(args.docs, args.vocab, args.nnz, rng)
+    queries = _queries(docs, args.queries, args.q_nnz,
+                       cfg.max_query_nnz, rng)
+
+    root = os.path.join(tempfile.mkdtemp(), "store")
+    store = FlashStore.create(root, vocab_size=args.vocab,
+                              docs_per_segment=args.docs_per_segment)
+    store.append_docs(docs)
+
+    # cache disabled: see module docstring — this is the disk-bound
+    # regime where the candidate tier actually changes the cost model
+    sess = FlashSearchSession(store, cfg, cache_bytes=0)
+
+    # -- exact baseline (full-stream scoring, every query) -------------
+    for qi, qv in queries:                   # compile warmup
+        sess.search(Query(qi, qv))
+    t0 = time.perf_counter()
+    for _ in range(args.repeats):
+        for qi, qv in queries:
+            sess.search(Query(qi, qv))
+    exact_s = (time.perf_counter() - t0) / (args.repeats * len(queries))
+    exact_top = [np.asarray(sess.search(Query(qi, qv)).doc_ids)
+                 for qi, qv in queries]
+    _row("recall/exact_query_ms", exact_s * 1e6,
+         f"{exact_s * 1e3:.2f} ({1.0 / exact_s:.1f} QPS)")
+
+    # -- candidate-pool sweep ------------------------------------------
+    best = None                              # (recall, speedup, C)
+    for c in args.candidates:
+        opts = QueryOptions(mode="approx", candidates=c)
+        approx_segments = 0
+        for qi, qv in queries:               # compile warmup (pool shapes)
+            sess.search(Query(qi, qv), options=opts)
+            approx_segments += sess.last_stats.approx_segments
+        assert approx_segments > 0, \
+            "approx sweep never took the posting path (bench bug)"
+        t0 = time.perf_counter()
+        for _ in range(args.repeats):
+            for qi, qv in queries:
+                sess.search(Query(qi, qv), options=opts)
+        approx_s = ((time.perf_counter() - t0)
+                    / (args.repeats * len(queries)))
+        recalls = []
+        for (qi, qv), ref in zip(queries, exact_top):
+            res = sess.search(Query(qi, qv), options=opts)
+            recalls.append(_recall_at_k(ref, res.doc_ids, TOP_K))
+        recall = float(np.mean(recalls))
+        speedup = exact_s / approx_s
+        _row(f"recall/approx_query_ms@c={c}", approx_s * 1e6,
+             f"{approx_s * 1e3:.2f} ({1.0 / approx_s:.1f} QPS, "
+             f"{sess.last_stats.candidates} candidate docs/query)")
+        _row(f"recall/recall_at_10@c={c}", 0.0, f"{recall:.3f}")
+        _row(f"recall/speedup@c={c}", 0.0, f"{speedup:.2f}x")
+        if best is None or (recall, speedup) > best[:2]:
+            best = (recall, speedup, c)
+
+    sess.close()
+    shutil.rmtree(os.path.dirname(root), ignore_errors=True)
+
+    # -- gate -----------------------------------------------------------
+    recall_best, speed_best, c_best = best
+    cores = os.cpu_count() or 1
+    ok = True
+    if args.no_gate:
+        detail = (f"SKIP gate (--no-gate): best C={c_best} "
+                  f"recall={recall_best:.3f} speedup={speed_best:.2f}x")
+    else:
+        recall_ok = recall_best >= args.recall_gate
+        if cores >= args.min_cores:
+            speed_ok = speed_best >= args.speedup_gate
+            ok = recall_ok and speed_ok
+            detail = (f"{'PASS' if ok else 'FAIL'} (gate recall>="
+                      f"{args.recall_gate:g} and speedup>="
+                      f"{args.speedup_gate:g}x: best C={c_best} "
+                      f"recall={recall_best:.3f} "
+                      f"speedup={speed_best:.2f}x)")
+        else:
+            # recall is deterministic — enforce it even on small hosts;
+            # only the perf half SKIPs
+            ok = recall_ok
+            verdict = "PASS" if ok else "FAIL"
+            detail = (f"{verdict} recall-only (host has {cores} cores < "
+                      f"{args.min_cores}; speedup={speed_best:.2f}x "
+                      f"informational, recall={recall_best:.3f})")
+    _row("recall/gate", 0.0, detail)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,8 @@ from repro.obs import NULL_SPAN, Obs, default_obs
 from repro.serve.api import (Query, QueryOptions, QueryStats, SearchResponse,
                              coerce_request, truncate_k)
 from repro.serve.hedging import HedgePolicy, SpawnExecutor, run_hedged
+from repro.storage.memo import MemoCache
+from repro.storage.plan import DEFAULT_APPROX_MIN_DOCS
 from repro.storage.session import FlashSearchSession, SearchStats
 from repro.storage.slabcache import CacheStats, SlabCache
 
@@ -142,6 +144,24 @@ class ClusterStats:
         return self._sum("cache_evictions")
 
     @property
+    def filter_fp_segments(self) -> int:
+        """Scored-but-zero-overlap segments across every shard — the
+        cluster-wide filter false-positive count for the last batch."""
+        return self._sum("filter_fp_segments")
+
+    @property
+    def approx_segments(self) -> int:
+        return self._sum("approx_segments")
+
+    @property
+    def candidates(self) -> int:
+        return self._sum("candidates")
+
+    @property
+    def memo_hits(self) -> int:
+        return self._sum("memo_hits")
+
+    @property
     def skip_rate(self) -> float:
         """Aggregate skip-rate across every shard's segments."""
         total = self.segments_total
@@ -169,12 +189,28 @@ class ShardRouter:
                  slab_cache: Optional[SlabCache] = None,
                  cache_bytes: Optional[int] = None,
                  obs: Optional[Obs] = None,
-                 hedge_policy: Optional[HedgePolicy] = None):
+                 hedge_policy: Optional[HedgePolicy] = None,
+                 mode: str = "exact", candidates: int = 0,
+                 approx_min_docs: Optional[int] = None,
+                 memo_entries: int = 0):
         self.store = store
         self.cfg = cfg
         self.backend = backend
         self.use_filter = use_filter
         self.prefetch_depth = prefetch_depth
+        # approximate-tier defaults for every shard session (§15): each
+        # shard generates + exactly re-ranks its own candidate pool, and
+        # the gather merges the per-shard exact top-k — equivalent to
+        # merging the pools first, because re-rank scores are exact and
+        # the global top-k of a union is the top-k of per-shard top-ks
+        self.mode = mode
+        self.candidates = candidates
+        self.approx_min_docs = approx_min_docs
+        # one memo cache for the whole cluster: shard stores have
+        # distinct cache tokens, so entries can never alias across
+        # shards, and the budget is shared like the slab cache's
+        self._memo = (MemoCache(memo_entries) if memo_entries > 0
+                      else None)
         # one observability bundle for the whole cluster (DESIGN.md §8):
         # shard sessions share it, so their stage histograms aggregate,
         # while query-level accounting stays with the router
@@ -263,7 +299,12 @@ class ShardRouter:
                     prefetch_depth=self.prefetch_depth,
                     slab_cache=self.slab_cache,
                     cache_bytes=None if self.slab_cache is not None else 0,
-                    obs=self.obs)
+                    obs=self.obs, mode=self.mode,
+                    candidates=self.candidates,
+                    approx_min_docs=(self.approx_min_docs
+                                     if self.approx_min_docs is not None
+                                     else DEFAULT_APPROX_MIN_DOCS),
+                    memo=self._memo)
                 if self._ingest_knobs is not None:
                     sess.enable_ingest(**self._ingest_knobs)
                 self._sessions[shard][replica] = sess
@@ -373,13 +414,19 @@ class ShardRouter:
                 self._hedge_pool = SpawnExecutor()
             return self._hedge_pool
 
-    def _attempt(self, shard: int, rep: int, query: Query, span
+    def _attempt(self, shard: int, rep: int, query: Query, span,
+                 scoring_opts: Optional[QueryOptions] = None
                  ) -> Tuple[SearchResult, SearchStats, int]:
         """One replica attempt, serialized per (shard, replica): the
         session is stateful, so a losing hedge or an abandoned straggler
         still scoring must finish before the next query's attempt on
         the same replica starts. The stats snapshot is taken under the
-        same lock, so it can't pair with a later query's counters."""
+        same lock, so it can't pair with a later query's counters.
+
+        ``scoring_opts`` carries only the scoring-tier knobs (mode /
+        recall_target / candidates, never k or deadlines — those belong
+        to the gather); it is None unless the caller set one of them,
+        so the legacy flow through the shard session is untouched."""
         rspan = span.child("replica", replica=rep)
         try:
             with self._sess_locks[shard][rep]:
@@ -387,7 +434,10 @@ class ShardRouter:
                 # dispatch via .search (typed form: no shim, no warning)
                 # so fault-injecting wrappers that intercept .search see
                 # every replica attempt
-                res = sess.search(query, _span=rspan)
+                res = sess.search(query, options=scoring_opts,
+                                  _span=rspan)
+                if scoring_opts is not None:
+                    res = res.results   # unwrap the SearchResponse
                 st = dataclasses.replace(sess.last_stats)
         except BaseException as e:
             rspan.end(error=repr(e))
@@ -397,7 +447,8 @@ class ShardRouter:
 
     def _search_shard(self, shard: int, query: Query, span=NULL_SPAN,
                       hedge_after_s: Optional[float] = None,
-                      trace_id: Optional[int] = None
+                      trace_id: Optional[int] = None,
+                      scoring_opts: Optional[QueryOptions] = None
                       ) -> Tuple[SearchResult, SearchStats, float, int, int]:
         """Pool-thread body: primary replica first, then the next in
         replica order — *sequentially* on failure (the fail-over path),
@@ -437,7 +488,8 @@ class ShardRouter:
                 def make(rep: int):
                     def attempt():
                         try:
-                            return self._attempt(shard, rep, query, span)
+                            return self._attempt(shard, rep, query, span,
+                                                 scoring_opts)
                         except BaseException as e:
                             errs[rep] = e
                             raise
@@ -465,7 +517,8 @@ class ShardRouter:
                 res = None
                 for rep in reps:
                     try:
-                        res, st, _ = self._attempt(shard, rep, query, span)
+                        res, st, _ = self._attempt(shard, rep, query, span,
+                                                   scoring_opts)
                         break
                     except Exception as e:
                         errs[rep] = e
@@ -532,6 +585,14 @@ class ShardRouter:
         hedge_after_s = (policy.hedge_after_ms(reg) / 1e3
                          if policy is not None and self.store.replicas > 1
                          else None)
+        # scoring-tier knobs travel to every shard session; None when
+        # the caller set none of them, so the default flow is untouched
+        scoring_opts = None
+        if (opts.mode is not None or opts.recall_target is not None
+                or opts.candidates is not None):
+            scoring_opts = QueryOptions(mode=opts.mode,
+                                        recall_target=opts.recall_target,
+                                        candidates=opts.candidates)
         stats = ClusterStats([None] * n)
         walls: List[Optional[float]] = [None] * n
         missing: List[int] = []
@@ -539,7 +600,7 @@ class ShardRouter:
             shard_spans = [root.child("shard", shard=s) for s in range(n)]
             futs = [self._pool.submit(self._search_shard, s, query,
                                       shard_spans[s], hedge_after_s,
-                                      trace_id)
+                                      trace_id, scoring_opts)
                     for s in range(n)]
             # the gather span covers waiting out the stragglers plus the
             # shard-order fold — the scatter itself lives in the shard
@@ -667,6 +728,13 @@ class ShardRouter:
         lock-free live object could pair mid-flight hits/misses."""
         return (self.slab_cache.stats_snapshot()
                 if self.slab_cache is not None else None)
+
+    @property
+    def memo_stats(self):
+        """Lifetime counters of the cluster-shared recurrent-query memo
+        cache (None when the memo is off)."""
+        return (self._memo.stats_snapshot()
+                if self._memo is not None else None)
 
     def compile_counts(self) -> List[List[int]]:
         """Engine traces per *opened* (shard, replica) session — the

@@ -28,7 +28,10 @@ class FlashClusterSession(ServingSessionMixin):
                  prefetch_depth: int = 2,
                  max_workers: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
-                 obs=None, hedge_policy: Optional[HedgePolicy] = None):
+                 obs=None, hedge_policy: Optional[HedgePolicy] = None,
+                 mode: str = "exact", candidates: int = 0,
+                 approx_min_docs: Optional[int] = None,
+                 memo_entries: int = 0):
         """``cache_bytes`` sizes the cluster-shared device slab cache
         (DESIGN.md §4.2) every shard-replica session draws on
         (None = default budget, 0 = disabled). ``obs`` shares one
@@ -36,7 +39,12 @@ class FlashClusterSession(ServingSessionMixin):
         shard session; None falls back to the process default.
         ``hedge_policy`` arms replica hedging as the router default
         (DESIGN.md §7.3); per-query ``QueryOptions.hedging``
-        overrides."""
+        overrides. ``mode``/``candidates``/``approx_min_docs`` set the
+        approximate-tier defaults every shard session inherits (§15;
+        exact by default), ``memo_entries`` sizes the cluster-shared
+        recurrent-query memo cache (0 = off); per-query
+        ``QueryOptions.mode/recall_target/candidates`` overrides ride
+        the scatter to every shard."""
         if isinstance(store, str):
             store = ShardedStore.open(store)
         if store.vocab_size > cfg.vocab_size:
@@ -49,7 +57,9 @@ class FlashClusterSession(ServingSessionMixin):
         self.router = ShardRouter(
             store, cfg, backend=backend, use_filter=use_filter,
             prefetch_depth=prefetch_depth, max_workers=max_workers,
-            cache_bytes=cache_bytes, obs=obs, hedge_policy=hedge_policy)
+            cache_bytes=cache_bytes, obs=obs, hedge_policy=hedge_policy,
+            mode=mode, candidates=candidates,
+            approx_min_docs=approx_min_docs, memo_entries=memo_entries)
         self._init_serving()
 
     @property
@@ -117,6 +127,12 @@ class FlashClusterSession(ServingSessionMixin):
         """Lifetime slab-cache counters across every shard session —
         the same surface ``FlashSearchSession.cache_stats`` exposes."""
         return self.router.cache_stats
+
+    @property
+    def memo_stats(self):
+        """Cluster-shared recurrent-query memo counters (None = off),
+        mirroring ``FlashSearchSession.memo_stats``."""
+        return self.router.memo_stats
 
     @property
     def compile_stats(self) -> dict:

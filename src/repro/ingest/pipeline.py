@@ -137,6 +137,13 @@ class Snapshot:
     def live_generation(self) -> int:
         return self._pipeline.store.generation
 
+    @property
+    def memo_state(self):
+        """Memo-cache key component (storage/memo.py): capture-time
+        generation plus the memtable fingerprint, so a memoized result
+        can never outlive an append, seal, or compaction."""
+        return (self._generation, self._mem_key)
+
     def segment(self, name: str) -> segment_lib.Segment:
         if name not in self._segments:
             self._segments[name] = segment_lib.Segment(

@@ -137,6 +137,26 @@ def main():
                          "the rolling-window P-quantile of shard "
                          "latency (e.g. 0.95; needs --cluster with "
                          "replicas >= 2)")
+    # approximate tier (DESIGN.md §15): candidate generation + re-rank
+    ap.add_argument("--mode", choices=["exact", "approx", "auto"],
+                    default="exact",
+                    help="scoring tier for --store/--cluster: exact "
+                         "scans every surviving slab (default), approx "
+                         "takes the posting-candidate + exact-re-rank "
+                         "path, auto picks by corpus size")
+    ap.add_argument("--recall-target", type=float, default=None,
+                    metavar="R",
+                    help="approx-tier recall@k goal in (0, 1]; sizes "
+                         "the candidate pool per query when "
+                         "--candidates is not given")
+    ap.add_argument("--candidates", type=int, default=None, metavar="C",
+                    help="explicit per-segment top-C candidate pool "
+                         "for the approx tier (wins over "
+                         "--recall-target)")
+    ap.add_argument("--memo", type=int, default=0, metavar="N",
+                    help="recurrent-query memo cache: keep the last N "
+                         "results keyed by normalized query fingerprint "
+                         "(0 = off; invalidated on any store mutation)")
     tgt = ap.add_mutually_exclusive_group()
     tgt.add_argument("--store", help="serve this FlashStore path through a "
                                      "FlashSearchSession")
@@ -186,6 +206,10 @@ def main():
     if args.ingest and not (args.store or args.cluster):
         ap.error("--ingest needs --store or --cluster (the resident "
                  "engine has no write path)")
+    if (args.mode != "exact" or args.memo) \
+            and not (args.store or args.cluster):
+        ap.error("--mode/--memo need --store or --cluster (the resident "
+                 "engine has no posting tier)")
 
     cfg = SearchConfig(name="serve", vocab_size=args.vocab,
                        avg_nnz_per_doc=args.avg_nnz, nnz_pad=args.nnz_pad,
@@ -200,7 +224,9 @@ def main():
         from repro.storage import FlashSearchSession, FlashStore
         store = FlashStore.open(args.store)
         searcher = FlashSearchSession(store, cfg, backend=args.backend,
-                                      cache_bytes=cache_bytes, obs=obs)
+                                      cache_bytes=cache_bytes, obs=obs,
+                                      mode=args.mode,
+                                      memo_entries=args.memo)
         corpus = store.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] store {args.store}: {store.n_docs} docs / "
               f"{store.n_segments} segments")
@@ -211,7 +237,8 @@ def main():
                  if args.hedge_percentile is not None else None)
         searcher = FlashClusterSession(cstore, cfg, backend=args.backend,
                                        cache_bytes=cache_bytes, obs=obs,
-                                       hedge_policy=hedge)
+                                       hedge_policy=hedge, mode=args.mode,
+                                       memo_entries=args.memo)
         corpus = cstore.scan_corpus(cfg.nnz_pad, strict=False)
         print(f"[serve] cluster {args.cluster}: {cstore.n_shards} shards x "
               f"{cstore.replicas} replicas, {cstore.n_docs} docs")
@@ -288,12 +315,18 @@ def main():
                                   np.stack([q[1] for q in qs])))
             L *= 2
 
-    # the per-query scheduling contract (None = legacy FIFO/unbounded)
+    # the per-query scheduling contract (None = legacy FIFO/unbounded);
+    # --recall-target/--candidates ride per query so the session default
+    # mode can stay exact while clients opt into the approx tier
     q_opts = None
     if (args.deadline_ms is not None or args.allow_partial
-            or args.hedge_percentile is not None):
+            or args.hedge_percentile is not None
+            or args.recall_target is not None
+            or args.candidates is not None):
         q_opts = QueryOptions(deadline_ms=args.deadline_ms,
-                              allow_partial=args.allow_partial)
+                              allow_partial=args.allow_partial,
+                              recall_target=args.recall_target,
+                              candidates=args.candidates)
     sched = {"shed": 0, "expired": 0}
     sched_lock = threading.Lock()
 
@@ -368,6 +401,12 @@ def main():
         down = sum(not ok for row in searcher.router.health() for ok in row)
         print(f"router lifetime: {searcher.router.failovers} replicas "
               f"failed over, {down} out of rotation")
+    if args.memo:
+        ms = searcher.memo_stats
+        total = ms.hits + ms.misses
+        print(f"memo cache: {ms.hits}/{total} hits "
+              f"({100 * ms.hits / max(total, 1):.1f}%), "
+              f"{ms.entries} entries, {ms.evictions} evicted")
     if args.trace_sample:
         print("last sampled trace:")
         print(render_trace(getattr(searcher, "last_trace", None)

@@ -143,6 +143,17 @@ class QueryOptions:
     hedging       None = the router's configured policy; True forces
                   straggler hedging on (default policy if the router
                   has none), False disables it for this request
+    mode          scoring tier override (DESIGN.md §15): "exact" scans
+                  every surviving slab, "approx" takes the per-segment
+                  posting-candidate + exact-re-rank path, "auto" picks
+                  by corpus size. None = the session's configured
+                  default (which itself defaults to exact, so legacy
+                  callers can never drift into the approximate tier)
+    recall_target approx-tier recall@k goal in (0, 1]; mapped to a
+                  candidate-pool multiplier when ``candidates`` is not
+                  given explicitly (closer to 1.0 = wider pool)
+    candidates    explicit per-segment top-C candidate-pool size for
+                  the approx tier (wins over recall_target)
     """
     deadline_ms: Optional[float] = None
     priority: int = 0
@@ -150,6 +161,9 @@ class QueryOptions:
     k: Optional[int] = None
     allow_partial: bool = False
     hedging: Optional[bool] = None
+    mode: Optional[str] = None
+    recall_target: Optional[float] = None
+    candidates: Optional[int] = None
 
     def __post_init__(self):
         if self.k is not None and self.k < 1:
@@ -158,6 +172,18 @@ class QueryOptions:
             raise ValueError("tenant must be a non-empty string")
         if self.priority != int(self.priority):
             raise ValueError(f"priority must be an int, got {self.priority}")
+        if self.mode is not None and self.mode not in (
+                "exact", "approx", "auto"):
+            raise ValueError(
+                f"mode must be 'exact', 'approx' or 'auto', got "
+                f"{self.mode!r}")
+        if self.recall_target is not None and not (
+                0.0 < self.recall_target <= 1.0):
+            raise ValueError(
+                f"recall_target must be in (0, 1], got {self.recall_target}")
+        if self.candidates is not None and self.candidates < 1:
+            raise ValueError(
+                f"candidates must be >= 1, got {self.candidates}")
 
 
 @dataclasses.dataclass

@@ -1,9 +1,12 @@
 """Flash storage tier: persistent segment store with in-storage filtering,
 async prefetch, and the query planner + device slab cache
 (DESIGN.md §3–§4)."""
-from repro.storage.filter import (BitmapFilter, BloomFilter, build_filter,
-                                  from_meta)
-from repro.storage.plan import Planner, PlanStep, QueryPlan, execute_plan
+from repro.storage.filter import (BitmapFilter, BloomFilter, QueryProbe,
+                                  build_filter, from_meta)
+from repro.storage.memo import MemoCache, MemoStats, query_fingerprint
+from repro.storage.plan import (MODE_APPROX, MODE_AUTO, MODE_EXACT, MODES,
+                                Planner, PlanStep, QueryPlan, execute_plan)
+from repro.storage.postings import PostingIndex, gather_rows
 from repro.storage.prefetch import Prefetcher
 from repro.storage.segment import Segment, read_footer, write_segment
 from repro.storage.session import FlashSearchSession, SearchStats
@@ -12,8 +15,11 @@ from repro.storage.slabcache import (CacheStats, SlabCache,
 from repro.storage.store import (FlashStore, StoreFormatError, StoreStats)
 
 __all__ = [
-    "BitmapFilter", "BloomFilter", "build_filter", "from_meta",
+    "BitmapFilter", "BloomFilter", "QueryProbe", "build_filter", "from_meta",
+    "MemoCache", "MemoStats", "query_fingerprint",
+    "MODE_APPROX", "MODE_AUTO", "MODE_EXACT", "MODES",
     "Planner", "PlanStep", "QueryPlan", "execute_plan",
+    "PostingIndex", "gather_rows",
     "Prefetcher", "Segment", "read_footer", "write_segment",
     "FlashSearchSession", "SearchStats",
     "CacheStats", "SlabCache", "DEFAULT_CACHE_BYTES",

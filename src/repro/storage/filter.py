@@ -18,6 +18,12 @@ Two summaries, one interface:
 
 Both serialize to ``(meta dict, raw bytes)`` so the segment footer can
 embed them; ``from_meta`` reconstructs either kind.
+
+A planner probing hundreds of segments asks the *same* query against
+every one, so the query-side work — dedup, validation, and above all the
+two splitmix64 mixes behind the Kirsch–Mitzenmacher scheme — is hoisted
+into a per-query ``QueryProbe``: build it once, then each segment verdict
+costs only a table lookup (bitmap) or a modulo + gather (Bloom).
 """
 from __future__ import annotations
 
@@ -44,6 +50,22 @@ def splitmix64(x: np.ndarray) -> np.ndarray:
         x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
         x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     return x ^ (x >> np.uint64(31))
+
+
+class QueryProbe:
+    """Filter-independent probe state for one query: the unique valid
+    word ids plus their Kirsch–Mitzenmacher base hashes. h1/h2 depend
+    only on the ids and the stable splitmix64 constants, never on a
+    particular filter's geometry, so every segment verdict reuses them
+    — only the ``% n_bits`` fold is per-filter."""
+
+    __slots__ = ("ids", "h1", "h2")
+
+    def __init__(self, word_ids):
+        self.ids = _as_word_ids(word_ids)
+        u = self.ids.astype(np.uint64)
+        self.h1 = splitmix64(u)
+        self.h2 = splitmix64(u ^ np.uint64(0xA5A5A5A5A5A5A5A5)) | np.uint64(1)
 
 
 class BitmapFilter:
@@ -74,6 +96,21 @@ class BitmapFilter:
 
     def contains_any(self, word_ids) -> bool:
         return bool(self.contains(word_ids).any())
+
+    def contains_any_probe(self, probe: QueryProbe) -> bool:
+        """Same verdict as ``contains_any(probe source ids)`` with the
+        query-side dedup/validation already paid."""
+        ids = probe.ids
+        if ids.size == 0:
+            return False
+        ok = ids < self.vocab_size
+        safe = np.where(ok, ids, 0)
+        hit = (self.bits[safe >> 3] >> (safe & 7).astype(np.uint8)) & 1
+        return bool((hit.astype(bool) & ok).any())
+
+    def estimated_fpr(self) -> float:
+        """Exact membership — never a false positive."""
+        return 0.0
 
     def to_bytes(self) -> bytes:
         return self.bits.tobytes()
@@ -126,6 +163,33 @@ class BloomFilter:
 
     def contains_any(self, word_ids) -> bool:
         return bool(self.contains(word_ids).any())
+
+    def contains_any_probe(self, probe: QueryProbe) -> bool:
+        """Same verdict as ``contains_any(probe source ids)`` reusing the
+        probe's precomputed h1/h2 — only the ``% n_bits`` fold and the
+        word gather are paid per segment (must stay bit-compatible with
+        ``_bit_positions``)."""
+        if probe.ids.size == 0:
+            return False
+        ks = np.arange(self.n_hashes, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            hh = probe.h1[:, None] + ks[None, :] * probe.h2[:, None]
+        pos = (hh % np.uint64(self.n_bits)).astype(np.int64)
+        hit = (self.words[pos >> 6]
+               >> (pos & 63).astype(np.uint64)) & np.uint64(1)
+        return bool(hit.astype(bool).all(axis=1).any())
+
+    def estimated_fpr(self) -> float:
+        """Estimated false-positive rate from the observed bit load:
+        fpr ~= (set_bits / n_bits) ** n_hashes, the standard Bloom
+        estimate for a membership probe of an absent key."""
+        if self.n_bits == 0:
+            return 1.0
+        set_bits = int(np.unpackbits(
+            self.words.view(np.uint8)).sum())
+        # words may over-allocate past n_bits; those bits are never set
+        load = min(1.0, set_bits / float(self.n_bits))
+        return float(load ** self.n_hashes)
 
     def to_bytes(self) -> bytes:
         return self.words.tobytes()

@@ -38,13 +38,24 @@ import numpy as np
 
 from repro.core import stream_format
 from repro.core.corpus import Corpus
-from repro.core.engine import _merge_results
+from repro.core.engine import _merge_results, _next_pow2
 from repro.obs import NULL_REGISTRY, NULL_SPAN
+from repro.storage import filter as filter_lib
+from repro.storage import postings as postings_lib
 from repro.storage.prefetch import Prefetcher
 from repro.storage.slabcache import SlabCache, slab_key
 
 SOURCE_CACHE = "cache"
 SOURCE_DISK = "disk"
+
+MODE_EXACT = "exact"
+MODE_APPROX = "approx"
+MODE_AUTO = "auto"
+MODES = (MODE_EXACT, MODE_APPROX, MODE_AUTO)
+# "auto" takes the approximate tier only past this many snapshot docs:
+# below it the exhaustive scan is already a handful of slabs and the
+# posting traversal would cost more than it saves
+DEFAULT_APPROX_MIN_DOCS = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +89,15 @@ class QueryPlan:
     memtable_pad: int = 0              # doubling pad target for the tail
     fmt: str = "ell"                   # engine slab layout (§12.2):
                                        # "ell" or "fused:<block_docs>"
+    mode: str = MODE_EXACT             # resolved per query: exact scans
+                                       # every surviving slab; approx
+                                       # takes the posting-candidate +
+                                       # re-rank path per disk segment
+    candidates: int = 0                # top-C pool size per segment row
+                                       # (approx mode only)
+    filtered: bool = False             # vocab-filter pruning ran — the
+                                       # executor may attribute zero-
+                                       # score survivors to filter FPs
 
     def key_for(self, name: str):
         return slab_key(self.cache_token, name, self.nnz_pad,
@@ -101,7 +121,11 @@ class Planner:
     beyond its knobs, so one instance serves every query of a session."""
 
     def __init__(self, *, nnz_pad: int, rows: int, use_filter: bool = True,
-                 cache: Optional[SlabCache] = None, fmt: str = "ell"):
+                 cache: Optional[SlabCache] = None, fmt: str = "ell",
+                 mode: str = MODE_EXACT, candidates: int = 0,
+                 approx_min_docs: int = DEFAULT_APPROX_MIN_DOCS):
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
         self.nnz_pad = nnz_pad
         self.rows = rows                # mesh rows the slab pad aligns to
         self.use_filter = use_filter
@@ -109,15 +133,40 @@ class Planner:
         self.fmt = fmt                  # the engine's slab_fmt: cache
                                         # verdicts must probe the same
                                         # keys the executor will load
+        self.mode = mode                # session default; plan() takes a
+                                        # per-query override
+        self.candidates = candidates    # default top-C pool per segment
+        self.approx_min_docs = approx_min_docs
 
-    def plan(self, view, q_ids: np.ndarray, snap=None) -> QueryPlan:
+    def plan(self, view, q_ids: np.ndarray, snap=None, *,
+             mode: Optional[str] = None,
+             candidates: Optional[int] = None) -> QueryPlan:
         """``snap`` carries the memtable when ``view`` is a live
-        Snapshot (the session passes the same object twice)."""
+        Snapshot (the session passes the same object twice). ``mode`` /
+        ``candidates`` override the session defaults for this query
+        (the QueryOptions knobs); ``auto`` resolves against the view's
+        total doc count here, where the manifest is already in hand."""
         entries = view.entries
         rows = self.rows
         slab_docs = -(-max(view.max_segment_docs, 1) // rows) * rows
         token = view.cache_token
-        q_words = np.unique(q_ids[q_ids >= 0])
+        eff_mode = self.mode if mode is None else mode
+        if eff_mode not in MODES:
+            raise ValueError(
+                f"mode must be one of {MODES}, got {eff_mode!r}")
+        eff_cand = self.candidates if candidates is None else int(candidates)
+        if eff_mode == MODE_AUTO:
+            total_docs = sum(e.n_docs for e in entries)
+            eff_mode = (MODE_APPROX if total_docs >= self.approx_min_docs
+                        else MODE_EXACT)
+        if eff_mode == MODE_APPROX and eff_cand <= 0:
+            raise ValueError("approx mode needs a positive candidate "
+                             "pool size (candidates)")
+        # the query's probe state (dedup + splitmix64 mixes) is computed
+        # ONCE here and reused for every segment verdict below — the
+        # per-segment cost is a bitmap gather or a Bloom modulo only
+        probe = filter_lib.QueryProbe(q_ids) if self.use_filter else None
+        do_filter = probe is not None and probe.ids.size > 0
         cached: List[PlanStep] = []
         disk: List[PlanStep] = []
         skipped: List[str] = []
@@ -127,9 +176,9 @@ class Planner:
         # pipeline defers GC while the snapshot lives)
         rank = 0
         for entry in entries:
-            if self.use_filter and q_words.size:
+            if do_filter:
                 seg = view.segment(entry.name)
-                hit_any = seg.vocab_filter.contains_any(q_words)
+                hit_any = seg.vocab_filter.contains_any_probe(probe)
                 view.release(entry.name)
                 if not hit_any:
                     skipped.append(entry.name)
@@ -157,7 +206,9 @@ class Planner:
                          nnz_pad=self.nnz_pad, cache_token=token,
                          generation=view.generation,
                          memtable=mem_corpus, memtable_trunc=mem_trunc,
-                         memtable_pad=mem_pad, fmt=self.fmt)
+                         memtable_pad=mem_pad, fmt=self.fmt,
+                         mode=eff_mode, candidates=eff_cand,
+                         filtered=do_filter)
 
 
 def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
@@ -208,6 +259,41 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
             stats.cache_misses += 1
         t0 = time.perf_counter() if timed else 0.0
         seg = view.segment(step.name)
+        if plan.mode == MODE_APPROX and seg.postings is not None:
+            # approximate tier (§15): posting traversal picks the top-C
+            # candidate pool, then ONLY those rows are decoded (page-
+            # level partial decode) and re-ranked exactly through the
+            # session backend. The mini-slab is keyed by the query, so
+            # it is never admitted to the slab cache; a pre-postings
+            # segment file (postings is None) falls through to the
+            # exhaustive branch below.
+            pool = seg.postings.candidates(q_ids, q_vals, plan.candidates)
+            doc_ids, ids, vals, norms, n_trunc = postings_lib.gather_rows(
+                seg, pool, plan.nnz_pad)
+            view.release(step.name)
+            t1 = time.perf_counter() if timed else 0.0
+            n_docs = int(doc_ids.size)
+            stats.docs_scored += n_docs
+            stats.pairs_truncated += n_trunc
+            stats.approx_segments += 1
+            stats.candidates += n_docs
+            if n_docs == 0:
+                lspan.end(source=SOURCE_DISK, approx=True, candidates=0)
+                return step, None
+            # pow2 pad capped at the plan shape: candidate pools of any
+            # size compile O(log slab_docs) distinct programs
+            corpus = Corpus(doc_ids, ids, vals, norms).pad_docs_to(
+                min(plan.slab_docs, _next_pow2(n_docs)))
+            slab = engine.put_slab(corpus)
+            t2 = time.perf_counter() if timed else 0.0
+            if timed:
+                h_decode.observe((t1 - t0) * 1e3)
+                h_upload.observe((t2 - t1) * 1e3)
+                lspan.end(source=SOURCE_DISK, approx=True,
+                          candidates=n_docs,
+                          decode_ms=round((t1 - t0) * 1e3, 3),
+                          upload_ms=round((t2 - t1) * 1e3, 3))
+            return step, slab
         if plan.fmt.startswith("fused"):
             # the fused kernel decodes the Fig. 8 words on-device: the
             # segment stream is only *tiled* here (a boundary-index
@@ -279,11 +365,23 @@ def execute_plan(engine, view, plan: QueryPlan, q_ids: np.ndarray,
             sspan.end(source="memtable", docs=stats.memtable_docs)
         if pf is not None:
             for step, slab in pf:
+                if slab is None:        # empty approx candidate pool
+                    continue
                 sspan = span.child("score", segment=step.name,
                                    rank=step.rank)
                 t0 = time.perf_counter() if timed else 0.0
-                folds[step.rank] = engine.search_streaming(
-                    q_ids, q_vals, [slab])
+                r = engine.search_streaming(q_ids, q_vals, [slab])
+                folds[step.rank] = r
+                # a segment the vocab filter let through whose every
+                # real score is exactly 0 had no query-term overlap:
+                # a filter false positive (exact for bitmaps, the
+                # Bloom FPR made flesh) — surfaced per query so the
+                # fleet can see when a filter has gone saturated
+                if plan.filtered:
+                    sc = np.asarray(r.scores)
+                    fin = sc[np.isfinite(sc)]
+                    if fin.size == 0 or not np.any(fin != 0):
+                        stats.filter_fp_segments += 1
                 if timed:
                     h_score.observe((time.perf_counter() - t0) * 1e3)
                 sspan.end()

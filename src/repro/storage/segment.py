@@ -8,6 +8,7 @@ segment's vocabulary filter and a footer index:
     [magic "RSPSEG1\\n"]
     [page 0 | page 1 | ...]          raw uint32 stream, doc-aligned splits
     [filter bytes]                   BitmapFilter / BloomFilter payload
+    [postings bytes]                 PostingIndex payload (approx tier)
     [footer JSON]                    page index + doc-id range + filter meta
     [footer offset u64 LE][magic "RSPSEGF\\n"]
 
@@ -29,6 +30,7 @@ import numpy as np
 
 from repro.core import stream_format
 from repro.storage import filter as filter_lib
+from repro.storage import postings as postings_lib
 
 MAGIC = b"RSPSEG1\n"
 FOOTER_MAGIC = b"RSPSEGF\n"
@@ -80,6 +82,8 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
     filt = filter_lib.build_filter(word_ids, vocab_size=vocab_size,
                                    kind=filter_kind)
     filter_raw = filt.to_bytes()
+    postings = postings_lib.PostingIndex.build(stream)
+    postings_raw = postings.to_bytes()
 
     doc_ids = np.asarray([d for d, _ in docs], np.int64)
     pages = []
@@ -97,6 +101,7 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
         })
 
     filter_off = data_off + 4 * stream.size
+    postings_off = filter_off + len(filter_raw)
     footer = {
         "version": VERSION,
         "n_docs": int(doc_ids.size),
@@ -107,6 +112,8 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
         "pages": pages,
         "filter": {"off": filter_off, "nbytes": len(filter_raw),
                    "meta": filt.meta()},
+        "postings": {"off": postings_off, "nbytes": len(postings_raw),
+                     "meta": postings.meta()},
     }
     footer_raw = json.dumps(footer).encode()
     tmp = path + ".tmp"
@@ -114,6 +121,7 @@ def write_segment(path: str, docs: Sequence[Tuple[int, Sequence[Tuple[int, int]]
         f.write(MAGIC)
         f.write(stream.astype("<u4").tobytes())
         f.write(filter_raw)
+        f.write(postings_raw)
         footer_off = f.tell()
         f.write(footer_raw)
         f.write(struct.pack("<Q", footer_off))
@@ -164,6 +172,7 @@ class Segment:
         if self.footer["version"] != VERSION:
             raise ValueError(f"{path}: unsupported version")
         self._filter = None
+        self._postings = None
 
     # -- metadata ------------------------------------------------------
     @property
@@ -206,6 +215,19 @@ class Segment:
             raw = self._mm[meta["off"]:meta["off"] + meta["nbytes"]]
             self._filter = filter_lib.from_meta(meta["meta"], raw)
         return self._filter
+
+    @property
+    def postings(self):
+        """Lazy posting index, or None for pre-postings segment files
+        (the planner then keeps those segments on the exact path)."""
+        if self._postings is None:
+            meta = self.footer.get("postings")
+            if meta is None:
+                return None
+            raw = self._mm[meta["off"]:meta["off"] + meta["nbytes"]]
+            self._postings = postings_lib.PostingIndex.from_bytes(
+                meta["meta"], raw)
+        return self._postings
 
     def docs(self):
         """Decode back to [(doc_id, [(word, count), ...])] (compaction /

@@ -41,7 +41,9 @@ from repro.obs import NULL_REGISTRY, NULL_SPAN, Obs, default_obs
 from repro.serve.api import (Query, QueryOptions, QueryStats, SearchResponse,
                              coerce_request, truncate_k)
 from repro.serve.session_surface import ServingSessionMixin
-from repro.storage.plan import Planner, execute_plan
+from repro.storage.memo import MemoCache, MemoStats, memo_key
+from repro.storage.plan import (DEFAULT_APPROX_MIN_DOCS, MODE_EXACT,
+                                Planner, execute_plan)
 from repro.storage.slabcache import CacheStats, SlabCache
 from repro.storage.store import FlashStore
 
@@ -58,6 +60,14 @@ class SearchStats:
     cache_hits: int = 0        # slab-cache counters for this query
     cache_misses: int = 0      # (DESIGN.md §4.2); all zero when the
     cache_evictions: int = 0   # cache is disabled
+    filter_fp_segments: int = 0  # scored segments with zero overlap —
+                               # the vocab filter passed them anyway
+                               # (Bloom false positives made visible)
+    approx_segments: int = 0   # segments scored via the posting-
+                               # candidate + exact-re-rank tier (§15)
+    candidates: int = 0        # candidate docs gathered across them
+    memo_hits: int = 0         # 1 when this result came from the
+                               # recurrent-query memo cache
 
     @property
     def skip_rate(self) -> float:
@@ -81,12 +91,26 @@ class FlashSearchSession(ServingSessionMixin):
                  use_filter: bool = True, prefetch_depth: int = 2,
                  slab_cache: Optional[SlabCache] = None,
                  cache_bytes: Optional[int] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 mode: str = MODE_EXACT, candidates: int = 0,
+                 approx_min_docs: int = DEFAULT_APPROX_MIN_DOCS,
+                 memo: Optional[MemoCache] = None, memo_entries: int = 0):
         """``slab_cache`` shares an existing cache (the cluster router
         passes one per-cluster instance); otherwise ``cache_bytes``
         sizes a private one (None = default budget, 0 = disabled).
         ``obs`` shares an observability bundle (DESIGN.md §8); None
-        falls back to the process-wide ``default_obs()``."""
+        falls back to the process-wide ``default_obs()``.
+
+        ``mode`` picks the session-default scoring tier (§15):
+        ``exact`` (the default — every path bit-identical to the
+        pre-approx repo), ``approx`` (posting-candidate + exact
+        re-rank), or ``auto`` (approx once the view holds at least
+        ``approx_min_docs`` docs). ``candidates`` is the default
+        per-segment top-C pool (0 = 4 * cfg.top_k). A per-query
+        ``QueryOptions.mode/candidates/recall_target`` overrides both.
+        ``memo``/``memo_entries`` attach the recurrent-query memo cache
+        (shared instance wins; entries > 0 sizes a private one; the
+        default is off)."""
         self.store = store
         self.cfg = cfg
         self.ctx = ctx or single_device_ctx()
@@ -106,7 +130,12 @@ class FlashSearchSession(ServingSessionMixin):
             store.register_cache(self.slab_cache)
         self._planner = Planner(nnz_pad=cfg.nnz_pad, rows=self.ctx.dp_size,
                                 use_filter=use_filter, cache=self.slab_cache,
-                                fmt=self.engine.slab_fmt)
+                                fmt=self.engine.slab_fmt, mode=mode,
+                                candidates=(candidates if candidates > 0
+                                            else 4 * cfg.top_k),
+                                approx_min_docs=approx_min_docs)
+        self._memo = memo if memo is not None else (
+            MemoCache(memo_entries) if memo_entries > 0 else None)
         self.last_stats = SearchStats()
         self._ingest = None
         # one program shape for every slab: largest segment, mesh-aligned
@@ -189,15 +218,16 @@ class FlashSearchSession(ServingSessionMixin):
             span = trace.root if trace is not None else NULL_SPAN
         else:
             span = _span
+        mode, cand = self._query_knobs(options)
         try:
             if self._ingest is None:
-                res = self._search_view(self.store, None, q_ids, q_vals,
-                                        span)
+                res = self._memo_or_search(self.store, None, q_ids, q_vals,
+                                           span, mode, cand)
             else:
                 snap = self._ingest.capture()
                 try:
-                    res = self._search_view(snap, snap, q_ids, q_vals,
-                                            span)
+                    res = self._memo_or_search(snap, snap, q_ids, q_vals,
+                                               span, mode, cand)
                 finally:
                     snap.close()
         except BaseException:
@@ -222,8 +252,49 @@ class FlashSearchSession(ServingSessionMixin):
             self.obs.publish_search_stats(st, surface="store")
         return res
 
+    def _query_knobs(self, options: Optional[QueryOptions]):
+        """Resolve the per-query (mode, candidates) overrides; None
+        means the session (Planner) default applies. A bare
+        ``recall_target`` maps to a pool multiplier — the closer to
+        1.0, the wider the candidate pool the posting tier keeps."""
+        mode = options.mode if options is not None else None
+        cand = options.candidates if options is not None else None
+        if (cand is None and options is not None
+                and options.recall_target is not None):
+            mult = max(4.0, 2.0 / max(1.0 - options.recall_target, 0.01))
+            cand = int(np.ceil(self.cfg.top_k * mult))
+        return mode, cand
+
+    def _memo_or_search(self, view, snap, q_ids, q_vals, span,
+                        mode, cand) -> SearchResult:
+        """Memo-cache wrapper around ``_search_view`` (§15.3). The key
+        is derived from the *captured* view's memo_state — generation
+        and memtable fingerprint frozen under the snapshot lock — so a
+        concurrent append/seal can never alias a stale entry onto the
+        new view; the bumped state is simply a different key."""
+        memo = self._memo
+        if memo is None:
+            return self._search_view(view, snap, q_ids, q_vals, span,
+                                     mode=mode, candidates=cand)
+        eff_mode = mode if mode is not None else self._planner.mode
+        eff_cand = cand if cand is not None else self._planner.candidates
+        key = memo_key(view.cache_token, view.memo_state,
+                       self.engine.slab_fmt, self.cfg.top_k,
+                       eff_mode, eff_cand, q_ids, q_vals)
+        hit = memo.get(key)
+        if hit is not None:
+            res, st = hit
+            self.last_stats = dataclasses.replace(st, memo_hits=1)
+            span.set(memo_hit=True)
+            return res
+        res = self._search_view(view, snap, q_ids, q_vals, span,
+                                mode=mode, candidates=cand)
+        memo.put(key, (res, dataclasses.replace(self.last_stats)))
+        return res
+
     def _search_view(self, view, snap, q_ids: np.ndarray,
-                     q_vals: np.ndarray, span=NULL_SPAN) -> SearchResult:
+                     q_vals: np.ndarray, span=NULL_SPAN, *,
+                     mode=None, candidates=None) -> SearchResult:
         """Score one segment view (a FlashStore or an ingest Snapshot;
         ``snap`` carries the memtable when the view is a snapshot):
         plan, then run the shared executor (DESIGN.md §4.1)."""
@@ -231,7 +302,8 @@ class FlashSearchSession(ServingSessionMixin):
         timed = not (reg is NULL_REGISTRY and span is NULL_SPAN)
         pspan = span.child("plan")
         t0 = time.perf_counter() if timed else 0.0
-        plan = self._planner.plan(view, q_ids, snap)
+        plan = self._planner.plan(view, q_ids, snap, mode=mode,
+                                  candidates=candidates)
         if timed:
             reg.histogram("stage_ms", stage="plan").observe(
                 (time.perf_counter() - t0) * 1e3)
@@ -271,9 +343,17 @@ class FlashSearchSession(ServingSessionMixin):
         ``obs`` was built with ``trace_sample`` > 0)."""
         return self.obs.tracer.last_trace
 
+    @property
+    def memo_stats(self) -> Optional[MemoStats]:
+        """Lifetime memo-cache counters (None when the memo is off)."""
+        return (self._memo.stats_snapshot()
+                if self._memo is not None else None)
+
     def _close_resources(self):
         # service/submit/close lifecycle comes from ServingSessionMixin,
         # whose close() guarantees this runs at most once
+        if self._memo is not None:
+            self._memo.drop_store(self.store.cache_token)
         if self.slab_cache is not None:
             # drop the store's entries only when the *last* session
             # sharing this (store, cache) pair detaches — another live

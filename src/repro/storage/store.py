@@ -179,6 +179,13 @@ class FlashStore:
         its ``live_generation`` is the store's current one)."""
         return self.generation
 
+    @property
+    def memo_state(self):
+        """Everything beyond the segment files that could change a
+        query's answer on this view — keyed into the memo cache
+        (storage/memo.py). No memtable here, so generation alone."""
+        return (self.generation, None)
+
     def bump_generation(self, removed: Sequence[str] = ()):
         """Record one manifest mutation (append/seal/fold/compact) and
         drop exactly the replaced segment names from every registered

@@ -1,0 +1,300 @@
+"""Approximate candidate tier + exact re-rank (DESIGN.md §15):
+full-pool bit-identity with exhaustive search on every scoring surface,
+exact-by-default on every legacy path, the per-query opt-in knobs, the
+hoisted filter probe, and the filter false-positive accounting."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.cluster import FlashClusterSession, build_sharded_store
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.serve.api import Query, QueryOptions
+from repro.storage import (BitmapFilter, BloomFilter, FlashSearchSession,
+                           FlashStore, QueryProbe)
+from repro.storage.filter import build_filter
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+
+
+def _build_store(root, docs, docs_per_segment=64, filter_kind="auto"):
+    store = FlashStore.create(str(root), vocab_size=CFG.vocab_size,
+                              docs_per_segment=docs_per_segment,
+                              filter_kind=filter_kind)
+    store.append_docs(docs)
+    return store
+
+
+def _queries(corpus, idxs):
+    qs = [corpus_lib.make_query(corpus, i, CFG.max_query_nnz) for i in idxs]
+    return np.stack([q[0] for q in qs]), np.stack([q[1] for q in qs])
+
+
+def _assert_same(r, ref):
+    np.testing.assert_array_equal(np.asarray(r.doc_ids),
+                                  np.asarray(ref.doc_ids))
+    np.testing.assert_array_equal(np.asarray(r.scores),
+                                  np.asarray(ref.scores))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return corpus_lib.synthesize(400, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                 CFG.nnz_pad, seed=23)
+
+
+@pytest.fixture(scope="module")
+def docs(corpus):
+    return _corpus_docs(corpus)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: approx with a full pool == exhaustive exact
+# ---------------------------------------------------------------------------
+def test_approx_full_pool_bit_identical_single_store(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    qi, qv = _queries(corpus, [3, 71, 200])
+    exact = FlashSearchSession(store, CFG, cache_bytes=0)
+    ref = exact.search(Query(qi, qv))
+    # cache disabled so the posting path actually runs (a warm slab is
+    # free exact scoring and wins by design); pool >= any segment size
+    res = exact.search(Query(qi, qv),
+                       options=QueryOptions(mode="approx",
+                                            candidates=len(docs)))
+    assert exact.last_stats.approx_segments > 0
+    assert exact.last_stats.candidates > 0
+    _assert_same(res, ref)
+    exact.close()
+
+
+def test_approx_small_pool_contains_its_own_doc(tmp_path, corpus, docs):
+    # a query built from a document's own words must keep that document
+    # in its top-k through the approximate tier even at a tiny pool
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    for idx in (5, 123, 388):
+        qi, qv = _queries(corpus, [idx])
+        res = sess.search(Query(qi, qv),
+                          options=QueryOptions(mode="approx", candidates=4))
+        assert sess.last_stats.approx_segments > 0
+        assert idx in np.asarray(res.doc_ids)[0]
+    sess.close()
+
+
+def test_approx_full_pool_bit_identical_cluster(tmp_path, corpus, docs):
+    qi, qv = _queries(corpus, [9, 42])
+    union = FlashSearchSession(_build_store(tmp_path / "u", docs), CFG,
+                               cache_bytes=0)
+    ref = union.search(Query(qi, qv))
+    cl = build_sharded_store(str(tmp_path / "c"), docs, n_shards=3,
+                             replicas=1, policy="hash",
+                             vocab_size=CFG.vocab_size, docs_per_segment=32)
+    sess = FlashClusterSession(cl, CFG, cache_bytes=0)
+    res = sess.search(Query(qi, qv),
+                      options=QueryOptions(mode="approx",
+                                           candidates=len(docs)))
+    assert sess.last_stats.approx_segments > 0
+    _assert_same(res, ref)
+    # per-query exact over the same cluster matches too (mode override)
+    res_exact = sess.search(Query(qi, qv),
+                            options=QueryOptions(mode="exact"))
+    _assert_same(res_exact, ref)
+    sess.close()
+    union.close()
+
+
+# ---------------------------------------------------------------------------
+# exact is the default everywhere; approx is opt-in
+# ---------------------------------------------------------------------------
+def test_approx_off_paths_stay_exact_by_default(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    qi, qv = _queries(corpus, [17])
+    sess.search(Query(qi, qv))
+    assert sess.last_stats.approx_segments == 0
+    # bare QueryOptions() must not opt in either
+    sess.search(Query(qi, qv), options=QueryOptions())
+    assert sess.last_stats.approx_segments == 0
+    sess.close()
+
+
+def test_approx_auto_mode_follows_corpus_size(tmp_path, corpus, docs):
+    qi, qv = _queries(corpus, [31])
+    store = _build_store(tmp_path / "s", docs)
+    big = FlashSearchSession(store, CFG, cache_bytes=0, mode="auto",
+                             approx_min_docs=10 ** 9)
+    big.search(Query(qi, qv))
+    assert big.last_stats.approx_segments == 0     # corpus below floor
+    small = FlashSearchSession(store, CFG, cache_bytes=0, mode="auto",
+                               approx_min_docs=1)
+    small.search(Query(qi, qv))
+    assert small.last_stats.approx_segments > 0    # corpus above floor
+    _assert_same(small.search(Query(qi, qv),
+                              options=QueryOptions(mode="exact")),
+                 big.search(Query(qi, qv)))
+    big.close()
+    small.close()
+
+
+def test_approx_recall_target_maps_to_pool_width(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    # closer to 1.0 -> wider pool; explicit candidates wins
+    _, c_low = sess._query_knobs(QueryOptions(recall_target=0.5))
+    _, c_high = sess._query_knobs(QueryOptions(recall_target=0.99))
+    assert c_high > c_low >= 4 * CFG.top_k
+    _, c_exp = sess._query_knobs(QueryOptions(recall_target=0.99,
+                                              candidates=7))
+    assert c_exp == 7
+    mode, cand = sess._query_knobs(None)
+    assert mode is None and cand is None
+    sess.close()
+
+
+def test_approx_mode_validation(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    with pytest.raises(ValueError, match="mode"):
+        FlashSearchSession(store, CFG, mode="fuzzy")
+    with pytest.raises(ValueError, match="mode"):
+        QueryOptions(mode="fuzzy")
+    with pytest.raises(ValueError, match="recall_target"):
+        QueryOptions(recall_target=1.5)
+    with pytest.raises(ValueError, match="candidates"):
+        QueryOptions(candidates=0)
+
+
+# ---------------------------------------------------------------------------
+# legacy positional shim under the mode knob (satellite: migration)
+# ---------------------------------------------------------------------------
+def test_legacy_positional_warns_once_per_call_site(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG)
+    qi, qv = _queries(corpus, [2])
+    # warm the compile path first: jax's first trace may mutate the
+    # warnings filters, which resets the per-call-site dedup registry
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess.search(qi, qv)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")     # per-call-site dedup
+        for _ in range(3):
+            sess.search(qi, qv)              # one call site, three calls
+        deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+                and "positional" in str(w.message)]
+        assert len(deps) == 1
+        sess.search(qi, qv)                  # a second call site
+        deps = [w for w in rec if issubclass(w.category, DeprecationWarning)
+                and "positional" in str(w.message)]
+        assert len(deps) == 2
+    sess.close()
+
+
+def test_legacy_positional_bit_identical_under_mode_knob(tmp_path, corpus,
+                                                         docs):
+    qi, qv = _queries(corpus, [55, 301])
+    store = _build_store(tmp_path / "s", docs)
+    for mode in ("exact", "approx", "auto"):
+        sess = FlashSearchSession(store, CFG, cache_bytes=0, mode=mode,
+                                  candidates=len(docs), approx_min_docs=1)
+        typed = sess.search(Query(qi, qv))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            positional = sess.search(qi, qv)
+        _assert_same(positional, typed)
+        sess.close()
+
+
+def test_legacy_positional_stays_exact_by_default(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    qi, qv = _queries(corpus, [8])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sess.search(qi, qv)
+    assert sess.last_stats.approx_segments == 0
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# hoisted query probe (satellite: one hash pass per query)
+# ---------------------------------------------------------------------------
+def test_approx_probe_matches_contains_any():
+    rng = np.random.default_rng(4)
+    vocab = 4096
+    for trial in range(20):
+        member = rng.choice(vocab, 80, replace=False)
+        for f in (build_filter(member, vocab, kind="bitmap"),
+                  build_filter(member, vocab, kind="bloom")):
+            ids = rng.integers(-1, vocab, size=int(rng.integers(1, 12)))
+            probe = QueryProbe(ids)
+            assert (f.contains_any_probe(probe)
+                    == f.contains_any(ids[ids >= 0]))
+    # empty / all-pad probes never match
+    for f in (build_filter(member, vocab, kind="bitmap"),
+              build_filter(member, vocab, kind="bloom")):
+        assert not f.contains_any_probe(QueryProbe(np.asarray([-1, -1])))
+
+
+def test_approx_probe_hashes_are_reused():
+    probe = QueryProbe(np.asarray([3, 7, 7, -1, 11]))
+    assert probe.ids.size == 3                # deduped, pads dropped
+    assert probe.h1.shape == probe.ids.shape
+    assert np.all(probe.h2 % 2 == 1)          # odd -> full-period stride
+
+
+# ---------------------------------------------------------------------------
+# filter false positives made visible (satellite: fp accounting)
+# ---------------------------------------------------------------------------
+def test_bloom_estimated_fpr_bounds():
+    vocab = 4096
+    rng = np.random.default_rng(6)
+    empty = BloomFilter.build(np.empty(0, np.int64), n_bits=1024, n_hashes=3)
+    assert empty.estimated_fpr() == 0.0
+    sparse = build_filter(rng.choice(vocab, 16, replace=False), vocab,
+                          kind="bloom", n_bits=4096)
+    dense = build_filter(rng.choice(vocab, 2048, replace=False), vocab,
+                         kind="bloom", n_bits=4096)
+    assert 0.0 <= sparse.estimated_fpr() < dense.estimated_fpr() <= 1.0
+    # bitmap filters are exact: fpr identically zero
+    bm = build_filter(np.asarray([1, 2, 3]), vocab, kind="bitmap")
+    assert isinstance(bm, BitmapFilter) and bm.estimated_fpr() == 0.0
+
+
+def test_filter_fp_segments_counts_pass_but_zero(tmp_path, corpus, docs):
+    """Regression for the fp accounting: a segment the Bloom filter
+    passes whose every score is zero is a filter false positive and
+    must be counted in SearchStats.filter_fp_segments."""
+    store = _build_store(tmp_path / "s", docs, filter_kind="bloom")
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    fp_term = None
+    for seg in store.segments():
+        present = {w for _, pairs in seg.docs() for w, _ in pairs}
+        fp_term = next((t for t in range(CFG.vocab_size)
+                        if t not in present
+                        and seg.vocab_filter.contains(
+                            np.asarray([t])).all()), None)
+        if fp_term is not None:
+            break
+    if fp_term is None:
+        pytest.skip("no Bloom false positive in this vocab (fpr too low)")
+    qi = np.full((1, CFG.max_query_nnz), -1, np.int32)
+    qv = np.zeros((1, CFG.max_query_nnz), np.float32)
+    qi[0, 0] = fp_term
+    qv[0, 0] = 1.0
+    sess.search(Query(qi, qv))
+    assert sess.last_stats.filter_fp_segments >= 1
+    sess.close()
+
+
+def test_filter_fp_segments_zero_on_real_matches(tmp_path, corpus, docs):
+    store = _build_store(tmp_path / "s", docs)
+    sess = FlashSearchSession(store, CFG, cache_bytes=0)
+    qi, qv = _queries(corpus, [12])
+    sess.search(Query(qi, qv))
+    # a doc-derived query scores its own segment nonzero; segments that
+    # pass the filter *and* score zero are the only ones counted
+    assert (sess.last_stats.filter_fp_segments
+            < sess.last_stats.segments_scored)
+    sess.close()

@@ -72,6 +72,25 @@ def test_segment_write_is_byte_exact(tmp_path):
     assert got == want, "segment writer drifted from golden bytes"
 
 
+def test_segment_v1_legacy_opens_without_postings():
+    """segment_v1.rsps is the pre-postings golden file (PR 1–9 format,
+    no posting-index block). It must keep opening forever: the reader
+    treats the posting index as optional (``Segment.postings`` is None)
+    and the planner falls back to exact scoring for such segments
+    (DESIGN.md §15.1)."""
+    with segment_lib.Segment(
+            os.path.join(GOLDEN, "segment_v1.rsps")) as seg:
+        assert "postings" not in seg.footer
+        assert seg.postings is None
+        assert seg.n_docs == 5
+        rebuilt = np.concatenate([seg.page_stream(i)
+                                  for i in range(seg.n_pages)])
+        np.testing.assert_array_equal(
+            rebuilt, np.frombuffer(_stream_bytes(), dtype="<u4"))
+        words = np.unique([w for _, ps in _docs() for w, _ in ps])
+        assert seg.vocab_filter.contains(words).all()
+
+
 def test_segment_footer_index_matches_golden():
     with open(os.path.join(GOLDEN, "footer.json")) as f:
         want = json.load(f)

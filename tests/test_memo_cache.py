@@ -1,0 +1,231 @@
+"""Recurrent-query memo cache (DESIGN.md §15.3): fingerprint
+normalization (order/pad-insensitive, collision-free in practice), LRU
+bounds, and — the acceptance bar — the generation-bump differential: a
+memoized result must never be served once the store's view changes."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.paper_search import smoke
+from repro.core import corpus as corpus_lib
+from repro.serve.api import Query, QueryOptions
+from repro.storage import (FlashSearchSession, FlashStore, MemoCache,
+                           query_fingerprint)
+from repro.storage.memo import memo_key
+from repro.storage.store import _corpus_docs
+
+CFG = smoke()
+
+
+def _build(root, docs, docs_per_segment=64):
+    store = FlashStore.create(str(root), vocab_size=CFG.vocab_size,
+                              docs_per_segment=docs_per_segment)
+    store.append_docs(docs)
+    return store
+
+
+def _query(corpus, idx):
+    qi, qv = corpus_lib.make_query(corpus, idx, CFG.max_query_nnz)
+    return qi[None], qv[None]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return corpus_lib.synthesize(300, CFG.vocab_size, CFG.avg_nnz_per_doc,
+                                 CFG.nnz_pad, seed=31)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint normalization
+# ---------------------------------------------------------------------------
+def test_memo_fingerprint_pad_and_order_insensitive():
+    ids = np.asarray([[5, 9, 2, -1]], np.int32)
+    vals = np.asarray([[1.0, 3.0, 2.0, 0.0]], np.float32)
+    # same pairs, different order and wider padding
+    ids2 = np.asarray([[2, -1, 5, -1, 9, -1]], np.int32)
+    vals2 = np.asarray([[2.0, 7.0, 1.0, 0.0, 3.0, 9.9]], np.float32)
+    assert query_fingerprint(ids, vals) == query_fingerprint(ids2, vals2)
+    # a changed value or id must change the digest
+    vals3 = vals.copy()
+    vals3[0, 0] = 1.5
+    assert query_fingerprint(ids, vals) != query_fingerprint(ids, vals3)
+    ids4 = ids.copy()
+    ids4[0, 0] = 6
+    assert query_fingerprint(ids, vals) != query_fingerprint(ids4, vals)
+
+
+def test_memo_fingerprint_row_structure_matters():
+    # the same multiset of pairs split across different rows is a
+    # different batch — digests must differ
+    one = query_fingerprint(np.asarray([[1, 2]]), np.asarray([[1.0, 2.0]]))
+    two = query_fingerprint(np.asarray([[1, -1], [2, -1]]),
+                            np.asarray([[1.0, 0.0], [2.0, 0.0]]))
+    assert one != two
+
+
+@settings(max_examples=30, deadline=None)
+@given(pairs=st.lists(st.tuples(st.integers(0, 63), st.integers(1, 9)),
+                      min_size=1, max_size=8))
+def test_memo_fingerprint_permutation_property(pairs):
+    """Property: any permutation + any pad widening of the same valid
+    pairs fingerprints identically."""
+    pairs = sorted(set(pairs))
+    ids = np.asarray([[w for w, _ in pairs]], np.int32)
+    vals = np.asarray([[float(c) for _, c in pairs]], np.float32)
+    perm = np.random.default_rng(sum(w for w, _ in pairs)).permutation(
+        len(pairs))
+    pad = np.full((1, len(pairs) + 3), -1, np.int32)
+    padv = np.zeros((1, len(pairs) + 3), np.float32)
+    pad[0, :len(pairs)] = ids[0, perm]
+    padv[0, :len(pairs)] = vals[0, perm]
+    assert query_fingerprint(ids, vals) == query_fingerprint(pad, padv)
+
+
+# ---------------------------------------------------------------------------
+# cache mechanics
+# ---------------------------------------------------------------------------
+def test_memo_lru_eviction_and_drop():
+    mc = MemoCache(max_entries=2)
+    q = lambda i: (np.asarray([[i]]), np.asarray([[1.0]]))
+    keys = [memo_key("tokA", (0, None), "ell", 4, "exact", 0, *q(i))
+            for i in range(3)]
+    mc.put(keys[0], "r0")
+    mc.put(keys[1], "r1")
+    assert mc.get(keys[0]) == "r0"        # refresh 0 -> 1 is LRU
+    mc.put(keys[2], "r2")                 # evicts key 1
+    assert mc.get(keys[1]) is None
+    assert mc.get(keys[0]) == "r0" and mc.get(keys[2]) == "r2"
+    st = mc.stats_snapshot()
+    assert st.evictions == 1 and st.entries == 2
+    roomy = MemoCache(max_entries=8)
+    for k in (keys[0], keys[2]):
+        roomy.put(k, "rA")
+    other = memo_key("tokB", (0, None), "ell", 4, "exact", 0, *q(9))
+    roomy.put(other, "rB")
+    assert roomy.drop_store("tokA") == 2  # purges only tokA's entries
+    assert roomy.get(other) == "rB"
+    with pytest.raises(ValueError):
+        MemoCache(max_entries=0)
+
+
+def test_memo_key_separates_scoring_knobs():
+    qi, qv = np.asarray([[3]]), np.asarray([[1.0]])
+    base = memo_key("t", (0, None), "ell", 4, "exact", 0, qi, qv)
+    assert base != memo_key("t", (0, None), "ell", 4, "approx", 16, qi, qv)
+    assert base != memo_key("t", (0, None), "ell", 2, "exact", 0, qi, qv)
+    assert base != memo_key("t", (1, None), "ell", 4, "exact", 0, qi, qv)
+    assert base != memo_key("t", (0, "m1"), "ell", 4, "exact", 0, qi, qv)
+
+
+# ---------------------------------------------------------------------------
+# session integration + the generation-bump differential
+# ---------------------------------------------------------------------------
+def test_memo_hit_repeats_result_bit_identical(tmp_path, corpus):
+    docs = _corpus_docs(corpus)
+    sess = FlashSearchSession(_build(tmp_path / "s", docs), CFG,
+                              memo_entries=32)
+    qi, qv = _query(corpus, 11)
+    first = sess.search(Query(qi, qv))
+    assert sess.last_stats.memo_hits == 0
+    second = sess.search(Query(qi, qv))
+    assert sess.last_stats.memo_hits == 1
+    np.testing.assert_array_equal(first.doc_ids, second.doc_ids)
+    np.testing.assert_array_equal(first.scores, second.scores)
+    # pad-widened encoding of the same logical query also hits
+    wide_i = np.full((1, qi.shape[1] + 4), -1, np.int32)
+    wide_v = np.zeros((1, qi.shape[1] + 4), np.float32)
+    wide_i[0, :qi.shape[1]] = qi[0]
+    wide_v[0, :qi.shape[1]] = qv[0]
+    third = sess.search(Query(wide_i, wide_v))
+    assert sess.last_stats.memo_hits == 1
+    np.testing.assert_array_equal(first.doc_ids, third.doc_ids)
+    ms = sess.memo_stats
+    assert ms.hits == 2 and ms.entries >= 1
+    sess.close()
+
+
+def test_memo_never_serves_across_generation_bump(tmp_path, corpus):
+    """The acceptance differential: memoize a result, change the corpus
+    (generation bump), and the next identical query must re-score and
+    reflect the new documents — and match a memo-less session on the
+    same store, bit for bit."""
+    docs = _corpus_docs(corpus)
+    store = _build(tmp_path / "s", docs)
+    memod = FlashSearchSession(store, CFG, memo_entries=32)
+    plain = FlashSearchSession(store, CFG)
+    qi, qv = _query(corpus, 42)
+    stale = memod.search(Query(qi, qv))
+    memod.search(Query(qi, qv))
+    assert memod.last_stats.memo_hits == 1   # memoized and hot
+    # craft a new doc proportional to the query: by Cauchy-Schwarz the
+    # cosine-style score dot(q, c)/||c|| is maximal exactly for c ∝ q,
+    # so the new doc must enter the fresh top-k
+    pairs = [(int(w), int(v)) for w, v in zip(qi[0], qv[0]) if w >= 0]
+    store.append_docs([(len(docs) + 7, pairs)])
+    fresh = memod.search(Query(qi, qv))
+    assert memod.last_stats.memo_hits == 0   # new generation: no serve
+    ref = plain.search(Query(qi, qv))
+    np.testing.assert_array_equal(fresh.doc_ids, ref.doc_ids)
+    np.testing.assert_array_equal(fresh.scores, ref.scores)
+    assert len(docs) + 7 in np.asarray(fresh.doc_ids)[0]
+    # and the stale answer is provably different from the fresh one
+    assert not np.array_equal(stale.doc_ids, fresh.doc_ids)
+    memod.close()
+    plain.close()
+
+
+def test_memo_generation_property(tmp_path, corpus):
+    """Property form: across an append/search interleaving, a memoized
+    result is only ever served when the store generation is unchanged
+    since it was stored."""
+    docs = _corpus_docs(corpus)
+    store = _build(tmp_path / "p", docs)
+    sess = FlashSearchSession(store, CFG, memo_entries=32)
+    rng = np.random.default_rng(77)
+    gen_at_store = {}
+    next_id = len(docs)
+    for step in range(30):
+        idx = int(rng.integers(0, 50))
+        qi, qv = _query(corpus, idx)
+        if rng.random() < 0.3:
+            pairs = [(int(w), int(rng.integers(1, 9)))
+                     for w in qi[0][:4] if w >= 0]
+            store.append_docs([(next_id, pairs)])
+            next_id += 1
+        sess.search(Query(qi, qv))
+        hit = sess.last_stats.memo_hits == 1
+        key = (idx, store.generation)
+        assert hit == (key in gen_at_store), (
+            f"step {step}: memo hit across a generation boundary")
+        gen_at_store[key] = True
+    sess.close()
+
+
+def test_memo_default_off(tmp_path, corpus):
+    docs = _corpus_docs(corpus)
+    sess = FlashSearchSession(_build(tmp_path / "s", docs), CFG)
+    assert sess.memo_stats is None
+    qi, qv = _query(corpus, 3)
+    sess.search(Query(qi, qv))
+    sess.search(Query(qi, qv))
+    assert sess.last_stats.memo_hits == 0
+    sess.close()
+
+
+def test_memo_distinct_modes_do_not_alias(tmp_path, corpus):
+    docs = _corpus_docs(corpus)
+    sess = FlashSearchSession(_build(tmp_path / "s", docs), CFG,
+                              cache_bytes=0, memo_entries=32)
+    qi, qv = _query(corpus, 25)
+    sess.search(Query(qi, qv))
+    # same query under approx scoring must not reuse the exact memo
+    sess.search(Query(qi, qv), options=QueryOptions(mode="approx",
+                                                    candidates=8))
+    assert sess.last_stats.memo_hits == 0
+    sess.search(Query(qi, qv), options=QueryOptions(mode="approx",
+                                                    candidates=8))
+    assert sess.last_stats.memo_hits == 1
+    sess.close()

@@ -1,0 +1,215 @@
+"""Per-segment inverted posting index (DESIGN.md §15.1): build
+invariants, byte-exact (de)serialization, accumulator correctness vs a
+brute-force reference, and the gather's bit-identity with full-stream
+decoding — the property the exact re-rank stage inherits exactness
+from."""
+import numpy as np
+import pytest
+
+from repro.core import stream_format as sf
+from repro.storage import segment as segment_lib
+from repro.storage.postings import (MAX_SEGMENT_DOCS, PostingIndex,
+                                    gather_rows)
+
+VOCAB = 8192
+NNZ_PAD = 16
+
+
+def _docs(n_docs, rng, max_nnz=40, vocab=VOCAB):
+    """Doc list with the format's corners mixed in: empty docs, dense
+    docs longer than NNZ_PAD (truncation), tiny docs."""
+    docs = []
+    for i in range(n_docs):
+        nw = int(rng.integers(0, max_nnz))
+        ws = rng.choice(vocab, nw, replace=False)
+        docs.append((i, sorted((int(w), int(rng.integers(1, 60)))
+                               for w in ws)))
+    return docs
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(5)
+    docs = _docs(150, rng)
+    stream = sf.encode(docs)
+    return docs, stream, PostingIndex.build(stream)
+
+
+# ---------------------------------------------------------------------------
+# build invariants
+# ---------------------------------------------------------------------------
+def test_postings_build_invariants(built):
+    docs, stream, idx = built
+    assert idx.n_docs == len(docs)
+    # terms sorted unique; CSR offsets monotone, covering all postings
+    assert np.all(np.diff(idx.term_ids.astype(np.int64)) > 0)
+    assert idx.offsets[0] == 0 and idx.offsets[-1] == idx.n_postings
+    assert np.all(np.diff(idx.offsets.astype(np.int64)) >= 0)
+    # one posting per (doc, word) pair of the stream
+    assert idx.n_postings == sum(len(ps) for _, ps in docs)
+    # postings within a term list are doc-ascending (stable build sort)
+    for t in range(idx.n_terms):
+        d = (idx.postings[idx.offsets[t]:idx.offsets[t + 1]] >> 12)
+        assert np.all(np.diff(d.astype(np.int64)) >= 0)
+
+
+def test_postings_norms_are_full_doc_l2(built):
+    docs, _, idx = built
+    for off, (_, pairs) in enumerate(docs):
+        want = np.sqrt(np.float64(sum(c * c for _, c in pairs)))
+        np.testing.assert_allclose(idx.norms[off], np.float32(want),
+                                   rtol=1e-6)
+
+
+def test_postings_doc_starts_directory(built):
+    docs, stream, idx = built
+    hdr = np.flatnonzero((stream & sf.HEADER_BIT) != 0)
+    np.testing.assert_array_equal(
+        idx.doc_starts, np.append(hdr, stream.size).astype(np.uint32))
+
+
+def test_postings_empty_stream():
+    idx = PostingIndex.build(np.empty(0, np.uint32))
+    assert idx.n_docs == 0 and idx.n_postings == 0
+    assert idx.candidates(np.asarray([[3]]), np.asarray([[1.0]]),
+                          8).size == 0
+
+
+def test_postings_doc_offset_capacity():
+    # offsets pack into 20 bits; the builder must refuse beyond that
+    assert MAX_SEGMENT_DOCS == 1 << 20
+    idx = PostingIndex.build(sf.encode([(7, [(3, 2)])]))
+    assert idx.n_docs == 1 and idx.n_postings == 1
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization
+# ---------------------------------------------------------------------------
+def test_postings_roundtrip_is_exact(built):
+    _, _, idx = built
+    raw = idx.to_bytes()
+    assert len(raw) == idx.nbytes
+    idx2 = PostingIndex.from_bytes(idx.meta(), raw)
+    np.testing.assert_array_equal(idx.term_ids, idx2.term_ids)
+    np.testing.assert_array_equal(idx.offsets, idx2.offsets)
+    np.testing.assert_array_equal(idx.postings, idx2.postings)
+    np.testing.assert_array_equal(idx.norms, idx2.norms)
+    np.testing.assert_array_equal(idx.doc_starts, idx2.doc_starts)
+    assert idx2.to_bytes() == raw
+
+
+def test_postings_rejects_unknown_kind(built):
+    _, _, idx = built
+    with pytest.raises(ValueError, match="unknown postings kind"):
+        PostingIndex.from_bytes({"kind": "postings0"}, idx.to_bytes())
+
+
+def test_segment_persists_postings(tmp_path, built):
+    docs, _, idx = built
+    path = str(tmp_path / "seg.rsps")
+    segment_lib.write_segment(path, docs, page_items=512,
+                              vocab_size=VOCAB, filter_kind="bloom")
+    with segment_lib.Segment(path) as seg:
+        assert seg.footer["postings"]["meta"]["kind"] == "postings1"
+        np.testing.assert_array_equal(seg.postings.postings, idx.postings)
+        np.testing.assert_array_equal(seg.postings.norms, idx.norms)
+        assert seg.postings is seg.postings      # lazy, cached
+
+
+# ---------------------------------------------------------------------------
+# accumulator
+# ---------------------------------------------------------------------------
+def _brute_scores(docs, q_ids, q_vals):
+    """Reference accumulator: sum(q_val * count) / full-doc norm."""
+    scores = np.zeros((q_ids.shape[0], len(docs)), np.float32)
+    for off, (_, pairs) in enumerate(docs):
+        cnt = dict(pairs)
+        norm = np.sqrt(np.float64(sum(c * c for _, c in pairs))) or 1e-12
+        for r in range(q_ids.shape[0]):
+            dot = sum(float(v) * cnt.get(int(w), 0)
+                      for w, v in zip(q_ids[r], q_vals[r]) if w >= 0)
+            scores[r, off] = dot / norm
+    return scores
+
+
+def test_candidates_match_brute_force_ranking(built):
+    docs, _, idx = built
+    rng = np.random.default_rng(9)
+    q_ids = np.full((3, 8), -1, np.int32)
+    q_vals = np.zeros((3, 8), np.float32)
+    for r in range(3):
+        src = docs[int(rng.integers(len(docs)))][1]
+        for j, (w, c) in enumerate(src[:8]):
+            q_ids[r, j] = w
+            q_vals[r, j] = c
+    ref = _brute_scores(docs, q_ids, q_vals)
+    for n_cand in (1, 5, 20):
+        pool = idx.candidates(q_ids, q_vals, n_cand)
+        # sorted ascending doc offsets (tie-break preservation contract)
+        assert np.all(np.diff(pool) > 0)
+        # the pool covers every row's true top-n_cand by score: no doc
+        # outside the pool may out-score a row's n_cand-th best inside
+        for r in range(3):
+            in_pool = np.sort(ref[r, pool])[::-1]
+            kth = in_pool[min(n_cand, in_pool.size) - 1]
+            outside = np.delete(ref[r], pool)
+            if outside.size:
+                assert outside.max() <= kth + 1e-6
+
+
+def test_candidates_full_pool_is_every_doc(built):
+    docs, _, idx = built
+    q = np.asarray([[docs[3][1][0][0]]], np.int32)
+    v = np.ones((1, 1), np.float32)
+    np.testing.assert_array_equal(
+        idx.candidates(q, v, len(docs)), np.arange(len(docs)))
+    np.testing.assert_array_equal(
+        idx.candidates(q, v, 10 * len(docs)), np.arange(len(docs)))
+
+
+def test_candidates_zero_score_docs_are_eligible(built):
+    # a query matching nothing still returns a pool: the exact path
+    # ranks 0-score docs above -inf filler, so dropping them would
+    # break full-pool bit-identity (DESIGN.md §15.2)
+    docs, _, idx = built
+    q = np.asarray([[VOCAB - 1]], np.int32)   # likely-unmatched term
+    v = np.ones((1, 1), np.float32)
+    pool = idx.candidates(q, v, 7)
+    assert pool.size == 7
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+def test_gather_rows_bit_identical_to_full_decode(tmp_path, built):
+    docs, stream, _ = built
+    path = str(tmp_path / "seg.rsps")
+    segment_lib.write_segment(path, docs, page_items=512,
+                              vocab_size=VOCAB, filter_kind="bloom")
+    full = sf.decode_to_ell(stream, NNZ_PAD)
+    rng = np.random.default_rng(2)
+    with segment_lib.Segment(path) as seg:
+        for size in (1, 17, 64, len(docs)):
+            sel = np.sort(rng.choice(len(docs), size,
+                                     replace=False)).astype(np.int64)
+            ids, ell_i, ell_v, norms, n_tr = gather_rows(seg, sel, NNZ_PAD)
+            np.testing.assert_array_equal(ids, full[0][sel])
+            np.testing.assert_array_equal(ell_i, full[1][sel])
+            np.testing.assert_array_equal(ell_v, full[2][sel])
+            np.testing.assert_array_equal(norms, full[3][sel])
+            # truncation attributed to selected rows only
+            hdr = np.flatnonzero((stream & sf.HEADER_BIT) != 0)
+            lens = np.diff(np.append(hdr, stream.size)) - 1
+            assert n_tr == int(np.maximum(lens[sel] - NNZ_PAD, 0).sum())
+
+
+def test_gather_rows_empty_selection(tmp_path, built):
+    docs, _, _ = built
+    path = str(tmp_path / "seg.rsps")
+    segment_lib.write_segment(path, docs, page_items=512,
+                              vocab_size=VOCAB, filter_kind="bloom")
+    with segment_lib.Segment(path) as seg:
+        ids, ell_i, ell_v, norms, n_tr = gather_rows(
+            seg, np.empty(0, np.int64), NNZ_PAD)
+        assert ids.size == 0 and n_tr == 0
+        assert ell_i.shape == (0, NNZ_PAD)
